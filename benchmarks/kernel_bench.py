@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: wall time of the jnp oracle on CPU (the Pallas
+kernels run in interpret mode here — their timing is only meaningful on a
+real TPU), plus derived arithmetic-intensity numbers used by §Roofline."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+Row = Tuple[str, float, str]
+
+
+def _time_fn(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def bench_kernels() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+
+    # fedavg_reduce: 8 clients x 4M params
+    x = jnp.asarray(rng.standard_normal((8, 4_000_000)).astype(np.float32))
+    w = jnp.ones((8,))
+    f = jax.jit(ref.fedavg_reduce_ref)
+    us = _time_fn(f, x, w)
+    bytes_moved = x.nbytes + x.shape[1] * 4
+    ai = (2 * x.size) / bytes_moved
+    rows.append(("kernel_fedavg_reduce_8x4M", us, f"arith_intensity={ai:.3f}"))
+    print(f"[kernels] fedavg_reduce: {us:.0f} us/call, AI={ai:.3f} flop/byte "
+          f"(memory-bound reduce)", file=sys.stderr)
+
+    # flash attention oracle: 1k seq
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 1024, 8, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1024, 8, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time_fn(f, q, k, v)
+    flops = 4 * 1024 * 1024 * 8 * 64  # qk + pv
+    rows.append(("kernel_flash_attention_1k", us, f"gflops={flops/1e9:.2f}"))
+    print(f"[kernels] flash_attention 1k: {us:.0f} us/call", file=sys.stderr)
+
+    # ssd scan oracle
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    B, L, H, P, N = 2, 512, 8, 64, 64
+    xs = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    f = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=128))
+    us = _time_fn(f, xs, dt, A, Bm, Cm)
+    rows.append(("kernel_ssd_scan_512", us, f"chunk=128"))
+    print(f"[kernels] ssd_scan 512: {us:.0f} us/call", file=sys.stderr)
+    return rows

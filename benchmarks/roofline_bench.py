@@ -1,0 +1,50 @@
+"""§Roofline table: read the dry-run sweep results (results/*.jsonl) and
+emit one row per (arch x shape x mesh) with the three roofline terms."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+RESULT_FILES = (
+    "results/dryrun_single_pod.jsonl",
+    "results/dryrun_multi_pod.jsonl",
+)
+
+
+def bench_roofline_table() -> List[Row]:
+    rows: List[Row] = []
+    found = False
+    for path in RESULT_FILES:
+        if not os.path.exists(path):
+            continue
+        found = True
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+                dominant = r["dominant"]
+                derived = (
+                    f"compute_ms={r['compute_s']*1e3:.2f};"
+                    f"memory_ms={r['memory_s']*1e3:.2f};"
+                    f"collective_ms={r['collective_s']*1e3:.2f};"
+                    f"dominant={dominant};"
+                    f"fits={r.get('fits')}"
+                )
+                rows.append((name, float(r.get("compile_s", 0)) * 1e6, derived))
+                print(
+                    f"[roofline] {r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                    f"c={r['compute_s']*1e3:8.2f}ms m={r['memory_s']*1e3:8.2f}ms "
+                    f"coll={r['collective_s']*1e3:8.2f}ms -> {dominant:10s} "
+                    f"useful={100*(r.get('useful_ratio') or 0):.0f}% "
+                    f"peak={r.get('peak_memory_per_chip', 0)/1e9:.1f}GB",
+                    file=sys.stderr,
+                )
+    if not found:
+        print("[roofline] no dry-run results found — run "
+              "`python -m repro.launch.dryrun --all --json results/dryrun_single_pod.jsonl`",
+              file=sys.stderr)
+    return rows

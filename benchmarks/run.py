@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure (+ kernels and
+the roofline table). Prints ``name,us_per_call,derived`` CSV on stdout;
+human-readable reports go to stderr."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from .kernel_bench import bench_kernels
+    from .paper_tables import (
+        bench_checkpoint_overhead,
+        bench_failure_benchmarks,
+        bench_failure_til,
+        bench_initial_mapping,
+        bench_poc_aws_gcp,
+        bench_pre_scheduling,
+    )
+    from .roofline_bench import bench_roofline_table
+
+    benches = [
+        bench_pre_scheduling,       # Tables 3, 4
+        bench_initial_mapping,      # §5.4
+        bench_checkpoint_overhead,  # §5.5 / Fig. 2
+        bench_failure_til,          # Tables 5, 6
+        bench_failure_benchmarks,   # Tables 7, 8
+        bench_poc_aws_gcp,          # §5.7
+        bench_kernels,              # Pallas kernel hot spots
+        bench_roofline_table,       # §Roofline (from dry-run artifacts)
+    ]
+    print("name,us_per_call,derived")
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            print(f"{bench.__name__},0,ERROR:{e!r}")
+            print(f"[ERROR] {bench.__name__}: {e!r}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+dry-run JSONL artifacts."""
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                rows.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    return rows
+
+
+def fmt_table(rows):
+    out = []
+    out.append(
+        "| arch | shape | mesh | params (act.) | peak/chip | fits | HLO FLOPs/chip | HLO bytes/chip | coll bytes/chip | compute | memory | collective | bound | useful |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        out.append(
+            "| {arch} | {shape} | {mesh} | {p:.2f}B ({a:.2f}B) | {peak:.1f} GB | {fits} | "
+            "{fl:.2e} | {by:.2e} | {cb:.2e} | {c:.1f} ms | {m:.1f} ms | {co:.1f} ms | {dom} | {u} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                p=r["n_params"] / 1e9, a=r["n_params_active"] / 1e9,
+                peak=r["peak_memory_per_chip"] / 1e9,
+                fits="yes" if r.get("fits") else "OVER",
+                fl=r["hlo_flops"], by=r["hlo_bytes"], cb=r["collective_bytes"],
+                c=r["compute_s"] * 1e3, m=r["memory_s"] * 1e3, co=r["collective_s"] * 1e3,
+                dom=r["dominant"],
+                u=(f"{100*r['useful_ratio']:.0f}%" if r.get("useful_ratio") else "—"),
+            )
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for path in sys.argv[1:]:
+        rows = sorted(load(path), key=lambda r: (r["arch"], r["shape"]))
+        print(f"\n### {path} ({len(rows)} rows)\n")
+        print(fmt_table(rows))

@@ -1,0 +1,17 @@
+from .manager import (
+    CheckpointInfo,
+    ClientCheckpointManager,
+    ServerCheckpointManager,
+    resolve_freshest,
+)
+from .serializer import deserialize_pytree, pytree_num_bytes, serialize_pytree
+
+__all__ = [
+    "CheckpointInfo",
+    "ClientCheckpointManager",
+    "ServerCheckpointManager",
+    "deserialize_pytree",
+    "pytree_num_bytes",
+    "resolve_freshest",
+    "serialize_pytree",
+]

@@ -1,0 +1,184 @@
+"""Checkpoint manager implementing the paper's §4.3 semantics on real
+directories:
+
+  * server side — checkpoint every X rounds to "local disk" (the VM), then
+    asynchronously copy to "stable storage" (another location: a storage
+    service or an extra VM). The copy is a background thread; a checkpoint
+    is only *durable* (restorable after the server VM dies) once the copy
+    finishes.
+  * client side — the aggregated weights received each round are written to
+    the client VM's local disk only.
+  * restore — freshest-wins: compare the newest durable server checkpoint's
+    round with the newest client round; server reads its own if newer,
+    otherwise waits for a client to upload (paper: "the FL server ... waits
+    for any client to send its weights").
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from .serializer import deserialize_pytree, serialize_pytree
+
+_CKPT_RE = re.compile(r"^round_(\d+)\.ckpt$")
+
+
+@dataclasses.dataclass
+class CheckpointInfo:
+    round_idx: int
+    path: str
+    durable: bool  # True once it lives in stable storage
+
+
+class ServerCheckpointManager:
+    """Server-side checkpointing with async off-VM transfer."""
+
+    def __init__(
+        self,
+        local_dir: str,
+        remote_dir: str,
+        interval_rounds: int = 10,
+        keep_last: int = 3,
+    ) -> None:
+        self.local_dir = local_dir
+        self.remote_dir = remote_dir
+        self.interval_rounds = interval_rounds
+        self.keep_last = keep_last
+        os.makedirs(local_dir, exist_ok=True)
+        os.makedirs(remote_dir, exist_ok=True)
+        self._pending: List[threading.Thread] = []
+
+    def should_checkpoint(self, round_idx: int) -> bool:
+        return self.interval_rounds > 0 and round_idx % self.interval_rounds == 0
+
+    def save(self, round_idx: int, state: Any, blocking_transfer: bool = False) -> str:
+        """Synchronous local write, asynchronous remote copy."""
+        blob = serialize_pytree(state)
+        fname = f"round_{round_idx}.ckpt"
+        local_path = os.path.join(self.local_dir, fname)
+        tmp = local_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, local_path)
+
+        def _transfer():
+            remote_tmp = os.path.join(self.remote_dir, fname + ".tmp")
+            shutil.copyfile(local_path, remote_tmp)
+            os.replace(remote_tmp, os.path.join(self.remote_dir, fname))
+
+        if blocking_transfer:
+            _transfer()
+        else:
+            t = threading.Thread(target=_transfer, daemon=True)
+            t.start()
+            self._pending.append(t)
+        self._gc(self.local_dir)
+        return local_path
+
+    def wait_for_transfers(self, timeout: Optional[float] = None) -> None:
+        for t in self._pending:
+            t.join(timeout)
+        self._pending = [t for t in self._pending if t.is_alive()]
+
+    def latest_durable(self) -> Optional[CheckpointInfo]:
+        return _latest_in(self.remote_dir, durable=True)
+
+    def latest_local(self) -> Optional[CheckpointInfo]:
+        return _latest_in(self.local_dir, durable=False)
+
+    def restore(self, like: Any, info: Optional[CheckpointInfo] = None) -> Tuple[int, Any]:
+        ck = info or self.latest_durable()
+        if ck is None:
+            raise FileNotFoundError("no durable server checkpoint")
+        with open(ck.path, "rb") as f:
+            blob = f.read()
+        return ck.round_idx, deserialize_pytree(blob, like)
+
+    def _gc(self, d: str) -> None:
+        cks = sorted(_list_ckpts(d), key=lambda c: c.round_idx)
+        for c in cks[: -self.keep_last]:
+            try:
+                os.remove(c.path)
+            except OSError:
+                pass
+
+
+class ClientCheckpointManager:
+    """Client-side: store every round's aggregated weights on local disk."""
+
+    def __init__(self, local_dir: str, keep_last: int = 2) -> None:
+        self.local_dir = local_dir
+        self.keep_last = keep_last
+        os.makedirs(local_dir, exist_ok=True)
+
+    def save(self, round_idx: int, weights: Any) -> str:
+        blob = serialize_pytree(weights)
+        path = os.path.join(self.local_dir, f"round_{round_idx}.ckpt")
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+        cks = sorted(_list_ckpts(self.local_dir), key=lambda c: c.round_idx)
+        for c in cks[: -self.keep_last]:
+            try:
+                os.remove(c.path)
+            except OSError:
+                pass
+        return path
+
+    def latest(self) -> Optional[CheckpointInfo]:
+        return _latest_in(self.local_dir, durable=False)
+
+    def restore(self, like: Any) -> Tuple[int, Any]:
+        ck = self.latest()
+        if ck is None:
+            raise FileNotFoundError("no client checkpoint")
+        with open(ck.path, "rb") as f:
+            blob = f.read()
+        return ck.round_idx, deserialize_pytree(blob, like)
+
+
+def resolve_freshest(
+    server: ServerCheckpointManager,
+    clients: Dict[str, ClientCheckpointManager],
+    exclude_client: Optional[str] = None,
+) -> Tuple[str, Optional[CheckpointInfo]]:
+    """Paper §4.3 restore rule. Returns ("server"|"client:<id>"|"none", info)."""
+    s = server.latest_durable()
+    best_cid, best_c = None, None
+    for cid, mgr in clients.items():
+        if cid == exclude_client:
+            continue
+        c = mgr.latest()
+        if c is not None and (best_c is None or c.round_idx > best_c.round_idx):
+            best_cid, best_c = cid, c
+    if s is not None and (best_c is None or s.round_idx >= best_c.round_idx):
+        return "server", s
+    if best_c is not None:
+        return f"client:{best_cid}", best_c
+    return "none", None
+
+
+def _list_ckpts(d: str) -> List[CheckpointInfo]:
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for fname in os.listdir(d):
+        m = _CKPT_RE.match(fname)
+        if m:
+            out.append(CheckpointInfo(int(m.group(1)), os.path.join(d, fname), False))
+    return out
+
+
+def _latest_in(d: str, durable: bool) -> Optional[CheckpointInfo]:
+    cks = _list_ckpts(d)
+    if not cks:
+        return None
+    best = max(cks, key=lambda c: c.round_idx)
+    best.durable = durable
+    return best

@@ -1,0 +1,91 @@
+"""Pytree <-> bytes serialization (msgpack framing + raw numpy buffers).
+
+No external checkpoint libs: arrays are flattened to (dtype, shape, bytes)
+triples keyed by their tree path, so checkpoints are portable across
+processes and restartable onto different meshes (the loader re-shards).
+"""
+from __future__ import annotations
+
+import io
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import msgpack
+import numpy as np
+
+# numpy can't construct extension dtypes from their .str; map them by name.
+_EXTENSION_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+    "float8_e5m2": ml_dtypes.float8_e5m2,
+}
+
+
+def _dtype_name(dtype: np.dtype) -> str:
+    return dtype.name
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    if name in _EXTENSION_DTYPES:
+        return np.dtype(_EXTENSION_DTYPES[name])
+    return np.dtype(name)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def serialize_pytree(tree: Any) -> bytes:
+    """Pack a pytree of arrays into one self-describing byte blob."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    entries = []
+    for path, leaf in leaves_with_paths:
+        arr = np.asarray(leaf)
+        entries.append(
+            {
+                "path": _path_str(path),
+                "dtype": _dtype_name(arr.dtype),
+                "shape": list(arr.shape),
+                "data": arr.tobytes(),
+            }
+        )
+    return msgpack.packb({"version": 1, "entries": entries}, use_bin_type=True)
+
+
+def deserialize_pytree(blob: bytes, like: Any) -> Any:
+    """Restore into the structure of `like` (paths must match)."""
+    payload = msgpack.unpackb(blob, raw=False)
+    by_path: Dict[str, np.ndarray] = {}
+    for e in payload["entries"]:
+        arr = np.frombuffer(e["data"], dtype=_dtype_from_name(e["dtype"])).reshape(e["shape"])
+        by_path[e["path"]] = arr
+
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_with_paths:
+        key = _path_str(path)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = by_path[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key!r}: checkpoint {arr.shape} vs model {np.shape(leaf)}"
+            )
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def pytree_num_bytes(tree: Any) -> int:
+    return sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree))

@@ -1,0 +1,92 @@
+"""Multi-FedLS core: the paper's resource-management contribution.
+
+Modules map 1:1 to the paper's architecture (Fig. 1):
+  - cloud_model / application_model : §3 environment & application models
+  - pre_scheduling                  : §4.1 slowdown metrics
+  - cost_model + initial_mapping    : §4.2 MILP placement
+  - fault_tolerance                 : §4.3 checkpoint & monitoring
+  - dynamic_scheduler               : §4.4 Algorithms 1-3
+  - revocation + simulator          : §5 experiment engine
+"""
+from .application_model import (
+    ClientSpec,
+    FLApplication,
+    MessageSizes,
+    femnist_application,
+    shakespeare_application,
+    til_application,
+    til_application_aws,
+)
+from .cloud_model import (
+    CloudEnvironment,
+    Provider,
+    Region,
+    VMType,
+    aws_gcp_environment,
+    cloudlab_environment,
+)
+from .cost_model import SERVER, Assignment, CostModel, Placement, PlacementEvaluation
+from .dynamic_scheduler import DynamicScheduler, ReplacementDecision
+from .fault_tolerance import CheckpointPolicy, CheckpointRecord, FaultToleranceModule, RecoveryPlan
+from .initial_mapping import InfeasibleMappingError, InitialMapping, MappingSolution
+from .pre_scheduling import (
+    CallableProbe,
+    ExecutionProbe,
+    PreScheduling,
+    PreSchedulingResult,
+    ProbeResult,
+    TableProbe,
+    expected_comm_time,
+    expected_exec_time,
+)
+from .revocation import RevocationModel, RevocationSampler
+from .simulator import (
+    MultiCloudSimulator,
+    RevocationEvent,
+    SimulationConfig,
+    SimulationResult,
+)
+
+__all__ = [
+    "SERVER",
+    "Assignment",
+    "CallableProbe",
+    "CheckpointPolicy",
+    "CheckpointRecord",
+    "ClientSpec",
+    "CloudEnvironment",
+    "CostModel",
+    "DynamicScheduler",
+    "ExecutionProbe",
+    "FLApplication",
+    "FaultToleranceModule",
+    "InfeasibleMappingError",
+    "InitialMapping",
+    "MappingSolution",
+    "MessageSizes",
+    "MultiCloudSimulator",
+    "Placement",
+    "PlacementEvaluation",
+    "PreScheduling",
+    "PreSchedulingResult",
+    "ProbeResult",
+    "Provider",
+    "RecoveryPlan",
+    "Region",
+    "ReplacementDecision",
+    "RevocationEvent",
+    "RevocationModel",
+    "RevocationSampler",
+    "SimulationConfig",
+    "SimulationResult",
+    "TableProbe",
+    "VMType",
+    "aws_gcp_environment",
+    "cloudlab_environment",
+    "expected_comm_time",
+    "expected_exec_time",
+    "femnist_application",
+    "shakespeare_application",
+    "til_application",
+    "til_application_aws",
+]

@@ -1,0 +1,187 @@
+"""Makespan / financial-cost model shared by the Initial Mapping MILP and
+the Dynamic Scheduler (paper Eqs. 1-7 and Algorithms 1-2).
+
+A *placement* maps each task (server "s" or client id) to a (vm_id, market)
+pair, where market is "on_demand" or "spot".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+from .application_model import FLApplication
+from .cloud_model import CloudEnvironment, VMType
+
+SERVER = "s"
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """One task's placement."""
+
+    vm_id: str
+    market: str = "on_demand"  # "on_demand" | "spot"
+
+
+Placement = Dict[str, Assignment]  # task id ("s" or client id) -> Assignment
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementEvaluation:
+    makespan_s: float          # t_m
+    vm_costs: float            # Eq. 4
+    comm_costs: float          # Eq. 5
+    total_costs: float         # vm_costs + comm_costs
+    objective: float           # Eq. 3, normalized
+
+
+class CostModel:
+    """Evaluates placements for one FL application on one environment."""
+
+    def __init__(
+        self,
+        env: CloudEnvironment,
+        app: FLApplication,
+        alpha: float = 0.5,
+    ) -> None:
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError("alpha must be in [0, 1]")
+        self.env = env
+        self.app = app
+        self.alpha = alpha
+        self._t_max: Optional[float] = None
+        self._cost_max: Optional[float] = None
+
+    # -- primitive terms ----------------------------------------------------
+    def t_exec(self, client_id: str, vm_id: str) -> float:
+        """Eq. 2: client exec time (train + test) on vm."""
+        c = self.app.client(client_id)
+        return (c.train_bl + c.test_bl) * self.env.inst_slowdown(vm_id)
+
+    def t_comm(self, region_a: str, region_b: str) -> float:
+        """Eq. 1: round-trip message time between two regions."""
+        sl = self.env.comm_slowdown(region_a, region_b)
+        return (self.app.train_comm_bl + self.app.test_comm_bl) * sl
+
+    def t_aggreg(self, vm_id: str) -> float:
+        """Server aggregation time on vm (scaled like any execution)."""
+        return self.app.aggreg_bl * self.env.inst_slowdown(vm_id)
+
+    def comm_cost(self, client_provider: str, server_provider: str) -> float:
+        """Eq. 6: comm_{jm} with j = client's provider, m = server's."""
+        m = self.app.messages
+        server_out = (m.s_msg_train_gb + m.s_msg_aggreg_gb) * self.env.transfer_cost_gb(
+            server_provider
+        )
+        client_out = (m.c_msg_train_gb + m.c_msg_test_gb) * self.env.transfer_cost_gb(
+            client_provider
+        )
+        return server_out + client_out
+
+    def client_round_time(self, client_id: str, client_vm: str, server_vm: str) -> float:
+        """Constraint 16 left-hand side: exec + comm + aggregation."""
+        cvm = self.env.vm_types[client_vm]
+        svm = self.env.vm_types[server_vm]
+        return (
+            self.t_exec(client_id, client_vm)
+            + self.t_comm(cvm.region, svm.region)
+            + self.t_aggreg(server_vm)
+        )
+
+    # -- normalization bounds (T_max, cost_max; Eq. 7) -----------------------
+    def t_max(self) -> float:
+        """Maximum possible makespan over all client/VM/server-VM choices."""
+        if self._t_max is None:
+            worst = 0.0
+            vms = list(self.env.vm_types)
+            for c in self.app.clients:
+                for cvm in vms:
+                    for svm in vms:
+                        worst = max(worst, self.client_round_time(c.client_id, cvm, svm))
+            self._t_max = worst
+        return self._t_max
+
+    def cost_max(self) -> float:
+        """Eq. 7."""
+        if self._cost_max is None:
+            max_rate = max(
+                vm.cost_per_second("on_demand") for vm in self.env.vm_types.values()
+            )
+            providers = list(self.env.providers)
+            max_comm = max(
+                self.comm_cost(pj, pm) for pj in providers for pm in providers
+            )
+            n = self.app.n_clients
+            self._cost_max = max_rate * self.t_max() * (n + 1) + max_comm * n
+        return self._cost_max
+
+    # -- placement evaluation -------------------------------------------------
+    def makespan(self, placement: Mapping[str, Assignment]) -> float:
+        """Algorithm-1 style makespan: max over clients of round time."""
+        server_vm = placement[SERVER].vm_id
+        worst = 0.0
+        for c in self.app.clients:
+            t = self.client_round_time(c.client_id, placement[c.client_id].vm_id, server_vm)
+            worst = max(worst, t)
+        return worst
+
+    def vm_costs(self, placement: Mapping[str, Assignment], makespan_s: float) -> float:
+        """Eq. 4: every allocated VM billed for the whole round makespan."""
+        total = 0.0
+        for task, a in placement.items():
+            vm = self.env.vm_types[a.vm_id]
+            total += vm.cost_per_second(a.market) * makespan_s
+        return total
+
+    def comm_costs(self, placement: Mapping[str, Assignment]) -> float:
+        """Eq. 5: message-exchange cost of every client with the server."""
+        server_vm = self.env.vm_types[placement[SERVER].vm_id]
+        total = 0.0
+        for c in self.app.clients:
+            cvm = self.env.vm_types[placement[c.client_id].vm_id]
+            total += self.comm_cost(cvm.provider, server_vm.provider)
+        return total
+
+    def objective(self, total_costs: float, makespan_s: float) -> float:
+        """Eq. 3 normalized: alpha*cost/cost_max + (1-alpha)*t_m/T_max."""
+        return (
+            self.alpha * (total_costs / self.cost_max())
+            + (1.0 - self.alpha) * (makespan_s / self.t_max())
+        )
+
+    def evaluate(self, placement: Mapping[str, Assignment]) -> PlacementEvaluation:
+        ms = self.makespan(placement)
+        vmc = self.vm_costs(placement, ms)
+        cc = self.comm_costs(placement)
+        total = vmc + cc
+        return PlacementEvaluation(
+            makespan_s=ms,
+            vm_costs=vmc,
+            comm_costs=cc,
+            total_costs=total,
+            objective=self.objective(total, ms),
+        )
+
+    # -- resource accounting (constraints 12-15) ------------------------------
+    def capacity_ok(self, placement: Mapping[str, Assignment]) -> bool:
+        per_provider_gpu: Dict[str, int] = {}
+        per_provider_cpu: Dict[str, int] = {}
+        per_region_gpu: Dict[str, int] = {}
+        per_region_cpu: Dict[str, int] = {}
+        for a in placement.values():
+            vm = self.env.vm_types[a.vm_id]
+            per_provider_gpu[vm.provider] = per_provider_gpu.get(vm.provider, 0) + vm.gpus
+            per_provider_cpu[vm.provider] = per_provider_cpu.get(vm.provider, 0) + vm.vcpus
+            per_region_gpu[vm.region] = per_region_gpu.get(vm.region, 0) + vm.gpus
+            per_region_cpu[vm.region] = per_region_cpu.get(vm.region, 0) + vm.vcpus
+        for pid, p in self.env.providers.items():
+            if p.max_gpus is not None and per_provider_gpu.get(pid, 0) > p.max_gpus:
+                return False
+            if p.max_vcpus is not None and per_provider_cpu.get(pid, 0) > p.max_vcpus:
+                return False
+        for rid, r in self.env.regions.items():
+            if r.max_gpus is not None and per_region_gpu.get(rid, 0) > r.max_gpus:
+                return False
+            if r.max_vcpus is not None and per_region_cpu.get(rid, 0) > r.max_vcpus:
+                return False
+        return True

@@ -1,0 +1,197 @@
+"""Dynamic Scheduler module (paper §4.4, Algorithms 1-3).
+
+On a VM revocation (or runtime fault) the Fault Tolerance module asks this
+scheduler for a replacement VM for the faulty task. The choice is greedy:
+for every candidate instance, recompute the expected round makespan
+(Algorithm 1) and financial cost (Algorithm 2) with the candidate standing
+in for the faulty task, and pick the candidate minimizing the same
+normalized objective as the Initial Mapping (Algorithm 3):
+
+    value = alpha * cost/cost_max + (1 - alpha) * makespan/T_max
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set
+
+from .cost_model import SERVER, Assignment, CostModel, Placement
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplacementDecision:
+    task: str
+    new_vm: str
+    market: str
+    expected_makespan_s: float
+    expected_cost: float
+    objective_value: float
+    candidates_considered: int
+
+
+class DynamicScheduler:
+    """Greedy replacement-instance selection."""
+
+    def __init__(self, cost_model: CostModel, revoked_cooldown_s: float = 3600.0) -> None:
+        self.cost_model = cost_model
+        self.env = cost_model.env
+        self.app = cost_model.app
+        # Per-task revocation history: vm_id -> time the revocation happened.
+        # The paper observed (on AWS) that a revoked type cannot be
+        # reallocated in the same region *immediately* [47]; we model
+        # "immediately" as a cooldown window rather than a permanent ban so a
+        # long run cannot drain the pool into ever-slower instances.
+        self.revoked_cooldown_s = revoked_cooldown_s
+        self._revoked_at: Dict[str, Dict[str, float]] = {}
+
+    def candidate_set(self, task: str, now_s: float = 0.0) -> Set[str]:
+        """I_t at time now_s: all VM types minus those inside their cooldown."""
+        hist = self._revoked_at.get(task, {})
+        return {
+            vm_id
+            for vm_id in self.env.vm_types
+            if now_s - hist.get(vm_id, -math.inf) >= self.revoked_cooldown_s
+        }
+
+    # -- Algorithm 1 ---------------------------------------------------------
+    def recompute_makespan(
+        self, faulty_task: str, candidate_vm: str, current_map: Mapping[str, Assignment]
+    ) -> float:
+        cm = self.cost_model
+        env = self.env
+        if faulty_task == SERVER:
+            # New server on candidate_vm; every client keeps its current VM.
+            max_makespan = -math.inf
+            svm = env.vm_types[candidate_vm]
+            t_aggreg = cm.t_aggreg(candidate_vm)
+            for c in self.app.clients:
+                cvm = env.vm_types[current_map[c.client_id].vm_id]
+                total = (
+                    cm.t_exec(c.client_id, cvm.vm_id)
+                    + cm.t_comm(cvm.region, svm.region)
+                    + t_aggreg
+                )
+                max_makespan = max(max_makespan, total)
+            return max_makespan
+        # Faulty task is a client: server keeps its VM.
+        svm = env.vm_types[current_map[SERVER].vm_id]
+        t_aggreg = cm.t_aggreg(svm.vm_id)
+        new_cvm = env.vm_types[candidate_vm]
+        max_makespan = (
+            cm.t_exec(faulty_task, candidate_vm)
+            + cm.t_comm(new_cvm.region, svm.region)
+            + t_aggreg
+        )
+        for c in self.app.clients:
+            if c.client_id == faulty_task:
+                continue
+            cvm = env.vm_types[current_map[c.client_id].vm_id]
+            total = (
+                cm.t_exec(c.client_id, cvm.vm_id)
+                + cm.t_comm(cvm.region, svm.region)
+                + t_aggreg
+            )
+            max_makespan = max(max_makespan, total)
+        return max_makespan
+
+    # -- Algorithm 2 ---------------------------------------------------------
+    def recompute_cost(
+        self,
+        faulty_task: str,
+        candidate_vm: str,
+        makespan_s: float,
+        current_map: Mapping[str, Assignment],
+    ) -> float:
+        cm = self.cost_model
+        env = self.env
+        total = 0.0
+        if faulty_task == SERVER:
+            new_server = env.vm_types[candidate_vm]
+            market = current_map[SERVER].market
+            total += new_server.cost_per_second(market) * makespan_s
+            for c in self.app.clients:
+                a = current_map[c.client_id]
+                cvm = env.vm_types[a.vm_id]
+                total += cvm.cost_per_second(a.market) * makespan_s
+                total += cm.comm_cost(cvm.provider, new_server.provider)
+            return total
+        server_a = current_map[SERVER]
+        svm = env.vm_types[server_a.vm_id]
+        total += svm.cost_per_second(server_a.market) * makespan_s
+        new_cvm = env.vm_types[candidate_vm]
+        market = current_map[faulty_task].market
+        total += new_cvm.cost_per_second(market) * makespan_s
+        total += cm.comm_cost(new_cvm.provider, svm.provider)
+        for c in self.app.clients:
+            if c.client_id == faulty_task:
+                continue
+            a = current_map[c.client_id]
+            cvm = env.vm_types[a.vm_id]
+            total += cvm.cost_per_second(a.market) * makespan_s
+            total += cm.comm_cost(cvm.provider, svm.provider)
+        return total
+
+    # -- Algorithm 3 ---------------------------------------------------------
+    def select_instance(
+        self,
+        faulty_task: str,
+        current_map: Mapping[str, Assignment],
+        revoked_vm: str,
+        remove_revoked: bool = True,
+        candidate_override: Optional[Iterable[str]] = None,
+        now_s: float = 0.0,
+    ) -> ReplacementDecision:
+        """Greedy selection of the replacement instance.
+
+        `remove_revoked=True` follows the paper's default (a revoked type is
+        not immediately reallocatable in the same region, observed on AWS);
+        the ban decays after `revoked_cooldown_s`. CloudLab experiments
+        (§5.6.1, Table 6) set it False so the same type may be re-selected
+        right away.
+        """
+        cm = self.cost_model
+        if remove_revoked:
+            self._revoked_at.setdefault(faulty_task, {})[revoked_vm] = now_s
+        if candidate_override is not None:
+            candidates: Set[str] = set(candidate_override)
+            candidates.discard(revoked_vm)
+        elif remove_revoked:
+            candidates = self.candidate_set(faulty_task, now_s)
+        else:
+            # Same type may be re-picked immediately (CloudLab behaviour).
+            candidates = set(self.env.vm_types)
+        if not candidates:
+            # Everything is inside its cooldown window; fall back to the full
+            # pool minus the VM that just died rather than dead-ending.
+            candidates = set(self.env.vm_types)
+            candidates.discard(revoked_vm)
+        if not candidates:
+            raise RuntimeError(f"no candidate instances left for task {faulty_task!r}")
+
+        market = current_map[faulty_task].market
+        best_vm: Optional[str] = None
+        best_value = math.inf
+        best_ms = math.inf
+        best_cost = math.inf
+        for vm_id in sorted(candidates):
+            ms = self.recompute_makespan(faulty_task, vm_id, current_map)
+            cost = self.recompute_cost(faulty_task, vm_id, ms, current_map)
+            value = (
+                cm.alpha * (cost / cm.cost_max())
+                + (1.0 - cm.alpha) * (ms / cm.t_max())
+            )
+            if value < best_value:
+                best_value = value
+                best_vm = vm_id
+                best_ms = ms
+                best_cost = cost
+        assert best_vm is not None
+        return ReplacementDecision(
+            task=faulty_task,
+            new_vm=best_vm,
+            market=market,
+            expected_makespan_s=best_ms,
+            expected_cost=best_cost,
+            objective_value=best_value,
+            candidates_considered=len(candidates),
+        )

@@ -1,0 +1,206 @@
+"""Fault Tolerance module (paper §4.3).
+
+Responsibilities:
+  * checkpoint policy — the server checkpoints its aggregated model every X
+    rounds and asynchronously ships the file off-VM; every client stores the
+    aggregated weights it receives each round on local disk;
+  * task monitoring — observe task health, detect revocations/faults;
+  * recovery orchestration — on a fault, ask the Dynamic Scheduler for a
+    replacement VM, restore from the freshest checkpoint (server's if newer,
+    otherwise any client's), relaunch, resume monitoring.
+
+The module is runtime-agnostic: the event-driven simulator drives it with
+simulated clock/events, and `repro.federated.server` drives it with real
+training state (JAX pytrees serialized via `repro.checkpoint`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+from .cost_model import SERVER, Assignment, Placement
+from .dynamic_scheduler import DynamicScheduler, ReplacementDecision
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    FAULTY = "faulty"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class CheckpointPolicy:
+    """Server checkpoints every `server_interval_rounds`; clients keep the
+    aggregated weights of every round locally (`client_every_round`)."""
+
+    server_interval_rounds: int = 10
+    client_every_round: bool = True
+    # Local-disk write bandwidth used to model save overhead (bytes/s).
+    disk_bandwidth_Bps: float = 200e6
+    # Off-VM async transfer bandwidth (bytes/s); overlaps server wait time so
+    # it only delays recovery, not the round (paper §5.5 observation).
+    transfer_bandwidth_Bps: float = 50e6
+
+    def server_checkpoints_at(self, round_idx: int) -> bool:
+        """Rounds are 1-indexed; checkpoint at X, 2X, 3X, ..."""
+        return self.server_interval_rounds > 0 and round_idx % self.server_interval_rounds == 0
+
+    def save_overhead_s(self, checkpoint_bytes: int) -> float:
+        """Synchronous part of a checkpoint: the local-disk write."""
+        if checkpoint_bytes <= 0:
+            return 0.0
+        return checkpoint_bytes / self.disk_bandwidth_Bps
+
+    def transfer_time_s(self, checkpoint_bytes: int) -> float:
+        if checkpoint_bytes <= 0:
+            return 0.0
+        return checkpoint_bytes / self.transfer_bandwidth_Bps
+
+
+@dataclasses.dataclass
+class CheckpointRecord:
+    round_idx: int            # last round captured by this checkpoint
+    location: str             # "server_remote" | "client_local:<cid>"
+    completed_at_s: float     # wall-clock time the checkpoint became durable
+
+
+@dataclasses.dataclass
+class RecoveryPlan:
+    decision: ReplacementDecision
+    restore_from: Optional[CheckpointRecord]
+    resume_round: int          # first round to (re)execute after restart
+    restore_transfer_s: float  # time to ship weights to the new VM
+
+
+class FaultToleranceModule:
+    """Monitors tasks and orchestrates recovery (paper §4.3 + Fig. 1)."""
+
+    def __init__(
+        self,
+        scheduler: DynamicScheduler,
+        policy: CheckpointPolicy,
+        checkpoint_bytes: int,
+        vm_startup_s: float = 60.0,
+        remove_revoked: bool = True,
+    ) -> None:
+        self.scheduler = scheduler
+        self.policy = policy
+        self.checkpoint_bytes = checkpoint_bytes
+        self.vm_startup_s = vm_startup_s
+        self.remove_revoked = remove_revoked
+        self.task_state: Dict[str, TaskState] = {}
+        self.server_checkpoints: List[CheckpointRecord] = []
+        self.client_checkpoints: Dict[str, CheckpointRecord] = {}
+        self.recovery_log: List[RecoveryPlan] = []
+
+    # -- monitoring ----------------------------------------------------------
+    def register_tasks(self, placement: Mapping[str, Assignment]) -> None:
+        for task in placement:
+            self.task_state[task] = TaskState.RUNNING
+
+    def mark_finished(self) -> None:
+        for task in self.task_state:
+            self.task_state[task] = TaskState.FINISHED
+
+    # -- checkpoint bookkeeping ------------------------------------------------
+    def on_round_complete(self, round_idx: int, now_s: float) -> float:
+        """Record checkpoints for a completed round; returns the synchronous
+        overhead (seconds) added to the round by checkpointing."""
+        overhead = 0.0
+        if self.policy.client_every_round:
+            # Clients write the aggregated weights they just received. This
+            # happens in parallel across clients; the synchronous overhead is
+            # one local write (clients do it while the server is idle).
+            overhead += self.policy.save_overhead_s(self.checkpoint_bytes)
+            for cid in [t for t in self.task_state if t != SERVER]:
+                self.client_checkpoints[cid] = CheckpointRecord(
+                    round_idx=round_idx,
+                    location=f"client_local:{cid}",
+                    completed_at_s=now_s,
+                )
+        if self.policy.server_checkpoints_at(round_idx):
+            overhead += self.policy.save_overhead_s(self.checkpoint_bytes)
+            # The off-VM copy is asynchronous: it becomes durable after the
+            # transfer time but does not block the round.
+            self.server_checkpoints.append(
+                CheckpointRecord(
+                    round_idx=round_idx,
+                    location="server_remote",
+                    completed_at_s=now_s + self.policy.transfer_time_s(self.checkpoint_bytes),
+                )
+            )
+        return overhead
+
+    def latest_server_checkpoint(self, now_s: float) -> Optional[CheckpointRecord]:
+        """The freshest *durable* server checkpoint at time now_s."""
+        durable = [c for c in self.server_checkpoints if c.completed_at_s <= now_s]
+        return durable[-1] if durable else None
+
+    def latest_client_checkpoint(self, exclude: Optional[str] = None) -> Optional[CheckpointRecord]:
+        recs = [r for cid, r in self.client_checkpoints.items() if cid != exclude]
+        if not recs:
+            return None
+        return max(recs, key=lambda r: r.round_idx)
+
+    # -- recovery ----------------------------------------------------------------
+    def handle_fault(
+        self,
+        faulty_task: str,
+        current_placement: Placement,
+        revoked_vm: str,
+        now_s: float,
+        current_round: int,
+    ) -> RecoveryPlan:
+        """Select a replacement VM and decide where to restore from.
+
+        Returns the plan; the caller (simulator or live runtime) applies it
+        (updates the placement, charges startup/restore time, re-runs rounds).
+        """
+        self.task_state[faulty_task] = TaskState.FAULTY
+        decision = self.scheduler.select_instance(
+            faulty_task,
+            current_placement,
+            revoked_vm,
+            remove_revoked=self.remove_revoked,
+            now_s=now_s,
+        )
+
+        restore_from: Optional[CheckpointRecord] = None
+        restore_transfer_s = 0.0
+        if faulty_task == SERVER:
+            # Freshest of {durable server checkpoint, any client's local copy}
+            # (paper: "verify if the server or the clients have the latest
+            # checkpoint").
+            server_ck = self.latest_server_checkpoint(now_s)
+            client_ck = self.latest_client_checkpoint()
+            if server_ck is not None and (
+                client_ck is None or server_ck.round_idx >= client_ck.round_idx
+            ):
+                restore_from = server_ck
+            else:
+                restore_from = client_ck
+            if restore_from is not None:
+                restore_transfer_s = self.policy.transfer_time_s(self.checkpoint_bytes)
+            resume_round = (restore_from.round_idx + 1) if restore_from else 1
+        else:
+            # A client restart needs no weight upload: the server re-sends the
+            # current weights at the start of the round it re-executes.
+            restore_from = self.client_checkpoints.get(faulty_task)
+            resume_round = current_round
+
+        plan = RecoveryPlan(
+            decision=decision,
+            restore_from=restore_from,
+            resume_round=resume_round,
+            restore_transfer_s=restore_transfer_s,
+        )
+        self.recovery_log.append(plan)
+        self.task_state[faulty_task] = TaskState.RUNNING
+        return plan
+
+    def recovery_delay_s(self, plan: RecoveryPlan) -> float:
+        """Wall-clock delay a fault adds before the task can re-execute."""
+        return self.vm_startup_s + plan.restore_transfer_s

@@ -1,0 +1,275 @@
+"""Event-driven simulator of a Multi-FedLS execution (paper §5).
+
+Drives the four framework modules against a simulated multi-cloud clock:
+Initial Mapping places the tasks, spot revocations arrive as a global
+Poisson process (see `revocation`), the Fault Tolerance module reacts via
+the Dynamic Scheduler, and costs accrue per-VM-second plus per-message
+($/GB egress).
+
+The simulator reproduces the paper's experiment grids (Tables 5-8, §5.7):
+scenarios {all-spot, on-demand-server + spot-clients, all-on-demand} x
+termination rates k_r in {3600, 7200, 14400} x checkpoint policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .application_model import FLApplication
+from .cloud_model import CloudEnvironment
+from .cost_model import SERVER, Assignment, CostModel, Placement
+from .dynamic_scheduler import DynamicScheduler
+from .fault_tolerance import CheckpointPolicy, FaultToleranceModule
+from .initial_mapping import InitialMapping, MappingSolution
+from .revocation import RevocationModel
+
+
+@dataclasses.dataclass
+class SimulationConfig:
+    alpha: float = 0.5
+    server_market: str = "on_demand"
+    client_market: str = "on_demand"
+    k_r: Optional[float] = None           # mean seconds between revocation events
+    seed: int = 0
+    vm_startup_s: float = 154.0           # AWS-like prep time (2:34, §5.4)
+    checkpoint: Optional[CheckpointPolicy] = None  # None = checkpointing off
+    remove_revoked: bool = True           # Algorithm 3 first line
+    n_rounds: Optional[int] = None        # override app.n_rounds
+    use_greedy_mapping: bool = False      # use the heuristic instead of MILP
+    # The paper's PoC (§5.7) solves the Initial Mapping at on-demand prices
+    # and reuses that placement for spot executions ("the instances selected
+    # per region are the same as in previous work"). Set to "actual" to
+    # optimize with the execution market's prices instead.
+    mapping_prices: str = "on_demand"     # "on_demand" | "actual"
+
+
+@dataclasses.dataclass
+class RevocationEvent:
+    time_s: float
+    task: str
+    old_vm: str
+    new_vm: str
+    round_idx: int
+    interrupted_round: bool
+
+
+@dataclasses.dataclass
+class SimulationResult:
+    total_time_s: float        # Multi-FedLS wall time (startup + FL)
+    fl_exec_time_s: float      # FL execution only
+    total_cost: float          # VM-seconds + message egress
+    vm_cost: float
+    comm_cost: float
+    n_revocations: int
+    rounds_completed: int
+    checkpoint_overhead_s: float
+    initial_mapping: MappingSolution
+    events: List[RevocationEvent]
+    final_placement: Placement
+
+
+class _Allocation:
+    """One live VM allocation with its billing meter."""
+
+    def __init__(self, vm_id: str, market: str, start_s: float) -> None:
+        self.vm_id = vm_id
+        self.market = market
+        self.start_s = start_s
+        self.end_s: Optional[float] = None
+
+
+class MultiCloudSimulator:
+    """Simulates one full Multi-FedLS run."""
+
+    def __init__(
+        self,
+        env: CloudEnvironment,
+        app: FLApplication,
+        config: SimulationConfig,
+    ) -> None:
+        self.env = env
+        self.app = app
+        self.config = config
+        self.cost_model = CostModel(env, app, config.alpha)
+        self.scheduler = DynamicScheduler(self.cost_model)
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimulationResult:
+        cfg = self.config
+        n_rounds = cfg.n_rounds if cfg.n_rounds is not None else self.app.n_rounds
+        sampler = RevocationModel(cfg.k_r, cfg.seed).sampler()
+
+        mapping = self._solve_initial_mapping()
+        placement: Placement = dict(mapping.placement)
+
+        policy = cfg.checkpoint or CheckpointPolicy(
+            server_interval_rounds=0, client_every_round=False
+        )
+        ckpt_enabled = cfg.checkpoint is not None
+        ft = FaultToleranceModule(
+            scheduler=self.scheduler,
+            policy=policy,
+            checkpoint_bytes=self.app.checkpoint_bytes if ckpt_enabled else 0,
+            vm_startup_s=cfg.vm_startup_s,
+            remove_revoked=cfg.remove_revoked,
+        )
+        ft.register_tasks(placement)
+
+        # Provision all VMs (in parallel): billing starts at t=0, FL work
+        # starts once the slowest VM is up.
+        allocations: Dict[str, _Allocation] = {
+            task: _Allocation(a.vm_id, a.market, start_s=0.0) for task, a in placement.items()
+        }
+        now = cfg.vm_startup_s
+        fl_start = now
+
+        comm_cost_total = 0.0
+        ckpt_overhead_total = 0.0
+        events: List[RevocationEvent] = []
+        retired: List[_Allocation] = []
+        next_rev = sampler.next_event_after(0.0)
+
+        round_idx = 1
+        while round_idx <= n_rounds:
+            server_vm = placement[SERVER].vm_id
+            svm = self.env.vm_types[server_vm]
+            t_aggreg = self.cost_model.t_aggreg(server_vm)
+
+            client_times = {}
+            for c in self.app.clients:
+                cvm = self.env.vm_types[placement[c.client_id].vm_id]
+                client_times[c.client_id] = (
+                    self.cost_model.t_exec(c.client_id, cvm.vm_id)
+                    + self.cost_model.t_comm(cvm.region, svm.region)
+                    + t_aggreg
+                )
+            round_start = now
+            round_end = round_start + max(client_times.values())
+
+            interrupted = False
+            while next_rev <= round_end:
+                t_rev = next_rev
+                next_rev = sampler.next_event_after(t_rev)
+                spot_tasks = sorted(
+                    task for task, a in placement.items() if a.market == "spot"
+                )
+                victim = sampler.pick_victim(spot_tasks)
+                if victim is None:
+                    continue
+                alloc = allocations[victim]
+
+                if victim != SERVER and t_rev >= round_start + client_times[victim]:
+                    # Client already delivered this round's weights: replace it
+                    # in the background; the round result stands but the next
+                    # round cannot start before the new VM is ready.
+                    plan = ft.handle_fault(victim, placement, alloc.vm_id, t_rev, round_idx)
+                    delay = ft.recovery_delay_s(plan)
+                    self._swap_allocation(allocations, retired, victim, plan.decision.new_vm, placement, t_rev)
+                    events.append(
+                        RevocationEvent(t_rev, victim, alloc.vm_id, plan.decision.new_vm, round_idx, False)
+                    )
+                    round_end = max(round_end, t_rev + delay)
+                    continue
+
+                # Revocation interrupts the round.
+                plan = ft.handle_fault(victim, placement, alloc.vm_id, t_rev, round_idx)
+                delay = ft.recovery_delay_s(plan)
+                self._swap_allocation(allocations, retired, victim, plan.decision.new_vm, placement, t_rev)
+                events.append(
+                    RevocationEvent(t_rev, victim, alloc.vm_id, plan.decision.new_vm, round_idx, True)
+                )
+
+                if victim == SERVER:
+                    # Weights recovered from the freshest checkpoint; rounds
+                    # after the checkpoint are lost and re-executed.
+                    resume = plan.resume_round if ckpt_enabled else 1
+                    round_idx = max(1, resume)
+                else:
+                    # The interrupted client redoes the current round; the
+                    # server re-sends the weights (extra s_msg_train egress).
+                    comm_cost_total += (
+                        self.app.messages.s_msg_train_gb
+                        * self.env.transfer_cost_gb(svm.provider)
+                    )
+                now = t_rev + delay
+                interrupted = True
+                break
+
+            if interrupted:
+                continue  # re-enter the (possibly rewound) round
+
+            # Round completed.
+            now = round_end
+            if ckpt_enabled:
+                ov = ft.on_round_complete(round_idx, now)
+                ckpt_overhead_total += ov
+                now += ov
+            comm_cost_total += self.cost_model.comm_costs(placement)
+            round_idx += 1
+
+        for alloc in allocations.values():
+            alloc.end_s = now
+            retired.append(alloc)
+
+        vm_cost = 0.0
+        for alloc in retired:
+            vm = self.env.vm_types[alloc.vm_id]
+            end = alloc.end_s if alloc.end_s is not None else now
+            vm_cost += vm.cost_per_second(alloc.market) * max(0.0, end - alloc.start_s)
+
+        return SimulationResult(
+            total_time_s=now,
+            fl_exec_time_s=now - fl_start,
+            total_cost=vm_cost + comm_cost_total,
+            vm_cost=vm_cost,
+            comm_cost=comm_cost_total,
+            n_revocations=len(events),
+            rounds_completed=n_rounds,
+            checkpoint_overhead_s=ckpt_overhead_total,
+            initial_mapping=mapping,
+            events=events,
+            final_placement=placement,
+        )
+
+    # ------------------------------------------------------------------
+    def _solve_initial_mapping(self) -> MappingSolution:
+        if self.config.mapping_prices == "on_demand":
+            solve_server, solve_client = "on_demand", "on_demand"
+        else:
+            solve_server = self.config.server_market
+            solve_client = self.config.client_market
+        im = InitialMapping(
+            self.env,
+            self.app,
+            alpha=self.config.alpha,
+            server_market=solve_server,
+            client_market=solve_client,
+        )
+        mapping = im.solve_greedy() if self.config.use_greedy_mapping else im.solve()
+        # Execution markets may differ from the solve-time prices.
+        placement = {
+            task: Assignment(
+                a.vm_id,
+                self.config.server_market if task == SERVER else self.config.client_market,
+            )
+            for task, a in mapping.placement.items()
+        }
+        mapping.placement = placement
+        return mapping
+
+    def _swap_allocation(
+        self,
+        allocations: Dict[str, _Allocation],
+        retired: List[_Allocation],
+        task: str,
+        new_vm: str,
+        placement: Placement,
+        revoke_time_s: float,
+    ) -> None:
+        old = allocations[task]
+        old.end_s = revoke_time_s
+        retired.append(old)
+        market = placement[task].market
+        placement[task] = Assignment(new_vm, market)
+        allocations[task] = _Allocation(new_vm, market, start_s=revoke_time_s)

@@ -1,0 +1,35 @@
+from .aggregation import aggregate_metrics, fedavg, fedavg_stacked
+from .client import ClientResult, EvalResult, FLClient
+from .messages import (
+    RoundMessageLog,
+    measure_messages,
+    model_weight_bytes,
+    to_cost_model_sizes,
+)
+from .pod_fedavg import (
+    init_pod_state,
+    make_fl_round_step,
+    make_train_step,
+    pod_batch_shape,
+)
+from .server import FLRunResult, FLServer, RoundRecord
+
+__all__ = [
+    "ClientResult",
+    "EvalResult",
+    "FLClient",
+    "FLRunResult",
+    "FLServer",
+    "RoundMessageLog",
+    "RoundRecord",
+    "aggregate_metrics",
+    "fedavg",
+    "fedavg_stacked",
+    "init_pod_state",
+    "make_fl_round_step",
+    "make_train_step",
+    "measure_messages",
+    "model_weight_bytes",
+    "pod_batch_shape",
+    "to_cost_model_sizes",
+]

@@ -1,0 +1,125 @@
+"""FL client: local training over a private silo (paper §3).
+
+Each client receives the global weights, runs `local_epochs` of SGD/AdamW
+over its silo, and returns (updated weights, n_samples, wall time). The
+evaluation phase runs the silo's test split and returns scalar metrics.
+
+The train step is jitted once per (model, optimizer) pair and reused
+across rounds — like a real client process would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientResult:
+    client_id: str
+    params: Any
+    n_samples: int
+    train_time_s: float
+
+
+@dataclasses.dataclass
+class EvalResult:
+    client_id: str
+    metrics: Dict[str, float]
+    n_samples: int
+    eval_time_s: float
+
+
+class FLClient:
+    """One cross-silo FL client.
+
+    loss_fn(params, batch) -> scalar; batch is whatever the silo yields
+    (tuple converted via `batch_fn`). eval_fn(params, batch) -> dict of
+    sums (e.g. {"n_correct": ..., "nll_sum": ...}) reduced over batches.
+    """
+
+    def __init__(
+        self,
+        client_id: str,
+        silo: Any,
+        loss_fn: Callable[[Any, Any], jnp.ndarray],
+        optimizer: Any,
+        batch_size: int = 32,
+        local_epochs: int = 1,
+        batch_fn: Optional[Callable] = None,
+        eval_fn: Optional[Callable[[Any, Any], Dict[str, jnp.ndarray]]] = None,
+    ) -> None:
+        self.client_id = client_id
+        self.silo = silo
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.batch_size = batch_size
+        self.local_epochs = local_epochs
+        self.batch_fn = batch_fn or (lambda b: b)
+        self.eval_fn = eval_fn
+        self._opt_state = None
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        self._train_step = train_step
+        self._jit_eval = jax.jit(eval_fn) if eval_fn is not None else None
+
+    # -- training phase ------------------------------------------------------
+    def train(self, global_params: Any) -> ClientResult:
+        t0 = time.monotonic()
+        params = global_params
+        # Fresh optimizer state per round (clients are stateless across
+        # rounds w.r.t. the optimizer; only weights flow through the server).
+        opt_state = self.optimizer.init(params)
+        n = 0
+        last_loss = None
+        for _ in range(self.local_epochs):
+            for raw in self.silo.batches(self.batch_size, split="train"):
+                batch = self.batch_fn(raw)
+                params, opt_state, last_loss = self._train_step(params, opt_state, batch)
+                n += _batch_count(raw)
+        jax.block_until_ready(last_loss)
+        return ClientResult(
+            client_id=self.client_id,
+            params=params,
+            n_samples=n // self.local_epochs if self.local_epochs else n,
+            train_time_s=time.monotonic() - t0,
+        )
+
+    # -- evaluation phase -----------------------------------------------------
+    def evaluate(self, aggregated_params: Any) -> EvalResult:
+        t0 = time.monotonic()
+        sums: Dict[str, float] = {}
+        n = 0
+        for raw in self.silo.batches(self.batch_size, split="test"):
+            batch = self.batch_fn(raw)
+            if self._jit_eval is not None:
+                out = self._jit_eval(aggregated_params, batch)
+            else:
+                out = {"loss_sum": self.loss_fn(aggregated_params, batch) * _batch_count(raw)}
+            for k, v in out.items():
+                sums[k] = sums.get(k, 0.0) + float(v)
+            n += _batch_count(raw)
+        metrics = {k.replace("_sum", ""): v / max(n, 1) for k, v in sums.items()}
+        return EvalResult(
+            client_id=self.client_id,
+            metrics=metrics,
+            n_samples=n,
+            eval_time_s=time.monotonic() - t0,
+        )
+
+
+def _batch_count(raw) -> int:
+    if isinstance(raw, tuple):
+        return int(np.shape(raw[0])[0])
+    if isinstance(raw, dict):
+        return int(np.shape(next(iter(raw.values())))[0])
+    return int(np.shape(raw)[0])

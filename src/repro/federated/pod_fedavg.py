@@ -1,0 +1,112 @@
+"""TPU-native cross-silo FedAvg: silos -> pods (DESIGN.md §3).
+
+Each FL silo maps to one pod of the multi-pod mesh. Parameters and
+optimizer state carry a leading `n_pods` axis sharded over the "pod" mesh
+axis, so every pod holds an independent replica; local SGD steps are
+`jax.vmap`ed over that axis (pure SPMD — XLA keeps all per-pod compute
+pod-local). Once per round, FedAvg averages the replicas over the pod
+axis — the ONLY cross-pod collective, an all-reduce of the parameter tree
+over the slow DCN axis, amortized over `local_steps` ICI-local steps.
+This is exactly the paper's communication pattern (rounds as
+synchronization barriers) expressed in the TPU memory/collective
+hierarchy.
+
+The multi-pod dry-run lowers `fl_round_step` on the (pod, data, model)
+mesh; single-pod shapes lower the plain `train_step`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ModelFamily
+from .aggregation import fedavg_stacked
+
+
+def make_train_step(model: ModelFamily, optimizer: Any):
+    """Plain single-silo train step: (params, opt_state, batch) -> ..."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def init_pod_state(model: ModelFamily, optimizer: Any, rng: jax.Array, n_pods: int):
+    """Per-pod replicated init: stack n_pods copies on a leading axis.
+
+    All pods start from the same weights (the FL server broadcasts the
+    initial model), so the stack is a broadcast of one init.
+    """
+    params = model.init(rng)
+    opt_state = optimizer.init(params)
+    stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), t)
+    return stack(params), stack(opt_state)
+
+
+def make_fl_round_step(
+    model: ModelFamily,
+    optimizer: Any,
+    local_steps: int,
+    pod_weights: Optional[jnp.ndarray] = None,
+    unroll: bool = False,
+):
+    """Build the jittable FL round step.
+
+    Args to the returned fn:
+      stacked_params / stacked_opt : pytrees with leading n_pods axis
+      batches : {name: (n_pods, local_steps, per_pod_batch, ...)}
+
+    Returns (new_params, new_opt, mean_loss). After the round every pod
+    holds the same aggregated weights (per-silo optimizer moments are kept
+    silo-local, as in the paper — only weights flow through the server).
+    """
+    train_step = make_train_step(model, optimizer)
+
+    def per_pod(params, opt_state, pod_batches):
+        def body(carry, batch):
+            p, o = carry
+            p, o, loss = train_step(p, o, batch)
+            return (p, o), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), pod_batches, unroll=unroll
+        )
+        return params, opt_state, jnp.mean(losses)
+
+    def fl_round_step(stacked_params, stacked_opt, batches):
+        params, opt_state, losses = jax.vmap(per_pod)(stacked_params, stacked_opt, batches)
+        n_pods = losses.shape[0]
+        w = pod_weights if pod_weights is not None else jnp.ones((n_pods,), jnp.float32)
+        # FedAvg barrier: weighted mean over the pod axis, broadcast back.
+        avg = fedavg_stacked(params, w)
+        params = jax.tree.map(
+            lambda a, p: jnp.broadcast_to(a[None], p.shape).astype(p.dtype), avg, params
+        )
+        return params, opt_state, jnp.mean(losses)
+
+    return fl_round_step
+
+
+def pod_batch_shape(
+    cfg: ModelConfig, n_pods: int, local_steps: int, global_batch: int, seq_len: int
+) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """Shapes for the fl_round_step batch pytree (global batch split over
+    pods)."""
+    per_pod = global_batch // n_pods
+    base = (n_pods, local_steps, per_pod)
+    shapes: Dict[str, Tuple[Tuple[int, ...], Any]] = {
+        "tokens": (base + (seq_len,), jnp.int32),
+        "labels": (base + (seq_len,), jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        shapes["patch_embeds"] = (base + (cfg.n_image_tokens, cfg.d_model), cfg.activation_dtype)
+    if cfg.arch_type == "encdec":
+        shapes["frames"] = (base + (cfg.encoder_seq, cfg.d_model), cfg.activation_dtype)
+    return shapes

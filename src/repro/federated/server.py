@@ -1,0 +1,152 @@
+"""FL server: round orchestration per the paper's §3 protocol.
+
+Each round:
+  training phase   — send s_msg_train (current weights) to every client;
+                     each trains locally and returns c_msg_train;
+                     server aggregates (FedAvg).
+  evaluation phase — send s_msg_aggreg (aggregated weights); clients
+                     evaluate and return c_msg_test metrics; server
+                     aggregates metrics and starts the next round.
+
+Cross-silo semantics: the server *always waits for all clients* before the
+next round (paper §4.3 — skipping a silo every round would bias learning).
+Checkpointing follows §4.3: server checkpoint every X rounds with async
+off-VM transfer; clients store the aggregated weights each round. The
+`fault_hook` lets tests/examples revoke tasks mid-execution; recovery uses
+`repro.checkpoint.resolve_freshest`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.checkpoint import (
+    ClientCheckpointManager,
+    ServerCheckpointManager,
+    resolve_freshest,
+)
+from .aggregation import aggregate_metrics, fedavg
+from .client import ClientResult, EvalResult, FLClient
+from .messages import RoundMessageLog, measure_messages
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round_idx: int
+    train_time_s: float
+    eval_time_s: float
+    checkpoint_time_s: float
+    metrics: Dict[str, float]
+    message_log: Optional[RoundMessageLog]
+    restarted_from: Optional[str] = None
+
+
+@dataclasses.dataclass
+class FLRunResult:
+    rounds: List[RoundRecord]
+    final_params: Any
+    total_time_s: float
+
+    @property
+    def final_metrics(self) -> Dict[str, float]:
+        return self.rounds[-1].metrics if self.rounds else {}
+
+
+class FLServer:
+    def __init__(
+        self,
+        clients: Sequence[FLClient],
+        initial_params: Any,
+        server_ckpt: Optional[ServerCheckpointManager] = None,
+        client_ckpts: Optional[Dict[str, ClientCheckpointManager]] = None,
+        fault_hook: Optional[Callable[[int], Optional[str]]] = None,
+        measure_round_messages: bool = False,
+    ) -> None:
+        self.clients = list(clients)
+        self.params = initial_params
+        self.server_ckpt = server_ckpt
+        self.client_ckpts = client_ckpts or {}
+        self.fault_hook = fault_hook
+        self.measure_round_messages = measure_round_messages
+        self.start_round = 1
+
+    # ------------------------------------------------------------------
+    def run(self, n_rounds: int) -> FLRunResult:
+        t_start = time.monotonic()
+        records: List[RoundRecord] = []
+        r = self.start_round
+        while r <= n_rounds:
+            restarted_from = None
+            # Fault injection point: hook returns "s" or a client id to kill.
+            if self.fault_hook is not None:
+                victim = self.fault_hook(r)
+                if victim == "s":
+                    restarted_from = self._recover_server()
+
+            rec = self._run_round(r, restarted_from)
+            records.append(rec)
+            r += 1
+
+        if self.server_ckpt is not None:
+            self.server_ckpt.wait_for_transfers()
+        return FLRunResult(
+            rounds=records,
+            final_params=self.params,
+            total_time_s=time.monotonic() - t_start,
+        )
+
+    # ------------------------------------------------------------------
+    def _run_round(self, round_idx: int, restarted_from: Optional[str]) -> RoundRecord:
+        # Training phase: s_msg_train -> local train -> c_msg_train.
+        t0 = time.monotonic()
+        results: List[ClientResult] = [c.train(self.params) for c in self.clients]
+        self.params = fedavg(
+            [res.params for res in results], [res.n_samples for res in results]
+        )
+        train_time = time.monotonic() - t0
+
+        # Evaluation phase: s_msg_aggreg -> local eval -> c_msg_test.
+        t1 = time.monotonic()
+        evals: List[EvalResult] = [c.evaluate(self.params) for c in self.clients]
+        metrics = aggregate_metrics(
+            [e.metrics for e in evals], [max(e.n_samples, 1) for e in evals]
+        )
+        eval_time = time.monotonic() - t1
+
+        # Checkpointing (§4.3).
+        t2 = time.monotonic()
+        for c in self.clients:
+            mgr = self.client_ckpts.get(c.client_id)
+            if mgr is not None:
+                mgr.save(round_idx, self.params)
+        if self.server_ckpt is not None and self.server_ckpt.should_checkpoint(round_idx):
+            self.server_ckpt.save(round_idx, self.params)
+        ckpt_time = time.monotonic() - t2
+
+        log = measure_messages(self.params, metrics) if self.measure_round_messages else None
+        return RoundRecord(
+            round_idx=round_idx,
+            train_time_s=train_time,
+            eval_time_s=eval_time,
+            checkpoint_time_s=ckpt_time,
+            metrics=metrics,
+            message_log=log,
+            restarted_from=restarted_from,
+        )
+
+    # ------------------------------------------------------------------
+    def _recover_server(self) -> str:
+        """Server VM died: restore weights from the freshest checkpoint
+        (paper §4.3 rule) and rewind the round counter accordingly."""
+        source, info = resolve_freshest(self.server_ckpt, self.client_ckpts) if self.server_ckpt else ("none", None)
+        if source == "none" or info is None:
+            # No checkpoint anywhere: restart from scratch semantics is the
+            # caller's job; here we just keep current in-memory weights.
+            return "none"
+        if source == "server":
+            _, self.params = self.server_ckpt.restore(self.params, info)
+        else:
+            cid = source.split(":", 1)[1]
+            _, self.params = self.client_ckpts[cid].restore(self.params)
+        return source

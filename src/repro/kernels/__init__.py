@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots:
+
+  fedavg_reduce   — the server aggregation reduce (the paper's per-round
+                    hot spot at cross-silo model sizes);
+  flash_attention — causal GQA attention w/ sliding window (client-side
+                    training/prefill compute for the attention archs);
+  ssd_scan        — Mamba-2 SSD intra-chunk scan (SSM / hybrid archs).
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
+entry point (interpret mode on CPU, Mosaic on TPU).
+"""
+from .ops import fedavg_reduce, flash_attention, ssd_scan
+
+__all__ = ["fedavg_reduce", "flash_attention", "ssd_scan"]

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: causal GQA flash attention with optional sliding
+window.
+
+Grid: (B * H, Sq / BQ, Sk / BK) with the KV dimension innermost so the
+running-softmax scratch (m, l, acc) persists across KV blocks in VMEM.
+Query blocks load once per (b, h, iq); KV blocks stream HBM -> VMEM.
+GQA is handled in the index maps: query head h reads KV head h // group.
+
+Causality / windowing skip whole KV blocks outside [q_start - W, q_end]
+via pl.when — the skipped block costs a VMEM load but no FLOPs (block
+skipping in the index map is the hillclimb refinement).
+
+Block sizes default to (BQ, BK) = (128, 128): MXU-aligned (128 lanes) and
+a VMEM footprint of ~(BQ*D + 2*BK*D + BQ*BK) * 4 B ~= 0.4 MB at D = 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, bq: int, bk: int, n_kv_blocks: int, causal: bool,
+    window: Optional[int],
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # Block-level skip: causal => kv block must start at or before the last
+    # query row; window => kv block must end after the first in-window key.
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - (window - 1))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)           # (BQ, D)
+        k = k_ref[0, ...].astype(jnp.float32)           # (BK, D)
+        v = v_ref[0, ...].astype(jnp.float32)           # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                        # (BQ, BK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (BQ, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)        # (BQ, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)                  # (BQ, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, KV, D)
+    v: jnp.ndarray,  # (B, Sk, KV, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash attention; output (B, Sq, H, D) in q.dtype."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0, "query heads must be a multiple of KV heads"
+    group = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "seq lens must divide block sizes"
+    scale = 1.0 / math.sqrt(D)
+    n_kv_blocks = Sk // bk
+
+    # (B, S, H, D) -> (B, H, S, D) for blocking over (batch*head, seq).
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, bq=bq, bk=bk, n_kv_blocks=n_kv_blocks,
+        causal=causal, window=window,
+    )
+
+    def kv_index(ibh, iq, ik):
+        # query row ibh = b * H + h  ->  kv row b * KV + h // group
+        b = ibh // H
+        h = ibh % H
+        return (b * KV + h // group, ik, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        grid=(B * H, Sq // bq, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda ibh, iq, ik: (ibh, iq, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda ibh, iq, ik: (ibh, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+that tests sweep shapes/dtypes against).
+
+  fedavg_reduce_ref   <- kernels/fedavg_reduce.py
+  flash_attention_ref <- kernels/flash_attention.py
+  ssd_scan_ref        <- kernels/ssd_scan.py
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_attention, full_attention
+from repro.models.mamba2 import ssd_chunked, ssd_reference
+
+
+def fedavg_reduce_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked (N, L), weights (N,) -> (L,). fp32 accumulation."""
+    w = (weights / jnp.sum(weights)).astype(jnp.float32)
+    out = jnp.sum(stacked.astype(jnp.float32) * w[:, None], axis=0)
+    return out.astype(stacked.dtype)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    if causal:
+        return causal_attention(q, k, v, sliding_window=window)
+    assert window is None, "window implies causal"
+    return full_attention(q, k, v)
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B_mat: jnp.ndarray,
+    C_mat: jnp.ndarray,
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return ssd_chunked(x, dt, A, B_mat, C_mat, chunk, initial_state)
+
+
+def ssd_scan_sequential_ref(x, dt, A, B_mat, C_mat, initial_state=None):
+    """The O(L) recurrent gold standard (slowest, exact semantics)."""
+    return ssd_reference(x, dt, A, B_mat, C_mat, initial_state)

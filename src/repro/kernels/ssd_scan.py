@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk scan.
+
+The SSD algorithm splits the sequence into chunks: the O(Q^2) intra-chunk
+part (a masked-decay attention-like contraction) dominates FLOPs and maps
+onto the MXU; the O(n_chunks) inter-chunk state recurrence is tiny and
+stays in XLA (lax.scan in the ops wrapper).
+
+Grid: (B, n_chunks, H / BH). Per block the kernel computes, for BH heads:
+  a_cs    = cumsum(dt * A)                          (BH, Q)
+  y_diag  = (exp(segsum(a)) * (C B^T)) @ (x * dt)   (BH, Q, P)
+  states  = B^T @ (x * dt * exp(a_cs[-1] - a_cs))   (BH, P, N)
+VMEM at (BH, Q, P, N) = (8, 256, 64, 128): ~3.5 MB fp32.
+
+The wrapper `ssd_chunk_scan` matches `repro.models.mamba2.ssd_chunked`
+(the pure-jnp oracle) exactly and is swappable into the model forward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, st_ref, acs_ref):
+    """Blocks: x (1,1,BH,Q,P), dt (1,1,BH,Q), A (BH,1), B/C (1,1,Q,N);
+    outputs y (1,1,BH,Q,P), st (1,1,BH,P,N), acs (1,1,BH,Q)."""
+    x = x_ref[0, 0].astype(jnp.float32)       # (BH, Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (BH, Q)
+    A = A_ref[...][:, 0]                      # (BH,)
+    Bm = B_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    Cm = C_ref[0, 0].astype(jnp.float32)      # (Q, N)
+
+    a = dt * A[:, None]                       # (BH, Q)
+    a_cs = jnp.cumsum(a, axis=1)              # (BH, Q)
+
+    # segsum -> decay matrix L (BH, Q, Q), lower-triangular.
+    diff = a_cs[:, :, None] - a_cs[:, None, :]
+    Q = a.shape[1]
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = li >= lj
+    L = jnp.where(tril[None], jnp.exp(jnp.where(tril[None], diff, 0.0)), 0.0)
+
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (Q, Q)
+    xdt = x * dt[:, :, None]                   # (BH, Q, P)
+    y = jax.lax.dot_general(
+        L * scores[None], xdt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                          # (BH, Q, P)
+
+    decay_states = jnp.exp(a_cs[:, -1:] - a_cs)          # (BH, Q)
+    w = xdt * decay_states[:, :, None]                   # (BH, Q, P)
+    st = jax.lax.dot_general(
+        w, Bm, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (BH, P, N)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    acs_ref[0, 0] = a_cs.astype(acs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret"))
+def ssd_chunk_scan(
+    x: jnp.ndarray,      # (B, L, H, P)
+    dt: jnp.ndarray,     # (B, L, H) fp32 (post-softplus)
+    A: jnp.ndarray,      # (H,) fp32 negative
+    B_mat: jnp.ndarray,  # (B, L, N)
+    C_mat: jnp.ndarray,  # (B, L, N)
+    chunk: int = 256,
+    block_h: int = 8,
+    interpret: bool = True,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full SSD: Pallas intra-chunk kernel + XLA inter-chunk recurrence.
+    Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    Bsz, L, H, P = x.shape
+    N = B_mat.shape[-1]
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+    bh = min(block_h, H)
+    assert H % bh == 0, f"H={H} % block_h={bh}"
+    C = L // chunk
+
+    xc = x.reshape(Bsz, C, chunk, H, P).transpose(0, 1, 3, 2, 4)   # (B,C,H,Q,P)
+    dtc = dt.reshape(Bsz, C, chunk, H).transpose(0, 1, 3, 2)       # (B,C,H,Q)
+    Bc = B_mat.reshape(Bsz, C, chunk, N)
+    Cc = C_mat.reshape(Bsz, C, chunk, N)
+    A2 = A.reshape(H, 1).astype(jnp.float32)
+
+    grid = (Bsz, C, H // bh)
+    y, states, a_cs = pl.pallas_call(
+        _ssd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((Bsz, C, H, chunk, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, C, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, C, H, chunk), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bh, chunk, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, bh, chunk), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((bh, 1), lambda b, c, h: (h, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, bh, chunk, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, bh, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, bh, chunk), lambda b, c, h: (b, c, h, 0)),
+        ),
+        interpret=interpret,
+    )(xc, dtc, A2, Bc, Cc)
+
+    # Inter-chunk recurrence (tiny: C steps over (B, H, P, N)).
+    chunk_decay = jnp.exp(a_cs[:, :, :, -1])               # (B, C, H)
+    h0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    def body(h, inp):
+        st, dec = inp
+        h_prev = h
+        h = h * dec[:, :, None, None] + st
+        return h, h_prev
+
+    h_final, h_prevs = jax.lax.scan(
+        body, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B, C, H, P, N)
+
+    # Off-diagonal (carried-state) contribution.
+    state_decay = jnp.exp(a_cs)                            # (B, C, H, Q)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bchlp", Cc, h_prevs, state_decay)
+    y_total = (y + y_off).transpose(0, 1, 3, 2, 4).reshape(Bsz, L, H, P)
+    return y_total.astype(x.dtype), h_final

@@ -1,0 +1,443 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+real hardware, and extract the roofline terms.
+
+For every (architecture x input shape), ``.lower().compile()`` the right
+step function on the production mesh:
+
+  train_4k     -> train_step           (multi-pod: fl_round_step — the
+                                        paper's federated round, pods=silos)
+  prefill_32k  -> prefill_step
+  decode_32k   -> serve_step           (ONE token, 32k KV cache)
+  long_500k    -> serve_step           (ONE token, 524k context;
+                                        SSM/hybrid native, dense via SWA)
+
+The FULL-DEPTH compile proves lowering + sharding coherence and provides
+memory_analysis() (per-chip; the fits proof). XLA's cost_analysis() counts
+while-loop bodies ONCE, so a scan-over-layers model under-reports FLOPs;
+we therefore compile two shallow UNROLLED probes per combo and linearly
+extrapolate FLOPs / bytes / collective-bytes to full depth:
+F(L) = a + b*L (exact: every per-layer cost is layer-count-linear).
+Multi-pod train steps add the local-steps dimension: F(L, T) bilinear,
+four probes.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCHITECTURES,
+    ModelConfig,
+    get_config,
+    get_shape,
+    long_context_config,
+    shape_supported,
+)
+from repro.federated import make_fl_round_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_cache,
+    decode_cache_specs,
+    decode_input_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+from repro.launch.steps import (
+    make_optimizer_for,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    with_compute_mesh,
+)
+from repro.models import get_model
+from repro.roofline import model_flops_estimate, parse_collectives, roofline
+from repro.roofline.hardware import HBM_BYTES
+from repro.sharding.rules import param_specs
+
+LOCAL_STEPS = 4  # local SGD steps per federated round in the multi-pod step
+
+
+class SkipShape(Exception):
+    pass
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _count_params(abs_params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(abs_params))
+
+
+def _active_params(cfg: ModelConfig, abs_params) -> int:
+    total = _count_params(abs_params)
+    if cfg.n_experts == 0:
+        return total
+    expert = 0
+    for leaf in jax.tree.leaves(abs_params):
+        shape = leaf.shape
+        if len(shape) >= 3 and cfg.n_experts in shape[:2]:
+            expert += int(leaf.size)
+    return int(total - expert + expert * cfg.top_k / cfg.n_experts)
+
+
+def resolved_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not shape_supported(cfg, shape):
+        raise SkipShape(f"{arch} skips {shape_name} (DESIGN.md §4)")
+    if shape_name == "long_500k":
+        cfg = long_context_config(cfg)
+    return cfg
+
+
+def build_step(
+    cfg: ModelConfig,
+    shape_name: str,
+    multi_pod: bool,
+    local_steps: int = LOCAL_STEPS,
+):
+    """Returns (jitted_fn, abstract_args, mesh)."""
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = get_model(cfg)
+    abs_params = _abstract_params(model)
+    pspecs = param_specs(abs_params, cfg, mesh)
+
+    if shape.kind == "train":
+        optimizer = make_optimizer_for(cfg)
+        abs_opt = jax.eval_shape(optimizer.init, abs_params)
+        if multi_pod:
+            n_pods = mesh.shape["pod"]
+            stack = lambda tree: jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype), tree
+            )
+            abs_params_mp = stack(abs_params)
+            abs_opt_mp = stack(abs_opt)
+            pspecs_mp = param_specs(abs_params_mp, cfg, mesh, pod_axis=True)
+            ospecs_mp = param_specs(abs_opt_mp, cfg, mesh, pod_axis=True)
+            batch_abs, bspecs = train_input_specs(
+                cfg, shape, pod_axis=True, n_pods=n_pods, local_steps=local_steps
+            )
+            step = with_compute_mesh(
+                make_fl_round_step(model, optimizer, local_steps, unroll=cfg.unroll_layers),
+                mesh,
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    _named(mesh, pspecs_mp),
+                    _named(mesh, ospecs_mp),
+                    _named(mesh, bspecs),
+                ),
+                out_shardings=(_named(mesh, pspecs_mp), _named(mesh, ospecs_mp), None),
+                donate_argnums=(0, 1),
+            )
+            return jitted, (abs_params_mp, abs_opt_mp, batch_abs), mesh
+        ospecs = param_specs(abs_opt, cfg, mesh)
+        batch_abs, bspecs = train_input_specs(cfg, shape)
+        step = with_compute_mesh(
+            make_train_step(model, optimizer, microbatches=cfg.microbatches), mesh
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                _named(mesh, pspecs),
+                _named(mesh, ospecs),
+                _named(mesh, bspecs),
+            ),
+            out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (abs_params, abs_opt, batch_abs), mesh
+
+    if shape.kind == "prefill":
+        batch_abs, bspecs = prefill_input_specs(cfg, shape, pod_axis=multi_pod)
+        step = with_compute_mesh(make_prefill_step(model), mesh)
+        jitted = jax.jit(
+            step, in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs))
+        )
+        return jitted, (abs_params, batch_abs), mesh
+
+    # decode
+    cache_abs = abstract_cache(model, cfg, shape)
+    cspecs = decode_cache_specs(cfg, shape, cache_abs, pod_axis=multi_pod)
+    tok_abs, tok_specs = decode_input_specs(cfg, shape, pod_axis=multi_pod)
+    step = with_compute_mesh(make_serve_step(model, sliding_window=cfg.sliding_window), mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, cspecs),
+            _named(mesh, tok_specs["token"]),
+            _named(mesh, tok_specs["pos"]),
+        ),
+        out_shardings=(None, _named(mesh, cspecs)),
+        donate_argnums=(1,),  # the KV/state cache is updated in place
+    )
+    return jitted, (abs_params, cache_abs, tok_abs["token"], tok_abs["pos"]), mesh
+
+
+# ---------------------------------------------------------------------------
+# Probe-based cost extrapolation
+# ---------------------------------------------------------------------------
+
+def _probe_depths(cfg: ModelConfig) -> Tuple[int, int]:
+    if cfg.arch_type == "hybrid":
+        sb = cfg.attn_period * cfg.moe_every  # superblock length (lcm)
+        import math as _m
+        sb = sb // _m.gcd(cfg.attn_period, cfg.moe_every)
+        return sb, 2 * sb
+    if cfg.n_experts and cfg.first_k_dense:
+        return cfg.first_k_dense + 1, cfg.first_k_dense + 2
+    return 1, 2
+
+
+def _probe_cfg(cfg: ModelConfig, depth: int) -> ModelConfig:
+    kw: Dict[str, Any] = dict(n_layers=depth, unroll_layers=True, microbatches=1)
+    if cfg.arch_type == "encdec":
+        kw["n_encoder_layers"] = depth
+    return cfg.with_overrides(**kw)
+
+
+def _costs_of(cfg, shape_name, multi_pod, local_steps) -> Dict[str, float]:
+    jitted, abs_args, _ = build_step(cfg, shape_name, multi_pod, local_steps)
+    compiled = jitted.lower(*abs_args).compile()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(colls.total_bytes),
+        "counts": colls.counts,
+    }
+
+
+def extrapolated_costs(
+    cfg: ModelConfig, shape_name: str, multi_pod: bool
+) -> Dict[str, Any]:
+    """F(L) = a + b*L linear extrapolation (bilinear in (L, local_steps)
+    for the multi-pod train step)."""
+    L1, L2 = _probe_depths(cfg)
+    L_full = cfg.n_layers
+    shape = get_shape(shape_name)
+    bilinear = multi_pod and shape.kind == "train"
+
+    if not bilinear:
+        c1 = _costs_of(_probe_cfg(cfg, L1), shape_name, multi_pod, LOCAL_STEPS)
+        c2 = _costs_of(_probe_cfg(cfg, L2), shape_name, multi_pod, LOCAL_STEPS)
+        out: Dict[str, Any] = {}
+        for k in ("flops", "bytes", "coll_bytes"):
+            b = (c2[k] - c1[k]) / (L2 - L1)
+            out[k] = max(c1[k] + b * (L_full - L1), 0.0)
+        out["counts"] = {
+            kind: int(
+                max(
+                    c1["counts"][kind]
+                    + (c2["counts"][kind] - c1["counts"][kind])
+                    / (L2 - L1)
+                    * (L_full - L1),
+                    0,
+                )
+            )
+            for kind in c1["counts"]
+        }
+        return out
+
+    # F(L, T) = c0 + c1*L + T*(a + b*L): four probes.
+    T1, T2 = 1, 2
+    f = {}
+    for L in (L1, L2):
+        for T in (T1, T2):
+            f[(L, T)] = _costs_of(_probe_cfg(cfg, L), shape_name, multi_pod, T)
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        # per-step slope in T at each L:
+        sT_L1 = f[(L1, T2)][k] - f[(L1, T1)][k]
+        sT_L2 = f[(L2, T2)][k] - f[(L2, T1)][k]
+        b = (sT_L2 - sT_L1) / (L2 - L1)
+        a = sT_L1 - b * L1
+        base_L1 = f[(L1, T1)][k] - (a + b * L1) * T1
+        base_L2 = f[(L2, T1)][k] - (a + b * L2) * T1
+        c1_ = (base_L2 - base_L1) / (L2 - L1)
+        c0_ = base_L1 - c1_ * L1
+        out[k] = max(c0_ + c1_ * cfg.n_layers + (a + b * cfg.n_layers) * LOCAL_STEPS, 0.0)
+    out["counts"] = f[(L2, T2)]["counts"]  # representative (report-only)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full dry-run of one (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+def run_dryrun(
+    arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+    probes: bool = True,
+) -> Dict[str, Any]:
+    cfg = resolved_config(arch, shape_name)
+    shape = get_shape(shape_name)
+    model = get_model(cfg)
+    abs_params = _abstract_params(model)
+    n_params = _count_params(abs_params)
+    n_active = _active_params(cfg, abs_params)
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    n_chips = 512 if multi_pod else 256
+
+    t0 = time.monotonic()
+    jitted, abs_args, _ = build_step(cfg, shape_name, multi_pod)
+    lowered = jitted.lower(*abs_args)
+    t_lower = time.monotonic() - t0
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    peak = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+
+    if probes:
+        costs = extrapolated_costs(cfg, shape_name, multi_pod)
+    else:
+        raw = compiled.cost_analysis()
+        colls = parse_collectives(compiled.as_text())
+        costs = {
+            "flops": float(raw.get("flops", 0.0)),
+            "bytes": float(raw.get("bytes accessed", 0.0)),
+            "coll_bytes": float(colls.total_bytes),
+            "counts": colls.counts,
+        }
+
+    if shape.kind == "train":
+        n_tokens = shape.global_batch * shape.seq_len
+        if multi_pod:
+            n_tokens *= LOCAL_STEPS
+        kind = "train"
+    else:
+        n_tokens = (
+            shape.global_batch * shape.seq_len
+            if shape.kind == "prefill"
+            else shape.global_batch
+        )
+        kind = "infer"
+    mflops = model_flops_estimate(n_active, n_tokens, kind)
+
+    # cost_analysis numbers are PER-DEVICE (post-SPMD module).
+    report = roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=mesh_desc,
+        n_chips=1,  # per-device flops/bytes: denominators are per-chip peaks
+        cost_analysis={"flops": costs["flops"], "bytes accessed": costs["bytes"]},
+        hlo_text="",
+        model_flops=mflops / n_chips,  # per-chip share of useful FLOPs
+        peak_memory_per_chip=peak,
+    )
+    # collective bytes: parsed shapes are per-shard -> per-chip already.
+    report.collective_bytes = costs["coll_bytes"]
+    from repro.roofline.hardware import ICI_LINK_BANDWIDTH
+    report.collective_s = costs["coll_bytes"] / ICI_LINK_BANDWIDTH
+    terms = {
+        "compute": report.compute_s,
+        "memory": report.memory_s,
+        "collective": report.collective_s,
+    }
+    report.dominant = max(terms, key=terms.get)
+
+    row = report.to_row()
+    row.update(
+        mesh=mesh_desc,
+        chips=n_chips,
+        n_params=n_params,
+        n_params_active=n_active,
+        n_tokens=n_tokens,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        collective_counts=costs["counts"],
+        fits=bool(peak <= HBM_BYTES),
+        kind=shape.kind,
+    )
+    if verbose:
+        print(f"== {arch} x {shape_name} [{mesh_desc}] ==")
+        print(f"  params          : {n_params:,} (active {n_active:,})")
+        print(f"  memory_analysis : args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"out={mem.output_size_in_bytes/1e9:.2f}GB temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+              f"alias={mem.alias_size_in_bytes/1e9:.2f}GB (per chip)")
+        print(f"  peak/chip       : {peak/1e9:.2f} GB "
+              f"({'FITS' if row['fits'] else 'OVER'} 16 GiB HBM)")
+        print(f"  per-chip cost   : flops={row['hlo_flops']:.3e} bytes={row['hlo_bytes']:.3e} "
+              f"coll_bytes={row['collective_bytes']:.3e}")
+        print(f"  collectives     : {costs['counts']}")
+        print(f"  roofline        : compute={row['compute_s']*1e3:.2f}ms "
+              f"memory={row['memory_s']*1e3:.2f}ms collective={row['collective_s']*1e3:.2f}ms "
+              f"-> {row['dominant']}-bound")
+        if row["useful_ratio"]:
+            print(f"  useful FLOPs    : {row['useful_ratio']*100:.1f}%")
+        print(f"  lower/compile   : {t_lower:.1f}s / {t_compile:.1f}s")
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep all (arch x shape)")
+    ap.add_argument("--no-probes", action="store_true", help="skip cost probes")
+    ap.add_argument("--json", default=None, help="append JSON rows to this file")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        from repro.configs import INPUT_SHAPES
+        for a in sorted(ARCHITECTURES):
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        combos = [(args.arch, args.shape)]
+
+    rows = []
+    failures = []
+    for arch, shape in combos:
+        try:
+            rows.append(run_dryrun(arch, shape, args.multi_pod, probes=not args.no_probes))
+        except SkipShape as e:
+            print(f"SKIP {arch} x {shape}: {e}")
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} x {shape}: {e!r}")
+    if args.json and rows:
+        with open(args.json, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

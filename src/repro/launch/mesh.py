@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init; the dry-run must
+set XLA_FLAGS before any jax call).
+
+  single-pod : (data=16, model=16)            — v5e-256
+  multi-pod  : (pod=2, data=16, model=16)     — 2 pods = 512 chips;
+               "pod" is the FL-silo axis (DESIGN.md §3/§5)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (forced-host) devices exist — tests."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,123 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — plus the matching
+PartitionSpecs. This is what the dry-run lowers against.
+
+Stub frontends (assignment carve-out): the VLM's patch embeddings and the
+audio model's frame embeddings appear here as precomputed-embedding
+inputs of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import InputShape, ModelConfig
+from repro.sharding.rules import batch_specs
+
+
+def train_input_specs(
+    cfg: ModelConfig, shape: InputShape, pod_axis: bool = False,
+    n_pods: int = 1, local_steps: int = 1,
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """Batch SDS for train_step (single-pod) or fl_round_step (multi-pod:
+    leading (n_pods, local_steps) dims)."""
+    B, S = shape.global_batch, shape.seq_len
+    if pod_axis:
+        lead: Tuple[int, ...] = (n_pods, local_steps, B // n_pods)
+    else:
+        lead = (B,)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct(lead + (S,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (S,), jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.n_image_tokens, cfg.d_model), cfg.activation_dtype
+        )
+    if cfg.arch_type == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            lead + (cfg.encoder_seq, cfg.d_model), cfg.activation_dtype
+        )
+    shardings = batch_specs(cfg, shape, pod_axis=pod_axis)
+    if pod_axis:
+        # (pod, step, batch, ...): step unsharded.
+        shardings = {
+            k: P(v[0], None, *v[1:]) for k, v in shardings.items()
+        }
+    return specs, shardings
+
+
+def prefill_input_specs(
+    cfg: ModelConfig, shape: InputShape, pod_axis: bool = False
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """Prefill processes the full prompt; multi-pod serving shards the
+    request batch over (pod, data) — pods are serving replicas."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    batch_axes: Any = ("pod", "data") if pod_axis else "data"
+    shardings: Dict[str, P] = {"tokens": P(batch_axes, None)}
+    if cfg.arch_type == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), cfg.activation_dtype
+        )
+        shardings["patch_embeds"] = P(batch_axes, None, None)
+    if cfg.arch_type == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.activation_dtype
+        )
+        shardings["frames"] = P(batch_axes, None, None)
+    return specs, shardings
+
+
+def decode_input_specs(
+    cfg: ModelConfig, shape: InputShape, pod_axis: bool = False
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, Any]]:
+    """Token + position for serve_step (ONE new token against a seq_len
+    KV cache)."""
+    B = shape.global_batch
+    long_ctx = B < 2
+    if long_ctx:
+        batch_spec = None
+    else:
+        batch_spec = ("pod", "data") if pod_axis else "data"
+    specs = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    shardings = {"token": P(batch_spec, None), "pos": P()}
+    return specs, shardings
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: InputShape):
+    """Cache SDS via eval_shape (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: InputShape, cache_abs, pod_axis: bool = False):
+    """Cache PartitionSpecs; multi-pod decode adds "pod" to whatever axis
+    carries the batch (decode_32k) or the KV sequence (long_500k)."""
+    from repro.sharding.rules import cache_specs as base_specs
+
+    specs = base_specs(cfg, shape, cache_abs)
+    if not pod_axis:
+        return specs
+    long_ctx = shape.global_batch < 2
+
+    def upgrade(p: P) -> P:
+        dims = list(p)
+        for i, d in enumerate(dims):
+            if not long_ctx and d == "data":
+                dims[i] = ("pod", "data")
+                break
+            if long_ctx and d == ("data", "model"):
+                dims[i] = ("pod", "data", "model")
+                break
+        return P(*dims)
+
+    return jax.tree.map(upgrade, specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,86 @@
+"""Jittable step functions the launcher / dry-run lower:
+
+  train_step    — loss + grad + optimizer update, with optional gradient
+                  accumulation (cfg.microbatches) so big archs' activations
+                  fit per-device HBM;
+  prefill_step  — full-prompt forward (inference);
+  serve_step    — ONE new token against a seq_len KV cache;
+  fl_round_step — multi-pod federated round (repro.federated.pod_fedavg).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import ModelFamily
+from repro.optim import make_optimizer
+from repro.sharding.context import compute_mesh
+
+
+def with_compute_mesh(fn, mesh):
+    """Trace `fn` under the compute-mesh context so scan_layers can apply
+    FSDP / sequence-parallel constraints."""
+
+    def wrapped(*args):
+        with compute_mesh(mesh):
+            return fn(*args)
+
+    return wrapped
+
+
+def make_optimizer_for(cfg: ModelConfig):
+    return make_optimizer("adamw", 3e-4, state_dtype=cfg.optimizer_state_dtype)
+
+
+def make_train_step(model: ModelFamily, optimizer: Any, microbatches: int = 1):
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(jnp.zeros_like, params)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                return (loss_acc + loss, g_acc), None
+
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro
+            )
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model: ModelFamily):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: ModelFamily, sliding_window: Optional[int] = None):
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(
+            params, token, cache, pos, sliding_window=sliding_window
+        )
+        return logits, new_cache
+
+    return serve_step

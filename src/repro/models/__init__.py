@@ -1,0 +1,4 @@
+"""Model zoo: six architecture families behind one `ModelFamily` API."""
+from .api import ModelFamily, get_model
+
+__all__ = ["ModelFamily", "get_model"]

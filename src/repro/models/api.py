@@ -1,0 +1,158 @@
+"""Unified model API: one dispatch point over the six architecture
+families. The launcher, dry-run, federated runtime and tests all talk to
+models exclusively through `ModelFamily`.
+
+Per-family step signatures (all inputs batched, shardable):
+  train/prefill inputs : dense/moe/ssm/hybrid -> {tokens, labels}
+                         vlm                  -> {tokens, labels, patch_embeds}
+                         encdec               -> {frames, tokens, labels}
+  decode inputs        : {token, pos} + family-specific cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import encdec as E
+from . import hybrid as H
+from . import ssm_lm as S
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFamily:
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Params:
+        a = self.cfg.arch_type
+        if a in ("dense", "moe", "vlm"):
+            return T.init_lm(rng, self.cfg)
+        if a == "ssm":
+            return S.init_ssm_lm(rng, self.cfg)
+        if a == "hybrid":
+            return H.init_hybrid_lm(rng, self.cfg)
+        if a == "encdec":
+            return E.init_encdec(rng, self.cfg)
+        raise ValueError(f"unknown arch_type {a!r}")
+
+    # -- loss (training) -------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        a = cfg.arch_type
+        if a in ("dense", "moe"):
+            return T.lm_loss(params, batch["tokens"], batch["labels"], cfg)
+        if a == "vlm":
+            return T.lm_loss(
+                params, batch["tokens"], batch["labels"], cfg,
+                prefix_embeds=batch["patch_embeds"],
+            )
+        if a == "ssm":
+            logits, _ = S.ssm_forward(params, batch["tokens"], cfg)
+            return _nll(logits, batch["labels"])
+        if a == "hybrid":
+            logits, aux = H.hybrid_forward(params, batch["tokens"], cfg)
+            return _nll(logits, batch["labels"]) + cfg.router_aux_coef * aux
+        if a == "encdec":
+            return E.encdec_loss(params, batch["frames"], batch["tokens"], batch["labels"], cfg)
+        raise ValueError(a)
+
+    # -- prefill (forward w/o loss; returns logits) --------------------------------
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        a = cfg.arch_type
+        if a in ("dense", "moe"):
+            logits, _ = T.lm_forward(params, batch["tokens"], cfg)
+            return logits
+        if a == "vlm":
+            logits, _ = T.lm_forward(
+                params, batch["tokens"], cfg, prefix_embeds=batch["patch_embeds"]
+            )
+            return logits
+        if a == "ssm":
+            logits, _ = S.ssm_forward(params, batch["tokens"], cfg)
+            return logits
+        if a == "hybrid":
+            logits, _ = H.hybrid_forward(params, batch["tokens"], cfg)
+            return logits
+        if a == "encdec":
+            memory = E.encode(params, batch["frames"], cfg)
+            return E.decode_forward(params, batch["tokens"], memory, cfg)
+        raise ValueError(a)
+
+    # -- decode ----------------------------------------------------------------
+    @property
+    def supports_decode(self) -> bool:
+        return True  # every assigned family has a decoder
+
+    def init_cache(self, batch: int, max_seq: int) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        a = cfg.arch_type
+        if a in ("dense", "moe", "vlm"):
+            return T.init_kv_cache(cfg, batch, max_seq)
+        if a == "ssm":
+            return S.init_ssm_cache(cfg, batch)
+        if a == "hybrid":
+            return H.init_hybrid_cache(cfg, batch, max_seq)
+        if a == "encdec":
+            return E.init_encdec_cache(cfg, batch, max_seq)
+        raise ValueError(a)
+
+    def decode_step(
+        self,
+        params: Params,
+        token: jnp.ndarray,
+        cache: Dict[str, jnp.ndarray],
+        pos: jnp.ndarray,
+        sliding_window: Optional[int] = None,
+    ):
+        cfg = self.cfg
+        a = cfg.arch_type
+        if a in ("dense", "moe", "vlm"):
+            return T.lm_decode_step(params, token, cache, pos, cfg, sliding_window=sliding_window)
+        if a == "ssm":
+            return S.ssm_decode_step(params, token, cache, cfg)
+        if a == "hybrid":
+            return H.hybrid_decode_step(params, token, cache, pos, cfg, sliding_window=sliding_window)
+        if a == "encdec":
+            return E.encdec_decode_step(params, token, cache, pos, cfg)
+        raise ValueError(a)
+
+    # -- bookkeeping --------------------------------------------------------------
+    def param_count(self, params: Params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+    def active_param_count(self, params: Params) -> int:
+        """Active params per token (MoE: top_k + shared of n_experts)."""
+        cfg = self.cfg
+        total = self.param_count(params)
+        if cfg.n_experts == 0:
+            return total
+        expert_leaves = 0
+        def count_experts(d, inside_moe=False):
+            nonlocal expert_leaves
+            if isinstance(d, dict):
+                for k, v in d.items():
+                    count_experts(v, inside_moe or k in ("w_gate", "w_up", "w_down") and False)
+            return
+        # Routed-expert tensors have leading dim n_experts.
+        for leaf in jax.tree.leaves(params):
+            if leaf.ndim == 3 and leaf.shape[0] == cfg.n_experts:
+                expert_leaves += int(leaf.size)
+        active_frac = cfg.top_k / cfg.n_experts
+        return int(total - expert_leaves + expert_leaves * active_frac)
+
+
+def _nll(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0])
+
+
+def get_model(cfg: ModelConfig) -> ModelFamily:
+    return ModelFamily(cfg)

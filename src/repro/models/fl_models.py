@@ -1,0 +1,211 @@
+"""The paper's three FL application models (§5.1), in JAX:
+
+  * TIL        — VGG16-style CNN for tumor-infiltrating-lymphocyte patches
+                 (Saltz et al. 2018; the paper trains VGG16).
+  * FEMNIST    — "more robust than LEAF reference": 2 conv layers followed by
+                 10 fully-connected layers of 4096 neurons (62 classes).
+  * Shakespeare— LEAF reference model: embedding dim 8 + 2-layer LSTM(256),
+                 next-character prediction.
+
+These run end-to-end on CPU in the examples / federated integration tests
+(with reduced widths where the paper's sizes would be needlessly slow).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Common helpers
+# ---------------------------------------------------------------------------
+
+def _dense(rng, n_in, n_out, dtype=jnp.float32) -> Params:
+    k1, _ = jax.random.split(rng)
+    scale = math.sqrt(2.0 / n_in)
+    return {
+        "w": (jax.random.normal(k1, (n_in, n_out)) * scale).astype(dtype),
+        "b": jnp.zeros((n_out,), dtype),
+    }
+
+
+def _conv(rng, k, c_in, c_out, dtype=jnp.float32) -> Params:
+    scale = math.sqrt(2.0 / (k * k * c_in))
+    return {
+        "w": (jax.random.normal(rng, (k, k, c_in, c_out)) * scale).astype(dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def _apply_conv(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _maxpool(x: jnp.ndarray, k: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# FEMNIST CNN (2 conv + n_fc x fc_width FC; paper: 10 x 4096)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FemnistConfig:
+    n_classes: int = 62
+    image_size: int = 28
+    n_fc: int = 10
+    fc_width: int = 4096
+
+
+def init_femnist_cnn(rng: jax.Array, cfg: FemnistConfig = FemnistConfig()) -> Params:
+    ks = jax.random.split(rng, 3 + cfg.n_fc)
+    p: Params = {
+        "conv1": _conv(ks[0], 5, 1, 32),
+        "conv2": _conv(ks[1], 5, 32, 64),
+    }
+    feat = (cfg.image_size // 4) ** 2 * 64
+    widths = [feat] + [cfg.fc_width] * cfg.n_fc
+    for i in range(cfg.n_fc):
+        p[f"fc{i}"] = _dense(ks[2 + i], widths[i], widths[i + 1])
+    p["head"] = _dense(ks[-1], widths[-1], cfg.n_classes)
+    return p
+
+
+def femnist_forward(p: Params, x: jnp.ndarray, cfg: FemnistConfig = FemnistConfig()) -> jnp.ndarray:
+    """x: (B, 28, 28, 1) -> logits (B, n_classes)."""
+    h = _maxpool(jax.nn.relu(_apply_conv(p["conv1"], x)))
+    h = _maxpool(jax.nn.relu(_apply_conv(p["conv2"], h)))
+    h = h.reshape(h.shape[0], -1)
+    for i in range(cfg.n_fc):
+        h = jax.nn.relu(h @ p[f"fc{i}"]["w"] + p[f"fc{i}"]["b"])
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# TIL VGG16 (13 conv + 3 FC; binary: with / without TILs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VGGConfig:
+    n_classes: int = 2
+    image_size: int = 64
+    # Standard VGG16 conv plan: (channels, n_convs) per stage.
+    stages: Tuple[Tuple[int, int], ...] = ((64, 2), (128, 2), (256, 3), (512, 3), (512, 3))
+    fc_width: int = 4096
+
+
+def init_vgg16(rng: jax.Array, cfg: VGGConfig = VGGConfig()) -> Params:
+    p: Params = {}
+    c_in = 3
+    idx = 0
+    n_convs = sum(n for _, n in cfg.stages)
+    ks = jax.random.split(rng, n_convs + 3)
+    for c_out, n in cfg.stages:
+        for _ in range(n):
+            p[f"conv{idx}"] = _conv(ks[idx], 3, c_in, c_out)
+            c_in = c_out
+            idx += 1
+    feat = (cfg.image_size // 2 ** len(cfg.stages)) ** 2 * cfg.stages[-1][0]
+    p["fc0"] = _dense(ks[idx], feat, cfg.fc_width)
+    p["fc1"] = _dense(ks[idx + 1], cfg.fc_width, cfg.fc_width)
+    p["head"] = _dense(ks[idx + 2], cfg.fc_width, cfg.n_classes)
+    return p
+
+
+def vgg16_forward(p: Params, x: jnp.ndarray, cfg: VGGConfig = VGGConfig()) -> jnp.ndarray:
+    """x: (B, H, W, 3) -> logits."""
+    h = x
+    idx = 0
+    for _, n in cfg.stages:
+        for _ in range(n):
+            h = jax.nn.relu(_apply_conv(p[f"conv{idx}"], h))
+            idx += 1
+        h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc0"]["w"] + p["fc0"]["b"])
+    h = jax.nn.relu(h @ p["fc1"]["w"] + p["fc1"]["b"])
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Shakespeare LSTM (embedding 8, 2 x LSTM(256), next-char prediction)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LSTMConfig:
+    vocab_size: int = 80
+    embed_dim: int = 8
+    hidden: int = 256
+    n_layers: int = 2
+
+
+def _init_lstm_layer(rng, n_in, hidden) -> Params:
+    k1, k2 = jax.random.split(rng)
+    scale = 1.0 / math.sqrt(hidden)
+    return {
+        "wx": (jax.random.normal(k1, (n_in, 4 * hidden)) * scale).astype(jnp.float32),
+        "wh": (jax.random.normal(k2, (hidden, 4 * hidden)) * scale).astype(jnp.float32),
+        "b": jnp.zeros((4 * hidden,), jnp.float32),
+    }
+
+
+def init_shakespeare_lstm(rng: jax.Array, cfg: LSTMConfig = LSTMConfig()) -> Params:
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.embed_dim)) * 0.1).astype(jnp.float32),
+    }
+    n_in = cfg.embed_dim
+    for i in range(cfg.n_layers):
+        p[f"lstm{i}"] = _init_lstm_layer(ks[1 + i], n_in, cfg.hidden)
+        n_in = cfg.hidden
+    p["head"] = _dense(ks[-1], cfg.hidden, cfg.vocab_size)
+    return p
+
+
+def _lstm_scan(p: Params, x: jnp.ndarray, hidden: int) -> jnp.ndarray:
+    """x: (B, S, n_in) -> (B, S, hidden)."""
+    B = x.shape[0]
+    h0 = jnp.zeros((B, hidden), x.dtype)
+    c0 = jnp.zeros((B, hidden), x.dtype)
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def shakespeare_forward(p: Params, tokens: jnp.ndarray, cfg: LSTMConfig = LSTMConfig()) -> jnp.ndarray:
+    """tokens: (B, S) -> logits (B, S, vocab)."""
+    h = p["embed"][tokens]
+    for i in range(cfg.n_layers):
+        h = _lstm_scan(p[f"lstm{i}"], h, cfg.hidden)
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def shakespeare_loss(p: Params, tokens: jnp.ndarray, labels: jnp.ndarray, cfg: LSTMConfig = LSTMConfig()) -> jnp.ndarray:
+    logits = shakespeare_forward(p, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))

@@ -1,0 +1,258 @@
+"""Jamba-style hybrid: attention interleaved 1:(attn_period-1) with Mamba-2
+blocks, MoE replacing the dense FFN on every other layer
+(arXiv:2403.19887 — Jamba 1.5).
+
+The layer pattern repeats every `attn_period` layers (Jamba: 8 — seven
+Mamba blocks then one attention block), and the FFN alternates
+dense / MoE with period `moe_every` (Jamba: 2). We scan over *super-blocks*
+of lcm(attn_period, moe_every) layers so the scanned body is homogeneous.
+
+Decode carries a heterogeneous cache: per-superblock stacked Mamba
+(conv, ssm) states plus KV caches for the attention layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    causal_attention,
+    decode_attention,
+    embed,
+    grad_dtype_guard,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    init_lm_head,
+    lm_head,
+    scan_layers,
+    stack_layers,
+    unembed,
+)
+from .mamba2 import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_decode_step,
+    mamba_forward,
+)
+from .moe import apply_moe, init_moe
+
+
+def _superblock_len(cfg: ModelConfig) -> int:
+    return (cfg.attn_period * cfg.moe_every) // math.gcd(cfg.attn_period, cfg.moe_every)
+
+
+def _layer_kinds(cfg: ModelConfig, sb_len: int):
+    """Per-layer (is_attn, is_moe) pattern inside one super-block."""
+    kinds = []
+    for i in range(sb_len):
+        is_attn = (i % cfg.attn_period) == (cfg.attn_period - 1)
+        is_moe = cfg.n_experts > 0 and (i % cfg.moe_every) == (cfg.moe_every - 1)
+        kinds.append((is_attn, is_moe))
+    return kinds
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_superblock(rng: jax.Array, cfg: ModelConfig) -> Params:
+    sb_len = _superblock_len(cfg)
+    kinds = _layer_kinds(cfg, sb_len)
+    layers = []
+    rngs = jax.random.split(rng, sb_len)
+    for (is_attn, is_moe), r in zip(kinds, rngs):
+        k1, k2 = jax.random.split(r)
+        p: Params = {"norm1": init_norm(cfg, cfg.d_model), "norm2": init_norm(cfg, cfg.d_model)}
+        if is_attn:
+            p["mixer"] = init_attention(k1, cfg)
+        else:
+            p["mixer"] = init_mamba(k1, cfg)
+        if is_moe:
+            p["ffn"] = init_moe(k2, cfg)
+        else:
+            p["ffn"] = init_mlp(k2, cfg)
+        layers.append(p)
+    return {f"l{i}": p for i, p in enumerate(layers)}
+
+
+def init_hybrid_lm(rng: jax.Array, cfg: ModelConfig) -> Params:
+    sb_len = _superblock_len(cfg)
+    assert cfg.n_layers % sb_len == 0, (
+        f"n_layers {cfg.n_layers} not a multiple of super-block {sb_len}"
+    )
+    n_sb = cfg.n_layers // sb_len
+    k_embed, k_sb, k_head = jax.random.split(rng, 3)
+    p: Params = {
+        "embed": init_embedding(k_embed, cfg),
+        "superblocks": stack_layers(lambda r: _init_superblock(r, cfg), k_sb, n_sb),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_lm_head(k_head, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_mixer(p, x, cfg, positions, sw):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = causal_attention(q, k, v, sliding_window=sw)
+    return o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def hybrid_forward(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    sliding_window: Optional[int] = None,
+):
+    """Returns (logits, aux)."""
+    sw = sliding_window if sliding_window is not None else cfg.sliding_window
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    sb_len = _superblock_len(cfg)
+    kinds = _layer_kinds(cfg, sb_len)
+
+    def sb_body(carry, sb_params):
+        x, aux = carry
+        for i, (is_attn, is_moe) in enumerate(kinds):
+            lp = sb_params[f"l{i}"]
+            h = apply_norm(lp["norm1"], x, cfg.norm_type)
+            if is_attn:
+                x = x + _attn_mixer(lp["mixer"], h, cfg, positions, sw)
+            else:
+                x = x + mamba_forward(lp["mixer"], h, cfg)
+            h2 = apply_norm(lp["norm2"], x, cfg.norm_type)
+            if is_moe:
+                y, a = apply_moe(lp["ffn"], h2, cfg)
+                aux = aux + a
+            else:
+                y = apply_mlp(lp["ffn"], h2)
+            x = x + y
+        return (x, aux), None
+
+    body = jax.checkpoint(sb_body) if cfg.remat else sb_body
+    (x, aux), _ = scan_layers(
+        body, (x, jnp.zeros((), jnp.float32)), params["superblocks"],
+        cfg, unroll=cfg.unroll_layers,
+    )
+
+    x = grad_dtype_guard(x)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = lm_head(params["lm_head"], x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, jnp.ndarray]:
+    """Stacked per-superblock caches: Mamba states for every non-attn slot,
+    one KV cache per attention slot."""
+    sb_len = _superblock_len(cfg)
+    n_sb = cfg.n_layers // sb_len
+    kinds = _layer_kinds(cfg, sb_len)
+    n_mamba = sum(1 for a, _ in kinds if not a)
+    n_attn = sb_len - n_mamba
+    dt = cfg.activation_dtype
+    m = init_mamba_cache(cfg, batch, dt)
+    return {
+        "conv": jnp.zeros((n_sb, n_mamba) + m["conv"].shape, dt),
+        "ssm": jnp.zeros((n_sb, n_mamba) + m["ssm"].shape, jnp.float32),
+        "k": jnp.zeros((n_sb, n_attn, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((n_sb, n_attn, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt),
+    }
+
+
+def hybrid_decode_step(
+    params: Params,
+    token: jnp.ndarray,        # (B, 1)
+    cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray,          # scalar int32
+    cfg: ModelConfig,
+    sliding_window: Optional[int] = None,
+):
+    sw = sliding_window if sliding_window is not None else cfg.sliding_window
+    x = embed(params["embed"], token).astype(cfg.activation_dtype)
+    B = x.shape[0]
+    sb_len = _superblock_len(cfg)
+    kinds = _layer_kinds(cfg, sb_len)
+
+    def sb_body(x, inp):
+        sb_params, conv_c, ssm_c, k_c, v_c = inp
+        mi = 0  # mamba slot index
+        ai = 0  # attention slot index
+        new_conv, new_ssm, new_k, new_v = [], [], [], []
+        for i, (is_attn, is_moe) in enumerate(kinds):
+            lp = sb_params[f"l{i}"]
+            h = apply_norm(lp["norm1"], x, cfg.norm_type)
+            if is_attn:
+                p = lp["mixer"]
+                q = (h @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+                k = (h @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+                v = (h @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+                posb = jnp.broadcast_to(pos[None], (B, 1))
+                q = apply_rope(q, posb, cfg.rope_theta)
+                k = apply_rope(k, posb, cfg.rope_theta)
+                kc = jax.lax.dynamic_update_slice_in_dim(k_c[ai], k, pos, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(v_c[ai], v, pos, axis=1)
+                o = decode_attention(q, kc, vc, pos, sliding_window=sw)
+                x = x + o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+                new_k.append(kc)
+                new_v.append(vc)
+                ai += 1
+            else:
+                mc = {"conv": conv_c[mi], "ssm": ssm_c[mi]}
+                o, mc = mamba_decode_step(lp["mixer"], h, mc, cfg)
+                x = x + o
+                new_conv.append(mc["conv"])
+                new_ssm.append(mc["ssm"])
+                mi += 1
+            h2 = apply_norm(lp["norm2"], x, cfg.norm_type)
+            if is_moe:
+                y, _ = apply_moe(lp["ffn"], h2, cfg)
+            else:
+                y = apply_mlp(lp["ffn"], h2)
+            x = x + y
+        outs = (
+            jnp.stack(new_conv) if new_conv else conv_c,
+            jnp.stack(new_ssm) if new_ssm else ssm_c,
+            jnp.stack(new_k) if new_k else k_c,
+            jnp.stack(new_v) if new_v else v_c,
+        )
+        return x, outs
+
+    x, (conv_n, ssm_n, k_n, v_n) = scan_layers(
+        sb_body,
+        x,
+        (params["superblocks"], cache["conv"], cache["ssm"], cache["k"], cache["v"]),
+        cfg, unroll=cfg.unroll_layers,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = lm_head(params["lm_head"], x)
+    return logits, {"conv": conv_n, "ssm": ssm_n, "k": k_n, "v": v_n}

@@ -1,0 +1,411 @@
+"""Shared model layers: norms, rotary embeddings, GQA attention (full /
+chunked / sliding-window / cached-decode), SwiGLU MLP, embeddings.
+
+Everything is pure-functional: params are nested dicts of jnp arrays, and
+per-layer params are stacked along a leading axis so the transformer can
+`lax.scan` over layers (small HLO, fast AOT compile).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm_type == "nonparametric":
+        return {}
+    p = {"scale": jnp.ones((d,), cfg.weight_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.weight_dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, norm_type: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * rms
+        out = out * p["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if norm_type == "layernorm":
+            out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        # "nonparametric" (OLMo): no affine transform at all.
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(rng: jax.Array, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    scale = 1.0 / math.sqrt(d)
+    wdt = cfg.weight_dtype
+    return {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * scale).astype(wdt),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * scale).astype(wdt),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * scale).astype(wdt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * scale).astype(wdt),
+    }
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Sq, KV, G, D), k: (B, Sk, KV, D) -> (B, KV, G, Sq, Sk) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(w: jnp.ndarray, v: jnp.ndarray, dtype) -> jnp.ndarray:
+    """w: (B, KV, G, Sq, Sk), v: (B, Sk, KV, D) -> (B, Sq, KV, G, D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", w.astype(dtype), v)
+
+
+def causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    sliding_window: Optional[int] = None,
+    q_chunk: int = 1024,
+    q_offset: int = 0,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Chunked causal (optionally sliding-window) attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D); H = KV * G. Queries attend to
+    keys at absolute positions <= their own; `q_offset` shifts query
+    positions (used when Sq != Sk). Scans over query chunks so peak memory
+    is O(Sk * q_chunk) instead of O(Sq * Sk) — the XLA-level analogue of the
+    Pallas flash kernel in `repro.kernels.flash_attention`.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    kpos = jnp.arange(Sk)
+
+    def block(q_blk: jnp.ndarray, qpos_blk: jnp.ndarray) -> jnp.ndarray:
+        s = _gqa_scores(q_blk, k) * scale                  # (B,KV,G,cq,Sk)
+        mask = qpos_blk[:, None] >= kpos[None, :]          # causal
+        if sliding_window is not None:
+            mask &= kpos[None, :] > (qpos_blk[:, None] - sliding_window)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        return _gqa_combine(w, v, q.dtype)                 # (B,cq,KV,G,D)
+
+    if Sq <= q_chunk:
+        out = block(qg, q_offset + jnp.arange(Sq))
+    else:
+        n_chunks = -(-Sq // q_chunk)
+        pad = n_chunks * q_chunk - Sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qg_c = qg_p.reshape(B, n_chunks, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+        pos_c = (q_offset + jnp.arange(n_chunks * q_chunk)).reshape(n_chunks, q_chunk)
+
+        def body(_, inp):
+            qb, pb = inp
+            return None, block(qb, pb)
+
+        _, out_c = jax.lax.scan(body, None, (qg_c, pos_c), unroll=unroll)
+        out = out_c.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_chunks * q_chunk, KV, G, D)
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, D)
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional (encoder / cross) attention. Shapes as above."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = _gqa_scores(qg, k) / math.sqrt(D)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(w, v, q.dtype)
+    return out.reshape(B, Sq, H, D)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    sliding_window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token decode against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); pos: scalar int32 — index of the
+    new token (keys at indices <= pos are valid).
+
+    With a sliding window and a cache much longer than the window, the
+    window is sliced out of the cache first so score FLOPs/bytes scale with
+    the window, not the cache length.
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, 1, KV, H // KV, D)
+
+    if sliding_window is not None and S > 2 * sliding_window:
+        W = sliding_window
+        start = jnp.clip(pos - (W - 1), 0, S - W)
+        k_w = jax.lax.dynamic_slice_in_dim(k_cache, start, W, axis=1)
+        v_w = jax.lax.dynamic_slice_in_dim(v_cache, start, W, axis=1)
+        kpos = start + jnp.arange(W)
+        s = _gqa_scores(qg, k_w) * scale                  # (B,KV,G,1,W)
+        valid = (kpos <= pos) & (kpos > pos - W)
+        s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        out = _gqa_combine(w, v_w, q.dtype)
+        return out.reshape(B, 1, H, D)
+
+    kpos = jnp.arange(S)
+    s = _gqa_scores(qg, k_cache) * scale                  # (B,KV,G,1,S)
+    valid = kpos <= pos
+    if sliding_window is not None:
+        valid &= kpos > pos - sliding_window
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = _gqa_combine(w, v_cache, q.dtype)
+    return out.reshape(B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    wdt = cfg.weight_dtype
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) / math.sqrt(d)).astype(wdt),
+        "w_up": (jax.random.normal(k2, (d, f)) / math.sqrt(d)).astype(wdt),
+        "w_down": (jax.random.normal(k3, (f, d)) / math.sqrt(f)).astype(wdt),
+    }
+
+
+def apply_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU."""
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(rng: jax.Array, cfg: ModelConfig) -> Params:
+    e = jax.random.normal(rng, (cfg.vocab_size, cfg.d_model)) * 0.02
+    return {"embedding": e.astype(cfg.weight_dtype)}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["embedding"][tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum(
+        "bsd,vd->bsv", x, p["embedding"], preferred_element_type=jnp.float32
+    )
+
+
+def init_lm_head(rng: jax.Array, cfg: ModelConfig) -> Params:
+    w = jax.random.normal(rng, (cfg.d_model, cfg.vocab_size)) / math.sqrt(cfg.d_model)
+    return {"w": w.astype(cfg.weight_dtype)}
+
+
+def lm_head(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bsd,dv->bsv", x, p["w"], preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Backward-dtype guard
+# ---------------------------------------------------------------------------
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_dtype_guard(x: jnp.ndarray, dtype_str: str) -> jnp.ndarray:
+    return x
+
+
+def _gdg_fwd(x, dtype_str):
+    return x, None
+
+
+def _gdg_bwd(dtype_str, _, g):
+    return (g.astype(dtype_str),)
+
+
+_grad_dtype_guard.defvjp(_gdg_fwd, _gdg_bwd)
+
+
+def grad_dtype_guard(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity whose COTANGENT is cast back to the primal dtype.
+
+    The LM loss computes logits/softmax in fp32 (stability), so the
+    incoming cotangent of the unembed matmul is fp32 — without a guard the
+    entire backward residual stream runs (and the layer-scan backward
+    saves activations) in fp32, doubling activation memory. Placing this
+    at the head boundary keeps backprop through the stack in bf16, the
+    standard mixed-precision recipe.
+    """
+    return _grad_dtype_guard(x, str(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Layer stacking / scanning
+# ---------------------------------------------------------------------------
+
+def stack_layers(init_fn, rng: jax.Array, n_layers: int) -> Params:
+    """Initialize n_layers homogeneous layers and stack each leaf on axis 0."""
+    rngs = jax.random.split(rng, n_layers)
+    layers = [init_fn(r) for r in rngs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _fsdp_gather(w, gathered_sharding, rest_sharding):
+    """All-gather a weight slice for compute; REDUCE-SCATTER its gradient.
+
+    with_sharding_constraint's transpose re-applies the same constraint, so
+    a plain constraint would leave the per-layer weight cotangents in the
+    gathered (model-only) layout — the scan then stacks FULL unsharded
+    gradients (at jamba scale: tens of GB per tensor). Forcing the
+    cotangent back to the at-rest FSDP sharding makes XLA reduce-scatter
+    each layer's gradient inside the loop.
+    """
+    return jax.lax.with_sharding_constraint(w, gathered_sharding)
+
+
+def _fg_fwd(w, gathered_sharding, rest_sharding):
+    return jax.lax.with_sharding_constraint(w, gathered_sharding), None
+
+
+def _fg_bwd(gathered_sharding, rest_sharding, _, g):
+    return (jax.lax.with_sharding_constraint(g, rest_sharding),)
+
+
+_fsdp_gather.defvjp(_fg_fwd, _fg_bwd)
+
+
+def scan_layers(body, init, xs, cfg: ModelConfig, unroll: bool = False):
+    """lax.scan over stacked layers with explicit FSDP gather and
+    sequence-parallel residual constraints.
+
+    FSDP (cfg.fsdp): each scanned slice of the parameter stack is
+    constrained to its compute-time sharding ("model" axes only) INSIDE the
+    body — an explicit per-layer all-gather over "data", so the at-rest
+    FSDP sharding never conflicts with the batch axis in the layer's dots.
+    The gathered slice is transient (scan-local), which is what keeps
+    jamba-398b under HBM.
+
+    Sequence parallelism (cfg.sequence_parallel): the residual-stream carry
+    (any rank-3 (B, S, D) array) is constrained to seq@"model" at layer
+    boundaries, so the remat-saved per-layer inputs shard over "model".
+
+    Both are no-ops without an active compute mesh (tests, CPU smoke).
+    """
+    from repro.sharding.context import current_compute_mesh
+
+    mesh = current_compute_mesh()
+    if mesh is None or not (cfg.fsdp or cfg.sequence_parallel):
+        return jax.lax.scan(body, init, xs, unroll=unroll)
+
+    from repro.sharding.rules import compute_specs
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    data = mesh.shape["data"]
+    model = mesh.shape["model"]
+
+    def constrain_residual(carry):
+        if not cfg.sequence_parallel:
+            return carry
+
+        def c(x):
+            if (
+                hasattr(x, "ndim") and x.ndim == 3
+                and x.shape[1] > 1 and x.shape[1] % model == 0
+            ):
+                bspec = "data" if x.shape[0] % data == 0 else None
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(bspec, "model", None))
+                )
+            return x
+
+        if isinstance(carry, tuple):
+            return tuple(c(e) for e in carry)
+        return c(carry)
+
+    if isinstance(xs, tuple):
+        param_stack, rest = xs[0], xs[1:]
+    else:
+        param_stack, rest = xs, ()
+    use_gather = cfg.fsdp and cfg.fsdp_gather_in_scan
+    if use_gather:
+        from repro.sharding.rules import param_specs as _rest_specs
+
+        sliced_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), param_stack
+        )
+        specs = compute_specs(sliced_abs, cfg, mesh)
+        rest_specs = _rest_specs(sliced_abs, cfg, mesh)
+
+    def wrapped(carry, x):
+        if rest:
+            layer_p, extra = x[0], x[1:]
+        else:
+            layer_p, extra = x, ()
+        if use_gather:
+            layer_p = jax.tree.map(
+                lambda l, s, r: _fsdp_gather(
+                    l,
+                    jax.sharding.NamedSharding(mesh, s),
+                    jax.sharding.NamedSharding(mesh, r),
+                ),
+                layer_p,
+                specs,
+                rest_specs,
+            )
+        new_carry, ys = body(carry, (layer_p, *extra) if rest else layer_p)
+        return constrain_residual(new_carry), ys
+
+    return jax.lax.scan(wrapped, constrain_residual(init), xs, unroll=unroll)

@@ -1,0 +1,248 @@
+"""Mamba-2 (SSD — state-space duality) block in pure JAX.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 for training /
+prefill (lax.scan over chunks for the inter-chunk state recurrence) and the
+O(1)-per-token recurrent step for decode. `repro.kernels.ssd_scan` provides
+the Pallas TPU kernel for the intra-chunk part; this module is its oracle.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim SSD heads,
+N = ssm_state, single B/C group (G=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_mamba(rng: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    conv_dim = d_inner + 2 * N
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    wdt = cfg.weight_dtype
+    d_in_proj = 2 * d_inner + 2 * N + H  # z, xBC, dt
+    return {
+        "in_proj": (jax.random.normal(k1, (d, d_in_proj)) / math.sqrt(d)).astype(wdt),
+        "conv_w": (jax.random.normal(k2, (K, conv_dim)) / math.sqrt(K)).astype(wdt),
+        "conv_b": jnp.zeros((conv_dim,), wdt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), wdt),
+        "out_proj": (jax.random.normal(k5, (d_inner, d)) / math.sqrt(d_inner)).astype(wdt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} a[k] for
+    i >= j, -inf above the diagonal."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, L, H, P)
+    dt: jnp.ndarray,     # (B, L, H) fp32 (post-softplus)
+    A: jnp.ndarray,      # (H,) fp32 negative
+    B_mat: jnp.ndarray,  # (B, L, N)
+    C_mat: jnp.ndarray,  # (B, L, N)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (B, L, H, P), final_state: (B, H, P, N))."""
+    Bsz, L, H, P = x.shape
+    N = B_mat.shape[-1]
+    assert L % chunk == 0, f"seq {L} not divisible by chunk {chunk}"
+    n_chunks = L // chunk
+
+    xf = x.astype(jnp.float32)
+    Bf = B_mat.astype(jnp.float32)
+    Cf = C_mat.astype(jnp.float32)
+
+    # Reshape into chunks.
+    xc = xf.reshape(Bsz, n_chunks, chunk, H, P)
+    dtc = dt.reshape(Bsz, n_chunks, chunk, H)
+    Bc = Bf.reshape(Bsz, n_chunks, chunk, N)
+    Cc = Cf.reshape(Bsz, n_chunks, chunk, N)
+
+    a = dtc * A  # (B, C, Q, H)
+    a_cumsum = jnp.cumsum(a, axis=2)                       # (B, C, Q, H)
+    xdt = xc * dtc[..., None]                              # x * dt
+
+    # Intra-chunk (diagonal) output.
+    Lmat = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))       # (B, C, H, Q, Q)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)         # (B, C, Q, Q)
+    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", Lmat, scores, xdt)
+
+    # Chunk-final states.
+    decay_states = jnp.exp(a_cumsum[:, :, -1:, :] - a_cumsum)  # (B, C, Q, H)
+    states = jnp.einsum("bcsn,bcshp,bcsh->bchpn", Bc, xdt, decay_states)
+
+    # Inter-chunk recurrence (scan over chunks).
+    chunk_decay = jnp.exp(a_cumsum[:, :, -1, :])           # (B, C, H)
+    if initial_state is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def body(h, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        h_prev = h
+        h = h * dec[:, :, None, None] + st
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        body,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B, C, H, P, N)
+
+    # Inter-chunk (off-diagonal) output: contribution of the carried state.
+    state_decay = jnp.exp(a_cumsum)                        # (B, C, Q, H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# Block forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: xBC (B, L, C), w (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def mamba_forward(
+    p: Params,
+    u: jnp.ndarray,          # (B, L, d_model)
+    cfg: ModelConfig,
+    initial_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    d_inner, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    x, B_mat, C_mat = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    Bsz, L, _ = u.shape
+    xh = x.reshape(Bsz, L, H, P)
+    y, h_final = ssd_chunked(xh, dt, A, B_mat, C_mat, cfg.ssm_chunk, initial_state)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, L, d_inner)
+
+    # Gated RMSNorm (mamba2's norm-before-out_proj).
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf * rms * p["norm_scale"].astype(jnp.float32)).astype(u.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, h_final
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token recurrent step)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(
+    p: Params,
+    u: jnp.ndarray,          # (B, 1, d_model)
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    d_inner, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Bsz = u.shape[0]
+    zxbcdt = u[:, 0, :] @ p["in_proj"]                    # (B, ...)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+
+    # Rolling conv buffer.
+    conv_in = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B, K, C)
+    w = p["conv_w"]                                        # (K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    new_conv = conv_in[:, 1:, :]
+
+    x, B_mat, C_mat = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])                               # (H,)
+
+    xh = x.reshape(Bsz, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                # (B, H)
+    h = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, B_mat.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, C_mat.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, d_inner).astype(u.dtype)
+
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    y = (yf * rms * p["norm_scale"].astype(jnp.float32)).astype(u.dtype)
+    out = (y @ p["out_proj"])[:, None, :]                  # (B, 1, d_model)
+    return out, {"conv": new_conv, "ssm": h}
+
+
+def ssd_reference(x, dt, A, B_mat, C_mat, initial_state=None):
+    """O(L) sequential reference for tests: exact recurrent semantics."""
+    Bsz, L, H, P = x.shape
+    N = B_mat.shape[-1]
+    h = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    xf = x.astype(jnp.float32)
+    Bf = B_mat.astype(jnp.float32)
+    Cf = C_mat.astype(jnp.float32)
+
+    def body(h, t):
+        decay = jnp.exp(dt[:, t] * A)                     # (B, H)
+        h = h * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], xf[:, t], Bf[:, t]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(body, h, jnp.arange(L))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with GShard-style
+GROUP-LOCAL capacity dispatch.
+
+Tokens are viewed as (G, T_local, D) where G is the data-parallel group
+count (the mesh "data" axis when a compute mesh is active, else 1). Each
+group routes its own tokens into private (E, C_local, D) capacity buffers
+with integer cumsum bookkeeping and a *batched* scatter — batched over the
+sharded group dim, so GSPMD partitions it cleanly instead of emulating a
+cross-shard scatter with O(T*K*E*D) mask arithmetic. Expert einsums then
+contract against the expert-parallel weights (E on the "model" axis): the
+buffers are model-replicated so the einsum just slices E locally; the
+combine all-gathers expert outputs over "model" (the MoE's inherent
+all-to-all-class collective) and gathers group-locally.
+
+Shared experts (deepseek-moe) are a dense always-on SwiGLU. The auxiliary
+loss is the Switch load-balance term.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import Params, init_mlp, apply_mlp
+
+
+def init_moe(rng: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    e = cfg.n_experts
+    k_router, k_gate, k_up, k_down, k_shared = jax.random.split(rng, 5)
+    wdt = cfg.weight_dtype
+    p: Params = {
+        "router": (jax.random.normal(k_router, (d, e)) / math.sqrt(d)).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k_gate, (e, d, f)) / math.sqrt(d)).astype(wdt),
+        "w_up": (jax.random.normal(k_up, (e, d, f)) / math.sqrt(d)).astype(wdt),
+        "w_down": (jax.random.normal(k_down, (e, f, d)) / math.sqrt(f)).astype(wdt),
+    }
+    if cfg.n_shared_experts > 0:
+        # Shared experts are a dense SwiGLU of width n_shared * f, always on.
+        p["shared"] = init_mlp(k_shared, cfg, d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def router_probs(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """(..., D) -> (..., E) softmax router probabilities in fp32."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def apply_moe(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    capacity_factor: Optional[float] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss). Overflowing tokens fall through to
+    the residual path (their expert contribution is zero)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+
+    from repro.sharding.context import current_compute_mesh
+
+    mesh = current_compute_mesh()
+    G = 1
+    if mesh is not None and T % mesh.shape.get("data", 1) == 0:
+        G = mesh.shape["data"]
+    T_loc = T // G
+
+    def cst(arr, *spec):
+        if mesh is None:
+            return arr
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        dims = []
+        for d_, s in zip(arr.shape, spec):
+            ok = (
+                s is not None
+                and d_ % mesh.shape.get(s, 1) == 0
+                and d_ >= mesh.shape.get(s, 1)
+            )
+            dims.append(s if ok else None)
+        return jax.lax.with_sharding_constraint(arr, NamedSharding(mesh, P(*dims)))
+
+    xg = cst(x.reshape(G, T_loc, D), "data", None, None)
+
+    probs = router_probs(p, xg)                          # (G, T_loc, E) fp32
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)      # (G, T_loc, K)
+    # deepseek-moe renormalizes the top-k gates to sum to 1.
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Per-group capacity; floor keeps small decode batches drop-free.
+    capacity = int(math.ceil(K * T_loc / E * capacity_factor))
+    capacity = max(capacity, min(T_loc, 8))
+
+    # Group-local positions: cumsum of one-hot assignment counts (ints only).
+    flat_expert = expert_idx.reshape(G, T_loc * K)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)     # (G, A, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot          # exclusive
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[..., None], axis=2)[..., 0]
+    keep = pos < capacity
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+
+    token_of_assignment = jnp.repeat(jnp.arange(T_loc), K)       # (A,)
+    contrib = jnp.take(xg, token_of_assignment, axis=1)          # (G, A, D)
+    contrib = contrib * keep[..., None].astype(x.dtype)
+
+    # Batched (over the sharded group dim) scatter into capacity buffers.
+    def scatter_group(fe, sp, c):
+        return jnp.zeros((E, capacity, D), x.dtype).at[fe, sp].add(c)
+
+    expert_in = jax.vmap(scatter_group)(flat_expert, safe_pos, contrib)
+    expert_in = cst(expert_in, "data", None, None, None)         # (G, E, C, D)
+
+    # Expert FFN (SwiGLU): weights are expert-parallel (E @ "model"); the
+    # buffers are model-replicated, so E slices locally.
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    ) * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = cst(h, "data", "model", None, None)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])    # (G, E, C, D)
+    # Combine needs every expert's rows in-group: all-gather over "model".
+    expert_out = cst(expert_out, "data", None, None, None)
+
+    def gather_group(eo, fe, sp):
+        return eo[fe, sp]                                        # (A, D)
+
+    assign_out = jax.vmap(gather_group)(expert_out, flat_expert, safe_pos)
+    assign_out = assign_out * keep[..., None].astype(x.dtype)
+    weighted = assign_out * gate_vals.reshape(G, T_loc * K, 1).astype(x.dtype)
+
+    def combine_group(w):
+        return jnp.zeros((T_loc, D), x.dtype).at[token_of_assignment].add(w)
+
+    y = jax.vmap(combine_group)(weighted)                        # (G, T_loc, D)
+    y = cst(y, "data", None, None)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xg)
+
+    # Switch-style load-balance loss: E * sum_e fraction_e * prob_e.
+    frac = jnp.mean(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32).sum(axis=2),
+        axis=(0, 1),
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob) / K
+
+    return y.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,100 @@
+"""Mamba-2 decoder-only LM (mamba2-130m family, arXiv:2405.21060).
+
+A stack of Mamba-2 blocks (no attention, no FFN — the SSD block subsumes
+both roles), RMSNorm, tied embeddings. Decode carries (conv, ssm) states
+per layer; there is no KV cache, so long_500k decode is O(1) in context
+length — the SSD selling point.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import (
+    Params,
+    apply_norm,
+    embed,
+    grad_dtype_guard,
+    init_embedding,
+    init_norm,
+    init_lm_head,
+    lm_head,
+    scan_layers,
+    stack_layers,
+    unembed,
+)
+from .mamba2 import init_mamba, init_mamba_cache, mamba_decode_step, mamba_forward
+
+
+def init_ssm_lm(rng: jax.Array, cfg: ModelConfig) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+
+    def layer_init(r):
+        return {"norm": init_norm(cfg, cfg.d_model), "mamba": init_mamba(r, cfg)}
+
+    p: Params = {
+        "embed": init_embedding(k_embed, cfg),
+        "layers": stack_layers(layer_init, k_layers, cfg.n_layers),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_lm_head(k_head, cfg)
+    return p
+
+
+def ssm_forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Returns (logits, aux=0)."""
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+
+    def body(x, lp):
+        h = apply_norm(lp["norm"], x, cfg.norm_type)
+        return x + mamba_forward(lp["mamba"], h, cfg), None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = scan_layers(body_, x, params["layers"], cfg, unroll=cfg.unroll_layers)
+    x = grad_dtype_guard(x)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = lm_head(params["lm_head"], x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    m = init_mamba_cache(cfg, batch, cfg.activation_dtype)
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L,) + m["conv"].shape, cfg.activation_dtype),
+        "ssm": jnp.zeros((L,) + m["ssm"].shape, jnp.float32),
+    }
+
+
+def ssm_decode_step(
+    params: Params,
+    token: jnp.ndarray,     # (B, 1)
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+):
+    """One decode step; returns (logits, new_cache). Context-length free."""
+    x = embed(params["embed"], token).astype(cfg.activation_dtype)
+
+    def body(x, inp):
+        lp, conv_c, ssm_c = inp
+        h = apply_norm(lp["norm"], x, cfg.norm_type)
+        o, new_c = mamba_decode_step(lp["mamba"], h, {"conv": conv_c, "ssm": ssm_c}, cfg)
+        return x + o, (new_c["conv"], new_c["ssm"])
+
+    x, (conv_n, ssm_n) = scan_layers(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]),
+        cfg, unroll=cfg.unroll_layers,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = lm_head(params["lm_head"], x)
+    return logits, {"conv": conv_n, "ssm": ssm_n}

@@ -1,0 +1,358 @@
+"""Decoder-only transformer LM covering the dense (GQA), MoE and VLM
+assigned architectures.
+
+Layers are homogeneous and scanned (`lax.scan`) so the HLO stays small at
+any depth; MoE archs with `first_k_dense` leading dense layers run those
+unstacked, then scan the MoE remainder. KV caches are stacked per layer:
+(L, B, S_max, KV, HD).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    causal_attention,
+    decode_attention,
+    embed,
+    grad_dtype_guard,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    lm_head,
+    init_lm_head,
+    scan_layers,
+    stack_layers,
+    unembed,
+)
+from .moe import apply_moe, init_moe
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_decoder_layer(rng: jax.Array, cfg: ModelConfig, moe: bool) -> Params:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p: Params = {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "norm2": init_norm(cfg, cfg.d_model),
+    }
+    if moe:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k3, cfg)
+    return p
+
+
+def init_lm(rng: jax.Array, cfg: ModelConfig) -> Params:
+    k_embed, k_dense, k_scan, k_head = jax.random.split(rng, 4)
+    n_moe_scanned = cfg.n_layers - cfg.first_k_dense if cfg.n_experts else 0
+    p: Params = {"embed": init_embedding(k_embed, cfg)}
+    if cfg.n_experts:
+        if cfg.first_k_dense:
+            p["dense_layers"] = stack_layers(
+                lambda r: _init_decoder_layer(r, cfg, moe=False), k_dense, cfg.first_k_dense
+            )
+        p["layers"] = stack_layers(
+            lambda r: _init_decoder_layer(r, cfg, moe=True), k_scan, n_moe_scanned
+        )
+    else:
+        p["layers"] = stack_layers(
+            lambda r: _init_decoder_layer(r, cfg, moe=False), k_scan, cfg.n_layers
+        )
+    p["final_norm"] = init_norm(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_lm_head(k_head, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+# ---------------------------------------------------------------------------
+
+def _attn_block(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    sliding_window: Optional[int],
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    B, S, _ = x.shape
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    q = (h @ p["attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = causal_attention(q, k, v, sliding_window=sliding_window, unroll=cfg.unroll_layers)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+    return x + o, (k, v)
+
+
+def _decoder_layer_fwd(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    moe: bool,
+    sliding_window: Optional[int],
+):
+    x, kv = _attn_block(p, x, cfg, positions, sliding_window)
+    h = apply_norm(p["norm2"], x, cfg.norm_type)
+    if moe:
+        y, aux = apply_moe(p["moe"], h, cfg)
+    else:
+        y, aux = apply_mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + y, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def lm_forward(
+    params: Params,
+    tokens: jnp.ndarray,                 # (B, S) int32
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jnp.ndarray] = None,  # (B, S_img, D) — VLM stub
+    sliding_window: Optional[int] = None,
+    return_cache: bool = False,
+):
+    """Returns (logits, aux_loss[, kv_cache]).
+
+    `sliding_window` overrides cfg.sliding_window (None = full attention).
+    With `return_cache`, also returns the stacked (k, v) of every layer —
+    the prefill path.
+    """
+    sw = sliding_window if sliding_window is not None else cfg.sliding_window
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    unroll = cfg.unroll_layers
+
+    # Leading dense layers (MoE archs only), unstacked scan.
+    if "dense_layers" in params:
+        def dense_body(carry, layer_p):
+            x, aux = carry
+            x, a, kv = _decoder_layer_fwd(layer_p, x, cfg, positions, False, sw)
+            return (x, aux + a), (kv if return_cache else None)
+        dense_body_ = jax.checkpoint(dense_body) if cfg.remat else dense_body
+        (x, aux_total), dense_kv = scan_layers(
+            dense_body_, (x, aux_total), params["dense_layers"], cfg, unroll=unroll
+        )
+    else:
+        dense_kv = None
+
+    moe = cfg.n_experts > 0
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a, kv = _decoder_layer_fwd(layer_p, x, cfg, positions, moe, sw)
+        return (x, aux + a), (kv if return_cache else None)
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    (x, aux_total), scan_kv = scan_layers(
+        body_, (x, aux_total), params["layers"], cfg, unroll=unroll
+    )
+
+    x = grad_dtype_guard(x)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = lm_head(params["lm_head"], x)
+
+    if not return_cache:
+        return logits, aux_total
+
+    k_all, v_all = scan_kv
+    if dense_kv is not None:
+        k_all = jnp.concatenate([dense_kv[0], k_all], axis=0)
+        v_all = jnp.concatenate([dense_kv[1], v_all], axis=0)
+    return logits, aux_total, {"k": k_all, "v": v_all}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, jnp.ndarray]:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    dt = cfg.activation_dtype
+    if cfg.kv_cache_dtype == "int8":
+        # int8 cache with per-(token, head) absmax scales.
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], dt),
+            "v_scale": jnp.zeros(shape[:-1], dt),
+        }
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _quantize_kv(x: jnp.ndarray):
+    """x (B, 1, KV, HD) -> (int8 values, (B, 1, KV) scales)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s.astype(x.dtype)
+
+
+def _dequantize_kv(q: jnp.ndarray, s: jnp.ndarray, dtype) -> jnp.ndarray:
+    return q.astype(dtype) * s[..., None].astype(dtype)
+
+
+def _decode_layer(
+    p: Params,
+    x: jnp.ndarray,           # (B, 1, D)
+    k_cache: jnp.ndarray,     # (B, S, KV, HD)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,         # scalar int32
+    cfg: ModelConfig,
+    moe: bool,
+    sliding_window: Optional[int],
+    k_scale: Optional[jnp.ndarray] = None,   # (B, S, KV) when int8 cache
+    v_scale: Optional[jnp.ndarray] = None,
+):
+    B = x.shape[0]
+    quant = cfg.kv_cache_dtype == "int8"
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    posb = jnp.broadcast_to(pos[None], (B, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, pos, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, pos, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, pos, axis=1)
+        k_full = _dequantize_kv(k_cache, k_scale, cfg.activation_dtype)
+        v_full = _dequantize_kv(v_cache, v_scale, cfg.activation_dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        k_full, v_full = k_cache, v_cache
+    o = decode_attention(q, k_full, v_full, pos, sliding_window=sliding_window)
+    x = x + o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+    h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+    if moe:
+        y, _ = apply_moe(p["moe"], h2, cfg)
+    else:
+        y = apply_mlp(p["mlp"], h2)
+    return x + y, k_cache, v_cache, k_scale, v_scale
+
+
+def lm_decode_step(
+    params: Params,
+    token: jnp.ndarray,       # (B, 1) int32
+    cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray,         # scalar int32: write index of the new token
+    cfg: ModelConfig,
+    sliding_window: Optional[int] = None,
+):
+    """One decode step; returns (logits (B, 1, V), new_cache)."""
+    sw = sliding_window if sliding_window is not None else cfg.sliding_window
+    x = embed(params["embed"], token).astype(cfg.activation_dtype)
+    moe = cfg.n_experts > 0
+    n_dense = cfg.first_k_dense if moe else 0
+    quant = cfg.kv_cache_dtype == "int8"
+
+    k_all, v_all = cache["k"], cache["v"]
+    ks_all = cache.get("k_scale")
+    vs_all = cache.get("v_scale")
+    new_k, new_v, new_ks, new_vs = [], [], [], []
+
+    # Leading dense layers (unscanned slice of the cache).
+    if "dense_layers" in params:
+        for i in range(n_dense):
+            layer_p = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            x, kc, vc, ksc, vsc = _decode_layer(
+                layer_p, x, k_all[i], v_all[i], pos, cfg, False, sw,
+                ks_all[i] if quant else None, vs_all[i] if quant else None,
+            )
+            new_k.append(kc)
+            new_v.append(vc)
+            if quant:
+                new_ks.append(ksc)
+                new_vs.append(vsc)
+
+    if quant:
+        def body(x, inp):
+            layer_p, kc, vc, ksc, vsc = inp
+            x, kc, vc, ksc, vsc = _decode_layer(
+                layer_p, x, kc, vc, pos, cfg, moe, sw, ksc, vsc
+            )
+            return x, (kc, vc, ksc, vsc)
+
+        x, (ks, vs, kss, vss) = scan_layers(
+            body, x,
+            (params["layers"], k_all[n_dense:], v_all[n_dense:],
+             ks_all[n_dense:], vs_all[n_dense:]),
+            cfg, unroll=cfg.unroll_layers,
+        )
+    else:
+        def body(x, inp):
+            layer_p, kc, vc = inp
+            x, kc, vc, _, _ = _decode_layer(layer_p, x, kc, vc, pos, cfg, moe, sw)
+            return x, (kc, vc)
+
+        x, (ks, vs) = scan_layers(
+            body, x, (params["layers"], k_all[n_dense:], v_all[n_dense:]),
+            cfg, unroll=cfg.unroll_layers,
+        )
+
+    if new_k:
+        ks = jnp.concatenate([jnp.stack(new_k), ks], axis=0)
+        vs = jnp.concatenate([jnp.stack(new_v), vs], axis=0)
+        if quant:
+            kss = jnp.concatenate([jnp.stack(new_ks), kss], axis=0)
+            vss = jnp.concatenate([jnp.stack(new_vs), vss], axis=0)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = lm_head(params["lm_head"], x)
+    out_cache = {"k": ks, "v": vs}
+    if quant:
+        out_cache["k_scale"] = kss
+        out_cache["v_scale"] = vss
+    return logits, out_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(
+    params: Params,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    logits, aux = lm_forward(params, tokens, cfg, prefix_embeds=prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + cfg.router_aux_coef * aux

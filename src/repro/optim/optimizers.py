@@ -1,0 +1,102 @@
+"""Optimizers: AdamW and SGD-momentum with dtype-configurable state.
+
+State dtype matters at jamba-1.5-large scale: fp32 Adam (m, v) for 398 B
+params needs ~3.2 TB — over v5e-256's aggregate HBM once activations are
+added. `state_dtype="bfloat16"` halves that (documented deviation in
+DESIGN.md §3). The update math always runs in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def init(self, params: Any) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads: Any, state: AdamWState, params: Any) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr = self.learning_rate if self.schedule is None else self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        dt = jnp.dtype(self.state_dtype)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / c1
+            vhat = vf / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDMomentum:
+    learning_rate: float = 0.01
+    momentum: float = 0.9
+    state_dtype: str = "float32"
+
+    def init(self, params: Any) -> SGDState:
+        dt = jnp.dtype(self.state_dtype)
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        )
+
+    def update(self, grads: Any, state: SGDState, params: Any) -> Tuple[Any, SGDState]:
+        def upd(g, mbuf, p):
+            mf = self.momentum * mbuf.astype(jnp.float32) + g.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.learning_rate * mf
+            return new_p.astype(p.dtype), mf.astype(mbuf.dtype)
+
+        out = jax.tree.map(upd, grads, state.momentum, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, SGDState(step=state.step + 1, momentum=new_m)
+
+
+def make_optimizer(name: str, learning_rate: float, state_dtype: str = "float32", **kw):
+    if name == "adamw":
+        return AdamW(learning_rate=learning_rate, state_dtype=state_dtype, **kw)
+    if name == "sgdm":
+        return SGDMomentum(learning_rate=learning_rate, state_dtype=state_dtype, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,17 @@
+from . import hardware
+from .analysis import (
+    CollectiveStats,
+    RooflineReport,
+    model_flops_estimate,
+    parse_collectives,
+    roofline,
+)
+
+__all__ = [
+    "CollectiveStats",
+    "RooflineReport",
+    "hardware",
+    "model_flops_estimate",
+    "parse_collectives",
+    "roofline",
+]

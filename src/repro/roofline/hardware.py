@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (per chip) — the roofline denominators."""
+
+PEAK_FLOPS_BF16 = 197e12       # 197 TFLOP/s bf16
+HBM_BANDWIDTH = 819e9          # 819 GB/s
+ICI_LINK_BANDWIDTH = 50e9      # ~50 GB/s per link
+HBM_BYTES = 16 * 1024**3       # 16 GiB HBM per chip
+VMEM_BYTES = 128 * 1024**2     # ~128 MiB vector memory (v5e)

@@ -1,0 +1,3 @@
+from .rules import batch_specs, cache_specs, decode_token_spec, param_specs, to_named
+
+__all__ = ["batch_specs", "cache_specs", "decode_token_spec", "param_specs", "to_named"]

@@ -1,0 +1,30 @@
+"""Compute-mesh context: lets model code (which is otherwise
+sharding-agnostic) apply explicit FSDP gather constraints inside
+scan-over-layers bodies.
+
+The launcher sets the context before tracing; `scan_layers` (models/layers)
+reads it. No context (tests, CPU smoke runs) -> plain lax.scan.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_state = threading.local()
+
+
+def current_compute_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def compute_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev

@@ -1,0 +1,291 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec for the (data, model) mesh — with an optional leading "pod"
+axis for the federated multi-pod step.
+
+Parameters get 2D sharding (tensor-parallel over "model" + FSDP over
+"data") chosen per-leaf by a deterministic rule:
+
+  1. stacked-layer leading axes (paths containing layers/superblocks/
+     dense_layers/encoder/decoder) are never sharded (lax.scan runs over
+     them);
+  2. routed-expert tensors (leading dim == n_experts) put the expert dim on
+     "model" — expert parallelism;
+  3. otherwise the largest divisible dim goes to "model", the next largest
+     divisible dim to "data" (FSDP);
+  4. vectors (norm scales, biases, 1-D stats) replicate.
+
+Caches: decode_32k shards batch over "data" and the KV sequence over
+"model" (context parallelism — GQA KV-head counts are smaller than the
+model axis, so heads cannot carry it); long_500k (batch=1) shards the KV
+sequence over BOTH axes. SSM states shard heads over "model".
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+_STACKED = re.compile(r"(layers|superblocks|dense_layers|encoder|decoder)(/|$)")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# Column-parallel (Megatron): input dim gets FSDP "data", output dim gets
+# tensor-parallel "model" — activations come out feature-sharded.
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w1", "in_proj"}
+# Row-parallel: contraction dim on "model" (partial sums -> psum), output
+# dim FSDP "data".
+_ROW_PARALLEL = {"wo", "w_down", "w2", "out_proj"}
+_REPLICATED = {"router", "dec_pos", "conv_w", "conv_b", "dt_bias", "A_log", "D",
+               "norm_scale", "scale", "bias", "b1", "b2", "b"}
+
+
+def _assign(dims, shape, idx, axis, size) -> bool:
+    """Put `axis` on dims[idx] if divisible and slot free."""
+    if dims[idx] is None and shape[idx] % size == 0 and shape[idx] >= size:
+        dims[idx] = axis
+        return True
+    return False
+
+
+def _leaf_spec(
+    path: str,
+    shape: Tuple[int, ...],
+    cfg: ModelConfig,
+    data: int,
+    model: int,
+    pod_axis: bool,
+) -> P:
+    """The per-leaf rule. `pod_axis` adds a leading 'pod' dim (stacked
+    federated replicas)."""
+    dims: list = [None] * len(shape)
+    start = 0
+    if pod_axis:
+        dims[0] = "pod"
+        start = 1
+
+    rest = list(range(start, len(shape)))
+    if _STACKED.search(path) and rest:
+        rest = rest[1:]  # skip the scan axis
+
+    name = path.rsplit("/", 1)[-1]
+
+    if len(rest) < 2 or name in _REPLICATED:
+        return P(*dims)  # vectors / small tables replicate
+
+    # Expert parallelism: routed-expert tensors (E, D, F) / (E, F, D).
+    if cfg.n_experts > 0 and shape[rest[0]] == cfg.n_experts and len(rest) >= 3:
+        dims[rest[0]] = "model"
+        for i in sorted(rest[1:], key=lambda i: -shape[i]):
+            if _assign(dims, shape, i, "data", data):
+                break
+        return P(*dims)
+
+    first, last = rest[0], rest[-1]
+    if name in _COL_PARALLEL:
+        _assign(dims, shape, last, "model", model)
+        _assign(dims, shape, first, "data", data)
+        return P(*dims)
+    if name in _ROW_PARALLEL:
+        _assign(dims, shape, first, "model", model)
+        _assign(dims, shape, last, "data", data)
+        return P(*dims)
+    if name == "embedding":
+        # (V, D): vocab tensor-parallel, D FSDP.
+        _assign(dims, shape, first, "model", model)
+        _assign(dims, shape, last, "data", data)
+        return P(*dims)
+    if name == "w" and len(rest) == 2:
+        # lm_head (D, V): vocab tensor-parallel -> logits vocab-sharded.
+        _assign(dims, shape, last, "model", model)
+        _assign(dims, shape, first, "data", data)
+        return P(*dims)
+
+    # Fallback: largest divisible dim -> model, next -> data, never the
+    # same dim twice.
+    by_size = sorted(rest, key=lambda i: -shape[i])
+    for i in by_size:
+        if _assign(dims, shape, i, "model", model):
+            break
+    for i in by_size:
+        if _assign(dims, shape, i, "data", data):
+            break
+    return P(*dims)
+
+
+def param_specs(
+    params: Any,
+    cfg: ModelConfig,
+    mesh: Mesh,
+    pod_axis: bool = False,
+) -> Any:
+    """At-rest parameter shardings.
+
+    Without cfg.fsdp, weights shard on "model" only (activations own the
+    "data" axis — no contraction/batch conflict for the GSPMD solver);
+    routed-expert tensors are always 2D (expert@model + data) since the
+    expert dim never clashes with the batch axis. With cfg.fsdp, weights
+    also shard over "data" at rest and `scan_layers` all-gathers each
+    layer's slice explicitly inside the scan body.
+    """
+    data = mesh.shape["data"]
+    model = mesh.shape["model"]
+
+    def f(path, leaf):
+        spec = _leaf_spec(_path_str(path), np.shape(leaf), cfg, data, model, pod_axis)
+        if not cfg.fsdp:
+            # keep "data" only on expert tensors (expert rule is conflict-free)
+            shape = np.shape(leaf)
+            is_expert = (
+                cfg.n_experts > 0
+                and any(
+                    d == cfg.n_experts
+                    for d in shape[:3]
+                )
+                and len(shape) >= 3
+            )
+            if not is_expert:
+                spec = P(*[d if d != "data" else None for d in spec])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def compute_specs(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Per-layer compute-time shardings: the at-rest spec with "data"
+    stripped (what `scan_layers` constrains gathered slices to)."""
+    model = mesh.shape["model"]
+    data = mesh.shape["data"]
+
+    def f(path, leaf):
+        spec = _leaf_spec(_path_str(path), np.shape(leaf), cfg, data, model, False)
+        return P(*[d if d == "model" else None for d in spec])
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, pod_axis: bool = False) -> Dict[str, P]:
+    """Input shardings. Batch over "data" (plus leading "pod" for the
+    federated step, where the global batch has a pod dim)."""
+    lead = ("pod",) if pod_axis else ()
+    bspec = lead + ("data",)
+    out: Dict[str, P] = {
+        "tokens": P(*bspec, None),
+        "labels": P(*bspec, None),
+    }
+    if cfg.arch_type == "vlm":
+        out["patch_embeds"] = P(*bspec, None, None)
+    if cfg.arch_type == "encdec":
+        out["frames"] = P(*bspec, None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, cache: Any) -> Any:
+    """PartitionSpecs for the decode cache pytree.
+
+    decode_32k: batch -> data, KV seq -> model (context parallel).
+    long_500k:  batch=1 -> KV seq over (data, model) both.
+    """
+    long_ctx = shape.global_batch < 2  # long_500k: nothing else to shard
+
+    def div(leaf, idx, axis_size) -> bool:
+        return np.shape(leaf)[idx] % axis_size == 0 and np.shape(leaf)[idx] >= axis_size
+
+    def f(path, leaf):
+        p = _path_str(path)
+        nd = np.ndim(leaf)
+        # mesh sizes for the production mesh (16, 16); divisibility checks
+        # use 16 for single axes and 256 for the combined long-ctx axis.
+        M, D, DM = 16, 16, 256
+        if "scale" in p:
+            # int8-cache scales (L, B, S, KV): batch or seq carries "data".
+            if long_ctx:
+                return P(None, None, "data", None)
+            return P(None, "data", None, None)
+        if p.startswith("k") or p.startswith("v"):
+            if "cross" in p:
+                # (L, B, T_enc, KV, HD): only batch shards.
+                return P(None, "data" if div(leaf, 1, D) else None, None, None, None)
+            # The written seq dim stays UNSHARDED for decode_32k: a
+            # dynamic-update-slice into a seq-sharded cache triggers GSPMD
+            # "involuntary full rematerialization" (replicates the cache).
+            # The model axis carries KV heads when divisible, else head_dim.
+            if cfg.arch_type == "hybrid":
+                # (SB, A, B, S, KV, HD)
+                kv_ok = div(leaf, 4, M)
+                head = ("model" if kv_ok else None, None if kv_ok else "model")
+                if long_ctx:
+                    return P(None, None, None, "data", *head)
+                return P(None, None, "data", None, *head)
+            # (L, B, S, KV, HD)
+            kv_ok = div(leaf, 3, M)
+            head = ("model" if kv_ok else None, None if kv_ok else "model")
+            if long_ctx:
+                return P(None, None, "data", *head)
+            return P(None, "data", None, *head)
+        if p.startswith("ssm"):
+            # heads dim shards over "model" only when divisible; otherwise
+            # fall back to the SSD head_dim (P) which is 128-multiple.
+            if cfg.arch_type == "hybrid":
+                # (SB, M, B, H, P, N)
+                h_ok = div(leaf, 3, M)
+                return P(None, None, None if long_ctx else "data",
+                         "model" if h_ok else None,
+                         None if h_ok else ("model" if div(leaf, 4, M) else None),
+                         None)
+            # (L, B, H, P, N)
+            h_ok = div(leaf, 2, M)
+            return P(None, None if long_ctx else "data",
+                     "model" if h_ok else None,
+                     None if h_ok else ("model" if div(leaf, 3, M) else None),
+                     None)
+        if p.startswith("conv"):
+            if cfg.arch_type == "hybrid":
+                # (SB, M, B, K, C)
+                return P(None, None, None if long_ctx else "data", None,
+                         "model" if div(leaf, 4, M) else None)
+            # (L, B, K, C)
+            return P(None, None if long_ctx else "data", None,
+                     "model" if div(leaf, 3, M) else None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def decode_token_spec(shape: InputShape) -> P:
+    return P(None if shape.global_batch < 2 else "data", None)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def to_named(mesh: Mesh, tree_of_specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

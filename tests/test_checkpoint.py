@@ -1,0 +1,140 @@
+"""Checkpoint serializer + managers (§4.3 semantics)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    ClientCheckpointManager,
+    ServerCheckpointManager,
+    deserialize_pytree,
+    pytree_num_bytes,
+    resolve_freshest,
+    serialize_pytree,
+)
+
+
+# ---------------------------------------------------------------------------
+# Serializer
+# ---------------------------------------------------------------------------
+
+_DTYPES = [np.float32, np.float16, np.int32, np.int8]
+
+
+@st.composite
+def pytrees(draw):
+    n = draw(st.integers(1, 4))
+    tree = {}
+    for i in range(n):
+        shape = tuple(draw(st.lists(st.integers(1, 5), min_size=0, max_size=3)))
+        dtype = draw(st.sampled_from(_DTYPES))
+        arr = np.arange(int(np.prod(shape)) if shape else 1, dtype=dtype).reshape(shape)
+        if draw(st.booleans()):
+            tree[f"leaf{i}"] = arr
+        else:
+            tree[f"nest{i}"] = {"w": arr, "b": arr * 2}
+    return tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(pytrees())
+def test_serialize_roundtrip(tree):
+    blob = serialize_pytree(tree)
+    restored = deserialize_pytree(blob, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_bfloat16():
+    tree = {"w": jnp.arange(8, dtype=jnp.bfloat16).reshape(2, 4)}
+    restored = deserialize_pytree(serialize_pytree(tree), tree)
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.asarray(restored["w"]))
+
+
+def test_shape_mismatch_raises():
+    tree = {"w": np.zeros((2, 2), np.float32)}
+    blob = serialize_pytree(tree)
+    with pytest.raises(ValueError):
+        deserialize_pytree(blob, {"w": np.zeros((3, 2), np.float32)})
+
+
+def test_missing_leaf_raises():
+    blob = serialize_pytree({"w": np.zeros(2, np.float32)})
+    with pytest.raises(KeyError):
+        deserialize_pytree(blob, {"w": np.zeros(2, np.float32), "extra": np.zeros(1)})
+
+
+# ---------------------------------------------------------------------------
+# Managers
+# ---------------------------------------------------------------------------
+
+def _state(val):
+    return {"w": np.full((4, 4), val, np.float32)}
+
+
+def test_server_checkpoint_durability(tmp_path):
+    mgr = ServerCheckpointManager(
+        str(tmp_path / "local"), str(tmp_path / "remote"), interval_rounds=2
+    )
+    assert mgr.should_checkpoint(2) and not mgr.should_checkpoint(3)
+    mgr.save(2, _state(2.0))
+    mgr.wait_for_transfers()
+    ck = mgr.latest_durable()
+    assert ck is not None and ck.round_idx == 2
+    r, restored = mgr.restore(_state(0.0))
+    assert r == 2
+    np.testing.assert_array_equal(restored["w"], _state(2.0)["w"])
+
+
+def test_server_gc_keeps_last(tmp_path):
+    mgr = ServerCheckpointManager(
+        str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=1, keep_last=2
+    )
+    for r in range(1, 6):
+        mgr.save(r, _state(float(r)), blocking_transfer=True)
+    local = sorted(os.listdir(tmp_path / "l"))
+    assert len(local) == 2 and "round_5.ckpt" in local
+
+
+def test_freshest_wins_server(tmp_path):
+    s = ServerCheckpointManager(str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=1)
+    c = {"c0": ClientCheckpointManager(str(tmp_path / "c0"))}
+    s.save(5, _state(5.0), blocking_transfer=True)
+    c["c0"].save(4, _state(4.0))
+    src, info = resolve_freshest(s, c)
+    assert src == "server" and info.round_idx == 5
+
+
+def test_freshest_wins_client(tmp_path):
+    s = ServerCheckpointManager(str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=10)
+    cs = {
+        "c0": ClientCheckpointManager(str(tmp_path / "c0")),
+        "c1": ClientCheckpointManager(str(tmp_path / "c1")),
+    }
+    s.save(10, _state(10.0), blocking_transfer=True)
+    cs["c0"].save(12, _state(12.0))
+    cs["c1"].save(11, _state(11.0))
+    src, info = resolve_freshest(s, cs)
+    assert src == "client:c0" and info.round_idx == 12
+    # the dead client's own checkpoint must be excluded
+    src2, info2 = resolve_freshest(s, cs, exclude_client="c0")
+    assert src2 == "client:c1" and info2.round_idx == 11
+
+
+def test_tie_prefers_server(tmp_path):
+    """Paper rule: server restores its own checkpoint unless a client's is
+    strictly newer."""
+    s = ServerCheckpointManager(str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=1)
+    cs = {"c0": ClientCheckpointManager(str(tmp_path / "c0"))}
+    s.save(7, _state(7.0), blocking_transfer=True)
+    cs["c0"].save(7, _state(7.5))
+    src, _ = resolve_freshest(s, cs)
+    assert src == "server"
+
+
+def test_pytree_num_bytes():
+    tree = {"a": np.zeros((10,), np.float32), "b": np.zeros((3,), np.int8)}
+    assert pytree_num_bytes(tree) == 43

@@ -1,0 +1,221 @@
+"""Federated runtime: FedAvg math (hypothesis properties), message
+accounting, server round orchestration with fault injection, and the
+pod-parallel round step's equivalence to sequential per-silo training."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.data import make_lm_silos
+from repro.federated import (
+    FLClient,
+    FLServer,
+    aggregate_metrics,
+    fedavg,
+    fedavg_stacked,
+    init_pod_state,
+    make_fl_round_step,
+    make_train_step,
+    measure_messages,
+    to_cost_model_sizes,
+)
+from repro.models import get_model
+from repro.models.fl_models import (
+    LSTMConfig,
+    init_shakespeare_lstm,
+    shakespeare_forward,
+    shakespeare_loss,
+)
+from repro.optim import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# FedAvg properties
+# ---------------------------------------------------------------------------
+
+@st.composite
+def client_stacks(draw):
+    n = draw(st.integers(2, 5))
+    shape = tuple(draw(st.lists(st.integers(1, 4), min_size=1, max_size=3)))
+    rng = np.random.default_rng(draw(st.integers(0, 1000)))
+    trees = [
+        {"w": jnp.asarray(rng.standard_normal(shape), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((shape[0],)), jnp.float32)}
+        for _ in range(n)
+    ]
+    weights = [draw(st.floats(0.1, 100.0)) for _ in range(n)]
+    return trees, weights
+
+
+@settings(max_examples=25, deadline=None)
+@given(client_stacks())
+def test_fedavg_is_weighted_mean(data):
+    trees, weights = data
+    out = fedavg(trees, weights)
+    w = np.asarray(weights) / np.sum(weights)
+    for key in ("w", "b"):
+        want = sum(wi * np.asarray(t[key], np.float64) for wi, t in zip(w, trees))
+        np.testing.assert_allclose(np.asarray(out[key]), want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(client_stacks())
+def test_fedavg_stacked_matches_list(data):
+    trees, weights = data
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    got = fedavg_stacked(stacked, jnp.asarray(weights, jnp.float32))
+    want = fedavg(trees, weights)
+    for key in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(client_stacks())
+def test_fedavg_identity_when_equal(data):
+    """Averaging identical clients returns the same weights."""
+    trees, weights = data
+    same = [trees[0]] * len(trees)
+    out = fedavg(same, weights)
+    for key in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(out[key]), np.asarray(trees[0][key]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_convex_bounds():
+    """The average lies within the per-coordinate min/max envelope."""
+    rng = np.random.default_rng(0)
+    trees = [{"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)} for _ in range(4)]
+    out = np.asarray(fedavg(trees, [1, 2, 3, 4])["w"])
+    stack = np.stack([np.asarray(t["w"]) for t in trees])
+    assert (out <= stack.max(0) + 1e-6).all() and (out >= stack.min(0) - 1e-6).all()
+
+
+def test_aggregate_metrics_weighted():
+    ms = [{"acc": 1.0}, {"acc": 0.0}]
+    out = aggregate_metrics(ms, [3, 1])
+    assert out["acc"] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# Messages
+# ---------------------------------------------------------------------------
+
+def test_message_sizes_reflect_model():
+    lc = LSTMConfig(vocab_size=64, hidden=32)
+    params = init_shakespeare_lstm(jax.random.PRNGKey(0), lc)
+    log = measure_messages(params, {"acc": 0.5})
+    assert log.s_msg_train_bytes == log.c_msg_train_bytes == log.s_msg_aggreg_bytes
+    assert log.c_msg_test_bytes < log.s_msg_train_bytes
+    sizes = to_cost_model_sizes(log)
+    assert sizes.s_msg_train_gb == pytest.approx(log.s_msg_train_bytes / 1e9)
+    # full round volume: 3 weight transfers + metrics, per client
+    assert log.total_bytes(4) == 4 * (3 * log.s_msg_train_bytes + log.c_msg_test_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Server orchestration + fault recovery
+# ---------------------------------------------------------------------------
+
+def _make_clients(lc, n=2):
+    silos = make_lm_silos(n, lc.vocab_size, 20, [(32, 16)] * n, seed=0)
+    opt = make_optimizer("adamw", 1e-2)
+
+    def loss_fn(p, batch):
+        toks, labels = batch
+        return shakespeare_loss(p, toks, labels, lc)
+
+    return [
+        FLClient(
+            s.client_id, s, loss_fn, opt, batch_size=16,
+            batch_fn=lambda b: (jnp.asarray(b[0]), jnp.asarray(b[1])),
+        )
+        for s in silos
+    ]
+
+
+def test_server_runs_rounds_and_improves(tmp_path):
+    lc = LSTMConfig(vocab_size=64, hidden=32)
+    clients = _make_clients(lc)
+    params = init_shakespeare_lstm(jax.random.PRNGKey(0), lc)
+    server = FLServer(clients, params)
+    res = server.run(3)
+    assert len(res.rounds) == 3
+    losses = [r.metrics["loss"] for r in res.rounds]
+    assert losses[-1] < losses[0]  # Markov-stream loss decreases
+
+
+def test_server_fault_recovery_round_trip(tmp_path):
+    from repro.checkpoint import ClientCheckpointManager, ServerCheckpointManager
+
+    lc = LSTMConfig(vocab_size=64, hidden=32)
+    clients = _make_clients(lc)
+    params = init_shakespeare_lstm(jax.random.PRNGKey(0), lc)
+    sck = ServerCheckpointManager(
+        str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=1
+    )
+    ccks = {
+        c.client_id: ClientCheckpointManager(str(tmp_path / c.client_id))
+        for c in clients
+    }
+    killed = []
+
+    def fault_hook(round_idx):
+        if round_idx == 3 and not killed:
+            killed.append(round_idx)
+            return "s"
+        return None
+
+    server = FLServer(clients, params, server_ckpt=sck, client_ckpts=ccks,
+                      fault_hook=fault_hook)
+    res = server.run(4)
+    sck.wait_for_transfers()
+    assert killed == [3]
+    restarted = [r.restarted_from for r in res.rounds if r.restarted_from]
+    assert restarted and restarted[0] in ("server", "client:client_0", "client:client_1")
+
+
+# ---------------------------------------------------------------------------
+# Pod-parallel FL round == sequential per-silo reference
+# ---------------------------------------------------------------------------
+
+def test_pod_fedavg_equals_sequential():
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=61,
+                      head_dim=16, remat=False, dtype="float32",
+                      param_dtype="float32")
+    model = get_model(cfg)
+    opt = make_optimizer("sgdm", 1e-2)  # SGD: step-count bookkeeping is simple
+    n_pods, local_steps, per_pod, seq = 2, 3, 4, 16
+
+    sp, so = init_pod_state(model, opt, jax.random.PRNGKey(0), n_pods)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 61, (n_pods, local_steps, per_pod, seq)).astype(np.int32)
+    batches = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+    round_step = make_fl_round_step(model, opt, local_steps)
+    new_p, new_o, loss = jax.jit(round_step)(sp, so, batches)
+
+    # Sequential reference: each pod trains independently, then fedavg.
+    params0 = model.init(jax.random.PRNGKey(0))
+    train_step = make_train_step(model, opt)
+    finals = []
+    for pod in range(n_pods):
+        p, o = params0, opt.init(params0)
+        for s in range(local_steps):
+            b = {k: v[pod, s] for k, v in batches.items()}
+            p, o, _ = jax.jit(train_step)(p, o, b)
+        finals.append(p)
+    from repro.federated import fedavg as favg
+
+    want = favg(finals, [1.0, 1.0])
+    got_pod0 = jax.tree.map(lambda a: a[0], new_p)
+    for a, b in zip(jax.tree.leaves(got_pod0), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # all pods hold identical weights after the round barrier
+    for leaf in jax.tree.leaves(new_p):
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[1]), atol=1e-7)

@@ -1,0 +1,147 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py
+pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _assert_close(got, want, dtype):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)
+
+
+# ---------------------------------------------------------------------------
+# fedavg_reduce
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_clients", [2, 5, 16])
+@pytest.mark.parametrize("length", [100, 8192, 20000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_reduce_sweep(n_clients, length, dtype):
+    rng = np.random.default_rng(hash((n_clients, length)) % 2**31)
+    x = jnp.asarray(rng.standard_normal((n_clients, length)), dtype)
+    w = jnp.asarray(rng.uniform(0.5, 5.0, n_clients), jnp.float32)
+    got = ops.fedavg_reduce(x, w, use_pallas=True)
+    want = ref.fedavg_reduce_ref(x, w)
+    assert got.shape == (length,) and got.dtype == dtype
+    _assert_close(got, want, dtype)
+
+
+def test_fedavg_reduce_weights_normalized():
+    x = jnp.stack([jnp.ones(100), 3 * jnp.ones(100)])
+    got = ops.fedavg_reduce(x, jnp.asarray([1.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(got), 2.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seq,heads,kv,dim", [
+    (128, 4, 4, 64),    # MHA
+    (256, 8, 2, 64),    # GQA 4:1
+    (256, 4, 1, 128),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal_sweep(seq, heads, kv, dim, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seq + heads), 3)
+    q = jax.random.normal(ks[0], (2, seq, heads, dim), dtype)
+    k = jax.random.normal(ks[1], (2, seq, kv, dim), dtype)
+    v = jax.random.normal(ks[2], (2, seq, kv, dim), dtype)
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v)
+    _assert_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    got = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    _assert_close(got, want, jnp.float32)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 4, 64))
+    v = jax.random.normal(ks[2], (2, 128, 4, 64))
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    _assert_close(got, want, jnp.float32)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    """Output must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    _assert_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,H,P,N,chunk", [
+    (64, 4, 16, 32, 16),
+    (128, 8, 32, 64, 32),
+    (256, 8, 64, 128, 64),   # mamba2-130m-like tile
+])
+def test_ssd_scan_sweep(L, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(L + H), 5)
+    x = jax.random.normal(ks[0], (2, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (2, L, N))
+    Cm = jax.random.normal(ks[4], (2, L, N))
+    y_got, h_got = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=4)
+    y_ref, h_ref = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    _assert_close(y_got, y_ref, jnp.float32)
+    _assert_close(h_got, h_ref, jnp.float32)
+
+
+def test_ssd_scan_matches_sequential_semantics():
+    """Chunked kernel == exact O(L) recurrence."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, L, H, P, N = 1, 96, 4, 8, 16
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y_got, h_got = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32, block_h=4)
+    y_seq, h_seq = ref.ssd_scan_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_seq), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_seq), atol=1e-3)
+
+
+def test_ssd_scan_initial_state_continuation():
+    """Splitting a sequence in two with state carry == one long scan."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    B, L, H, P, N = 1, 128, 4, 8, 16
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y_full, h_full = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32, block_h=4)
+    half = L // 2
+    y1, h1 = ops.ssd_scan(x[:, :half], dt[:, :half], A, Bm[:, :half], Cm[:, :half],
+                          chunk=32, block_h=4)
+    y2, h2 = ops.ssd_scan(x[:, half:], dt[:, half:], A, Bm[:, half:], Cm[:, half:],
+                          chunk=32, block_h=4, initial_state=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, half:]), np.asarray(y2), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), atol=1e-3)

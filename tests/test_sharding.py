@@ -1,0 +1,146 @@
+"""Sharding rules: structural properties of the generated PartitionSpecs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models import get_model
+from repro.sharding.rules import batch_specs, cache_specs, compute_specs, param_specs
+
+
+class FakeMesh:
+    """Shape-only stand-in (rules only read mesh.shape)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_POD = FakeMesh(pod=2, data=16, model=16)
+
+
+def _abs_params(arch):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    return cfg, jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "deepseek-moe-16b", "mamba2-130m",
+                                  "jamba-1.5-large-398b", "whisper-small"])
+def test_sharded_dims_divisible(arch):
+    """Every mesh-sharded dim must divide by the axis size."""
+    cfg, params = _abs_params(arch)
+    specs = param_specs(params, cfg, MESH)
+    sizes = {"data": 16, "model": 16}
+
+    def check(leaf, spec):
+        for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            assert dim % total == 0, f"{arch}: {leaf.shape} vs {spec}"
+
+    jax.tree.map(check, params, specs, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "jamba-1.5-large-398b"])
+def test_stacked_layer_axis_never_sharded(arch):
+    cfg, params = _abs_params(arch)
+    specs = param_specs(params, cfg, MESH)
+
+    def check(path, spec):
+        names = "/".join(str(getattr(p, "key", p)) for p in path)
+        if any(k in names for k in ("layers", "superblocks")):
+            assert spec[0] is None, f"{names}: layer axis sharded {spec}"
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, s), params, specs,
+    )
+
+
+def test_expert_tensors_expert_parallel():
+    cfg, params = _abs_params("deepseek-moe-16b")
+    specs = param_specs(params, cfg, MESH)
+    found = []
+
+    def check(path, leaf, spec):
+        names = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "moe" in names and leaf.ndim == 4 and leaf.shape[1] == cfg.n_experts:
+            # stacked (L, E, D, F): expert dim on "model"
+            assert spec[1] == "model", f"{names}: {spec}"
+            found.append(names)
+
+    jax.tree_util.tree_map_with_path(check, params, specs)
+    assert found, "no routed expert tensors found"
+
+
+def test_no_fsdp_means_no_data_axis_on_dense_weights():
+    cfg, params = _abs_params("internlm2-1.8b")
+    assert not cfg.fsdp
+    specs = param_specs(params, cfg, MESH)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in tuple(spec), spec
+
+
+def test_fsdp_shards_weights_over_data_at_rest():
+    cfg, params = _abs_params("jamba-1.5-large-398b")
+    assert cfg.fsdp
+    specs = param_specs(params, cfg, MESH)
+    has_data = any(
+        "data" in tuple(s) for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    )
+    assert has_data
+    # compute specs strip "data" (the in-scan gather target)
+    csp = compute_specs(params, cfg, MESH)
+    for spec in jax.tree.leaves(csp, is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in tuple(spec), spec
+
+
+def test_pod_axis_prepended():
+    cfg, params = _abs_params("internlm2-1.8b")
+    import jax.numpy as jnp
+
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((2,) + s.shape, s.dtype), params
+    )
+    specs = param_specs(stacked, cfg, MESH_POD, pod_axis=True)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert spec[0] == "pod", spec
+
+
+def test_batch_specs_by_arch():
+    shape = INPUT_SHAPES["train_4k"]
+    cfg = get_config("internvl2-2b")
+    bs = batch_specs(cfg, shape)
+    assert bs["tokens"] == P("data", None)
+    assert bs["patch_embeds"] == P("data", None, None)
+    cfg2 = get_config("whisper-small")
+    assert "frames" in batch_specs(cfg2, shape)
+
+
+def test_cache_specs_decode_vs_long():
+    cfg = get_config("internlm2-1.8b")
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    specs32 = cache_specs(cfg, INPUT_SHAPES["decode_32k"], cache)
+    # internlm2 kv=8 < model=16: head_dim carries the model axis; the
+    # written seq dim stays unsharded (involuntary-remat avoidance).
+    assert specs32["k"] == P(None, "data", None, None, "model")
+    cache1 = jax.eval_shape(lambda: model.init_cache(1, 1024))
+    specs500 = cache_specs(cfg, INPUT_SHAPES["long_500k"], cache1)
+    assert specs500["k"] == P(None, None, "data", None, "model")
+
+
+def test_ssm_cache_specs():
+    cfg = get_config("mamba2-130m")
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    specs = cache_specs(cfg, INPUT_SHAPES["decode_32k"], cache)
+    # mamba2-130m has 24 SSD heads (not divisible by model=16): the rule
+    # falls back to sharding the head_dim (64) instead.
+    assert specs["ssm"] == P(None, "data", None, "model", None)
+    assert specs["conv"] == P(None, "data", None, "model")

@@ -1,0 +1,118 @@
+"""Multi-cloud execution simulator (§5 experiment engine)."""
+import statistics
+
+import pytest
+
+from repro.core import (
+    CheckpointPolicy,
+    MultiCloudSimulator,
+    SimulationConfig,
+    cloudlab_environment,
+    til_application,
+    shakespeare_application,
+)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return cloudlab_environment()
+
+
+def test_no_revocation_deterministic(env):
+    app = til_application(n_rounds=10)
+    cfg = SimulationConfig(k_r=None, vm_startup_s=1200.0)
+    r1 = MultiCloudSimulator(env, app, cfg).run()
+    r2 = MultiCloudSimulator(env, app, cfg).run()
+    assert r1.total_time_s == r2.total_time_s
+    assert r1.total_cost == r2.total_cost
+    assert r1.n_revocations == 0
+
+
+def test_paper_runtime_prediction(env):
+    """§5.4: 10 rounds predicted at 22:38 (1358 s) of FL execution."""
+    app = til_application(n_rounds=10)
+    cfg = SimulationConfig(k_r=None, vm_startup_s=1200.0)
+    res = MultiCloudSimulator(env, app, cfg).run()
+    assert res.fl_exec_time_s == pytest.approx(1358, rel=0.02)
+
+
+def test_spot_cheaper_than_on_demand_without_revocations(env):
+    app = til_application(n_rounds=10)
+    od = MultiCloudSimulator(env, app, SimulationConfig(k_r=None)).run()
+    spot = MultiCloudSimulator(
+        env, app, SimulationConfig(server_market="spot", client_market="spot", k_r=None)
+    ).run()
+    assert spot.total_cost < od.total_cost
+    # ~70% discount on every VM -> ~70% cheaper runs (placement may shift
+    # slightly since the optimizer sees spot rates).
+    assert spot.vm_cost == pytest.approx(od.vm_cost * 0.3, rel=0.05)
+
+
+def test_revocations_increase_with_rate(env):
+    app = til_application(n_rounds=30)
+    def total_revs(kr):
+        return sum(
+            MultiCloudSimulator(
+                env, app,
+                SimulationConfig(server_market="spot", client_market="spot",
+                                 k_r=kr, seed=s, remove_revoked=False,
+                                 checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+            ).run().n_revocations
+            for s in range(5)
+        )
+    assert total_revs(1800) > total_revs(14400)
+
+
+def test_on_demand_never_revokes(env):
+    app = til_application(n_rounds=20)
+    res = MultiCloudSimulator(
+        env, app, SimulationConfig(k_r=600, seed=0)  # absurdly high rate
+    ).run()
+    assert res.n_revocations == 0  # all tasks on-demand -> no spot victims
+
+
+def test_server_on_demand_only_clients_revoke(env):
+    app = til_application(n_rounds=40)
+    res = MultiCloudSimulator(
+        env, app,
+        SimulationConfig(server_market="on_demand", client_market="spot",
+                         k_r=1800, seed=1, remove_revoked=False,
+                         checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+    ).run()
+    assert all(e.task != "s" for e in res.events)
+
+
+def test_checkpoint_overhead_positive_and_small(env):
+    app = til_application(n_rounds=40)
+    base = MultiCloudSimulator(env, app, SimulationConfig(k_r=None)).run()
+    ck = MultiCloudSimulator(
+        env, app,
+        SimulationConfig(k_r=None, checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+    ).run()
+    assert ck.checkpoint_overhead_s > 0
+    overhead = (ck.fl_exec_time_s - base.fl_exec_time_s) / base.fl_exec_time_s
+    assert 0 < overhead < 0.15  # paper reports 2-8%
+
+
+def test_rounds_all_complete_under_failures(env):
+    app = shakespeare_application(n_rounds=20)
+    res = MultiCloudSimulator(
+        env, app,
+        SimulationConfig(server_market="spot", client_market="spot", k_r=3600,
+                         seed=3, remove_revoked=False,
+                         checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+    ).run()
+    assert res.rounds_completed == 20
+    assert res.total_time_s > 0 and res.total_cost > 0
+
+
+def test_events_are_ordered_and_spot_only(env):
+    app = til_application(n_rounds=60)
+    res = MultiCloudSimulator(
+        env, app,
+        SimulationConfig(server_market="spot", client_market="spot", k_r=2000,
+                         seed=5, remove_revoked=False,
+                         checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+    ).run()
+    times = [e.time_s for e in res.events]
+    assert times == sorted(times)

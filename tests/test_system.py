@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests: the full Multi-FedLS pipeline — Pre-
+Scheduling -> Initial Mapping -> (simulated) execution with Fault
+Tolerance + Dynamic Scheduler — against the paper's published behaviour,
+plus a real-model FL run whose measured message sizes feed back into the
+scheduler's cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SERVER,
+    CheckpointPolicy,
+    CostModel,
+    InitialMapping,
+    MultiCloudSimulator,
+    PreScheduling,
+    ProbeResult,
+    SimulationConfig,
+    TableProbe,
+    cloudlab_environment,
+    aws_gcp_environment,
+    til_application,
+    til_application_aws,
+)
+
+
+def test_full_pipeline_prescheduling_to_simulation():
+    """Pre-Scheduling probes -> slowdowns -> Initial Mapping -> simulate."""
+    env = cloudlab_environment()
+    # Rebuild the slowdown tables from raw probe timings (Table 3-style):
+    # replay the cached slowdowns as raw times against the baseline VM.
+    base_t = 100.0
+    vm_times = {
+        vm: ProbeResult(train_time_s=sl * base_t * 0.97, test_time_s=sl * base_t * 0.03)
+        for vm, sl in env.sl_inst.items()
+    }
+    base_c = 10.0
+    pair_times = {
+        pair: ProbeResult(train_time_s=sl * base_c * 2 / 3, test_time_s=sl * base_c / 3)
+        for pair, sl in env.sl_comm.items()
+    }
+    probe = TableProbe(vm_times, pair_times)
+    ps = PreScheduling(env, probe)
+    result = ps.run(baseline_vm="vm_121", baseline_pair=("cloud_b_apt", "cloud_b_apt"))
+    ps.attach_to_environment(result)
+    # Derived slowdowns must reproduce the published tables.
+    assert result.sl_inst["vm_126"] == pytest.approx(0.045, rel=1e-6)
+    assert result.sl_comm[("cloud_a_utah", "cloud_a_utah")] == pytest.approx(0.372, rel=1e-6)
+
+    app = til_application(n_rounds=10)
+    sim = MultiCloudSimulator(env, app, SimulationConfig(k_r=None, vm_startup_s=1200.0))
+    res = sim.run()
+    assert res.initial_mapping.vm_of(SERVER) in ("vm_121", "vm_124")
+    assert res.fl_exec_time_s == pytest.approx(1358, rel=0.02)
+
+
+def test_paper_headline_spot_savings():
+    """§5.7 headline: spot + recovery cut costs ~57% vs on-demand with a
+    small time increase. We assert the simulator reproduces the *direction
+    and magnitude class* on the AWS/GCP testbed."""
+    env = aws_gcp_environment()
+    app = til_application_aws(n_rounds=10)  # 2 clients (GPU quotas)
+    od = MultiCloudSimulator(env, app, SimulationConfig(k_r=None, vm_startup_s=154.0)).run()
+    spots = [
+        MultiCloudSimulator(
+            env, app,
+            SimulationConfig(server_market="spot", client_market="spot",
+                             k_r=7200, seed=s, vm_startup_s=154.0,
+                             checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+        ).run()
+        for s in range(3)
+    ]
+    mean_cost = np.mean([r.total_cost for r in spots])
+    assert mean_cost < od.total_cost  # spot run is cheaper
+    savings = 1 - mean_cost / od.total_cost
+    assert savings > 0.3  # paper: 56.92%
+
+
+def test_measured_messages_drive_cost_model():
+    """Real serialized model weights -> MessageSizes -> comm costs."""
+    import dataclasses
+
+    from repro.federated import measure_messages, to_cost_model_sizes
+    from repro.models.fl_models import LSTMConfig, init_shakespeare_lstm
+
+    lc = LSTMConfig(vocab_size=64, hidden=64)
+    params = init_shakespeare_lstm(jax.random.PRNGKey(0), lc)
+    sizes = to_cost_model_sizes(measure_messages(params, {"acc": 0.0}))
+
+    env = cloudlab_environment()
+    app = dataclasses.replace(til_application(), messages=sizes)
+    cm = CostModel(env, app, 0.5)
+    cost = cm.comm_cost("cloud_a", "cloud_b")
+    # 3 weight transfers + metrics at $0.012/GB, both directions
+    weight_gb = sizes.s_msg_train_gb
+    expected = (2 * weight_gb) * 0.012 + (weight_gb + sizes.c_msg_test_gb) * 0.012
+    assert cost == pytest.approx(expected, rel=1e-9)
+
+
+def test_dynamic_rescheduling_under_cascade():
+    """Multiple sequential revocations: system keeps making progress and
+    every replacement differs from the VM that just died."""
+    env = cloudlab_environment()
+    app = til_application(n_rounds=30)
+    res = MultiCloudSimulator(
+        env, app,
+        SimulationConfig(server_market="spot", client_market="spot",
+                         k_r=1500, seed=2, vm_startup_s=600.0,
+                         checkpoint=CheckpointPolicy(server_interval_rounds=5),
+                         remove_revoked=True),
+    ).run()
+    assert res.rounds_completed == 30
+    for e in res.events:
+        assert e.new_vm != e.old_vm
+    assert res.n_revocations >= 1
