@@ -1,0 +1,181 @@
+"""Aggregation-engine benchmark: seed per-leaf FedAvg vs the fused engine.
+
+Sweeps a clients x param-count grid and, for each shape, times
+
+  seed_us      — `aggregation.fedavg`, the per-leaf op-by-op oracle the
+                 seed server used on every round;
+  engine_us    — `AggregationEngine.aggregate`, the fused round path;
+  flat_us      — `AggregationEngine.reduce_flat` on a pre-stacked (N, L)
+                 buffer (the pod/replica-stack path), with achieved GB/s;
+  stream_us    — `StreamingAggregator` folding clients one at a time.
+
+Writes BENCH_agg.json next to the repo root (or --out) so the perf
+trajectory is tracked PR-over-PR, and prints `name,us_per_call,derived`
+CSV rows on stdout like benchmarks/run.py. The fused engine result is
+checked against the oracle (max abs err <= 1e-5 in fp32) on every shape.
+
+Usage:
+  PYTHONPATH=src python benchmarks/aggregation_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated.agg_engine import AggregationEngine
+from repro.federated.aggregation import fedavg
+
+try:  # same timing harness as the kernel benchmarks
+    from .kernel_bench import _time_fn
+except ImportError:  # standalone `python benchmarks/aggregation_bench.py`
+    from kernel_bench import _time_fn
+
+Row = Tuple[str, float, str]
+
+# The acceptance shape (8 clients x 4M params) is in every grid.
+FULL_GRID = [
+    (4, 1_000_000), (8, 1_000_000), (16, 1_000_000),
+    (4, 4_000_000), (8, 4_000_000), (16, 4_000_000),
+    (8, 16_000_000),
+]
+QUICK_GRID = [(2, 65_536), (8, 4_000_000)]
+
+N_LEAVES = 4  # mimic a real model: the flat param count split over leaves
+
+
+def _make_trees(n_clients: int, n_params: int, seed: int = 0):
+    """N structurally-identical pytrees, ragged leaves, ~n_params total."""
+    rng = np.random.default_rng(seed)
+    base = n_params // N_LEAVES
+    sizes = [base] * (N_LEAVES - 1) + [n_params - base * (N_LEAVES - 1)]
+    trees = [
+        {f"leaf{i}": jnp.asarray(rng.standard_normal(s).astype(np.float32))
+         for i, s in enumerate(sizes)}
+        for _ in range(n_clients)
+    ]
+    weights = [float(i + 1) for i in range(n_clients)]
+    return trees, weights
+
+
+def bench_shape(n_clients: int, n_params: int, iters: int = 5) -> Dict[str, Any]:
+    trees, weights = _make_trees(n_clients, n_params)
+    engine = AggregationEngine()
+
+    # correctness first: fused engine vs per-leaf oracle
+    want = fedavg(trees, weights)
+    got = engine.aggregate(trees, weights)
+    err = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want))
+    )
+
+    seed_us = _time_fn(lambda: fedavg(trees, weights), iters=iters)
+    engine_us = _time_fn(lambda: engine.aggregate(trees, weights), iters=iters)
+
+    stacked = jnp.stack(
+        [jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(t)]) for t in trees]
+    )
+    w_arr = jnp.asarray(weights, jnp.float32)
+    # donate=False: the same stacked buffer is reused across timing iters
+    # (donation would consume it on the TPU path).
+    flat_us = _time_fn(
+        lambda: engine.reduce_flat(stacked, w_arr, donate=False), iters=iters
+    )
+    flat_bytes = stacked.nbytes + stacked.shape[1] * 4
+    flat_gbs = flat_bytes / (flat_us * 1e-6) / 1e9
+
+    def stream():
+        agg = engine.streaming()
+        for t, w in zip(trees, weights):
+            agg.add(t, w)
+        return agg.result()
+
+    stream_us = _time_fn(stream, iters=iters)
+
+    entry = {
+        "n_clients": n_clients,
+        "n_params": n_params,
+        "seed_us": round(seed_us, 1),
+        "engine_us": round(engine_us, 1),
+        "flat_us": round(flat_us, 1),
+        "stream_us": round(stream_us, 1),
+        "speedup": round(seed_us / engine_us, 2),
+        "flat_gbs": round(flat_gbs, 2),
+        "max_abs_err": err,
+    }
+    print(
+        f"[agg] N={n_clients} P={n_params//1000}k: seed={seed_us:.0f}us "
+        f"engine={engine_us:.0f}us ({entry['speedup']}x) flat={flat_us:.0f}us "
+        f"({flat_gbs:.1f} GB/s) stream={stream_us:.0f}us err={err:.2e}",
+        file=sys.stderr,
+    )
+    return entry
+
+
+def run_grid(quick: bool = False, iters: int = 5) -> Dict[str, Any]:
+    grid = QUICK_GRID if quick else FULL_GRID
+    entries = [bench_shape(n, p, iters=iters) for n, p in grid]
+    acceptance = next(
+        (e for e in entries if e["n_clients"] == 8 and e["n_params"] == 4_000_000),
+        None,
+    )
+    report = {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "iters": iters,
+        "entries": entries,
+        "acceptance_8x4M": acceptance,
+    }
+    if acceptance is not None:
+        ok = acceptance["speedup"] >= 3.0 and acceptance["max_abs_err"] <= 1e-5
+        report["acceptance_ok"] = ok
+        print(
+            f"[agg] acceptance 8x4M: {acceptance['speedup']}x "
+            f"(target >=3x), err={acceptance['max_abs_err']:.2e} "
+            f"(target <=1e-5) -> {'OK' if ok else 'FAIL'}",
+            file=sys.stderr,
+        )
+    return report
+
+
+def bench_aggregation() -> List[Row]:
+    """run.py-compatible rows (quick grid, keeps the harness fast)."""
+    report = run_grid(quick=True, iters=3)
+    rows: List[Row] = []
+    for e in report["entries"]:
+        name = f"agg_engine_{e['n_clients']}x{e['n_params']//1_000_000}M" \
+            if e["n_params"] >= 1_000_000 else \
+            f"agg_engine_{e['n_clients']}x{e['n_params']//1000}k"
+        rows.append((name, e["engine_us"],
+                     f"speedup={e['speedup']}x;flat_gbs={e['flat_gbs']}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_agg.json")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, iters=args.iters)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[agg] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for e in report["entries"]:
+        print(f"agg_engine_{e['n_clients']}x{e['n_params']},{e['engine_us']},"
+              f"speedup={e['speedup']}x")
+    if report.get("acceptance_ok") is False:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

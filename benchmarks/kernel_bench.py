@@ -17,12 +17,18 @@ Row = Tuple[str, float, str]
 
 
 def _time_fn(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
-    t0 = time.monotonic()
+    """Median wall time of fn(*args) in microseconds.
+
+    One warmup call (jit compile) blocked on the whole result —
+    `jax.block_until_ready` traverses tuples/pytrees natively.
+    """
+    jax.block_until_ready(fn(*args))
+    times = []
     for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.monotonic() - t0) / iters * 1e6
+        t0 = time.monotonic()
+        jax.block_until_ready(fn(*args))
+        times.append(time.monotonic() - t0)
+    return float(np.median(times)) * 1e6
 
 
 def bench_kernels() -> List[Row]:

@@ -7,6 +7,7 @@ import sys
 
 
 def main() -> None:
+    from .aggregation_bench import bench_aggregation
     from .kernel_bench import bench_kernels
     from .paper_tables import (
         bench_checkpoint_overhead,
@@ -26,6 +27,7 @@ def main() -> None:
         bench_failure_benchmarks,   # Tables 7, 8
         bench_poc_aws_gcp,          # §5.7
         bench_kernels,              # Pallas kernel hot spots
+        bench_aggregation,          # fused FedAvg engine vs seed oracle
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]
     print("name,us_per_call,derived")

@@ -7,7 +7,7 @@ pair, where market is "on_demand" or "spot".
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 from .application_model import FLApplication
 from .cloud_model import CloudEnvironment, VMType
@@ -43,12 +43,17 @@ class CostModel:
         env: CloudEnvironment,
         app: FLApplication,
         alpha: float = 0.5,
+        aggreg_time_fn: Optional[Callable[[str], float]] = None,
     ) -> None:
         if not 0.0 <= alpha <= 1.0:
             raise ValueError("alpha must be in [0, 1]")
         self.env = env
         self.app = app
         self.alpha = alpha
+        # Optional hook: vm_id -> seconds, e.g. built from the measured
+        # aggregation-engine bandwidth (repro.federated.agg_engine
+        # .make_measured_aggreg_fn) instead of the static aggreg_bl.
+        self.aggreg_time_fn = aggreg_time_fn
         self._t_max: Optional[float] = None
         self._cost_max: Optional[float] = None
 
@@ -64,7 +69,13 @@ class CostModel:
         return (self.app.train_comm_bl + self.app.test_comm_bl) * sl
 
     def t_aggreg(self, vm_id: str) -> float:
-        """Server aggregation time on vm (scaled like any execution)."""
+        """Server aggregation time on vm (scaled like any execution).
+
+        Uses the measured-engine hook when configured, else the paper's
+        profiled `aggreg_bl` baseline.
+        """
+        if self.aggreg_time_fn is not None:
+            return self.aggreg_time_fn(vm_id)
         return self.app.aggreg_bl * self.env.inst_slowdown(vm_id)
 
     def comm_cost(self, client_provider: str, server_provider: str) -> float:

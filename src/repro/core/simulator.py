@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .application_model import FLApplication
 from .cloud_model import CloudEnvironment
@@ -42,6 +42,11 @@ class SimulationConfig:
     # per region are the same as in previous work"). Set to "actual" to
     # optimize with the execution market's prices instead.
     mapping_prices: str = "on_demand"     # "on_demand" | "actual"
+    # Optional vm_id -> seconds override for the server aggregation time,
+    # e.g. derived from the measured fused-engine bandwidth via
+    # repro.federated.agg_engine.make_measured_aggreg_fn. None keeps the
+    # paper's profiled aggreg_bl baseline.
+    aggreg_time_fn: Optional[Callable[[str], float]] = None
 
 
 @dataclasses.dataclass
@@ -91,7 +96,9 @@ class MultiCloudSimulator:
         self.env = env
         self.app = app
         self.config = config
-        self.cost_model = CostModel(env, app, config.alpha)
+        self.cost_model = CostModel(
+            env, app, config.alpha, aggreg_time_fn=config.aggreg_time_fn
+        )
         self.scheduler = DynamicScheduler(self.cost_model)
 
     # ------------------------------------------------------------------

@@ -1,3 +1,11 @@
+from .agg_engine import (
+    AggregationEngine,
+    RavelPlan,
+    StreamingAggregator,
+    fused_stacked_tree_reduce,
+    make_measured_aggreg_fn,
+    plan_for,
+)
 from .aggregation import aggregate_metrics, fedavg, fedavg_stacked
 from .client import ClientResult, EvalResult, FLClient
 from .messages import (
@@ -15,14 +23,20 @@ from .pod_fedavg import (
 from .server import FLRunResult, FLServer, RoundRecord
 
 __all__ = [
+    "AggregationEngine",
     "ClientResult",
     "EvalResult",
     "FLClient",
     "FLRunResult",
     "FLServer",
+    "RavelPlan",
     "RoundMessageLog",
     "RoundRecord",
+    "StreamingAggregator",
     "aggregate_metrics",
+    "fused_stacked_tree_reduce",
+    "make_measured_aggreg_fn",
+    "plan_for",
     "fedavg",
     "fedavg_stacked",
     "init_pod_state",

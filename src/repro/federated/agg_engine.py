@@ -1,0 +1,442 @@
+"""Fused FedAvg aggregation engine — the server's per-round hot path.
+
+The seed implementation (`aggregation.fedavg`, kept as the correctness
+oracle) reduces N client pytrees with a per-leaf Python loop of N
+multiply-adds, each dispatched op-by-op and materializing N fp32
+temporaries per leaf.  At cross-silo model sizes this is a pure
+memory-bound streaming reduce, so the engine's job is to touch every
+client byte exactly once per round.
+
+Dispatch hierarchy (backend-aware, detected once per engine):
+
+  TPU   — flatten-once: each client tree is raveled through a cached
+          :class:`RavelPlan` (treedef / shape-layout computed once per
+          model structure, reused every round — no per-round retracing
+          or re-padding) into one contiguous fp32 ``(N, L)`` buffer,
+          reduced by the Pallas ``fedavg_reduce`` kernel (compiled, not
+          interpreted), with the stacked buffer *donated* so XLA reuses
+          the HBM instead of doubling peak memory.
+  CPU/GPU — one jitted fused reduce over the client trees: XLA fuses the
+          weighted multiply-add chain per leaf into a single pass over
+          the inputs (a dot over the client axis), with no per-round
+          Python loop and no ``(N, L)`` materialization.  For buffers
+          that are *already* stacked ``(N, L)`` (pod replica stacks,
+          benchmarks) the reduce is a single fp32-accumulated
+          ``jnp.einsum``.
+
+A chunked mode (`reduce_flat(..., chunk_elems=...)`) streams the reduce
+in O(N·block) rather than O(N·L) working memory, and
+:class:`StreamingAggregator` folds clients in *as they land* (running
+weighted accumulation with an O(L) donated-in-place accumulator), so
+asynchronously arriving silos never require holding all N models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Ravel plans: flatten/unflatten compiled once per model structure
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RavelPlan:
+    """Cached flatten/unflatten layout for one pytree structure.
+
+    ``flatten_stack`` ravels a *list* of N structurally-identical trees
+    into one contiguous fp32 ``(N, L)`` buffer in a single jitted call;
+    ``unflatten`` restores an ``(L,)`` vector to the original treedef,
+    shapes, and per-leaf dtypes.  Both are traced exactly once per model
+    structure (the plan is cached), so the per-round cost is pure data
+    movement.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    total_elems: int
+    flatten: Callable[[Any], jnp.ndarray]
+    flatten_stack: Callable[[Sequence[Any]], jnp.ndarray]
+    unflatten: Callable[[jnp.ndarray], Any]
+
+
+_PLAN_CACHE: Dict[Any, RavelPlan] = {}
+
+
+def _structure_key(tree: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(tree)
+    return (
+        treedef,
+        tuple(tuple(l.shape) for l in leaves),
+        tuple(jnp.result_type(l).name for l in leaves),
+    )
+
+
+def plan_for(tree: Any) -> RavelPlan:
+    """Return the (cached) RavelPlan for ``tree``'s structure."""
+    key = _structure_key(tree)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        return plan
+
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot build a ravel plan for an empty pytree")
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.result_type(l) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    total = int(sum(sizes))
+
+    @jax.jit
+    def flatten(t):
+        ls = jax.tree.leaves(t)
+        return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in ls])
+
+    @jax.jit
+    def flatten_stack(trees):
+        rows = [
+            jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(t)])
+            for t in trees
+        ]
+        return jnp.stack(rows)
+
+    @jax.jit
+    def unflatten(vec):
+        outs = []
+        off = 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            outs.append(vec[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, outs)
+
+    plan = RavelPlan(
+        treedef=treedef, shapes=shapes, dtypes=dtypes, sizes=sizes,
+        total_elems=total, flatten=flatten, flatten_stack=flatten_stack,
+        unflatten=unflatten,
+    )
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Fused flat reduces
+# ---------------------------------------------------------------------------
+
+def _dot_reduce(stacked: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(N, L) x (N,) -> (L,): single fp32-accumulated contraction.
+
+    ``w`` must already be normalized."""
+    out = jnp.einsum("n,nl->l", w, stacked, preferred_element_type=jnp.float32)
+    return out.astype(stacked.dtype)
+
+
+def _pallas_flat_reduce(stacked, weights, interpret):
+    from repro.kernels.fedavg_reduce import fedavg_reduce as _kernel
+    return _kernel(stacked, weights, interpret=interpret)
+
+
+def fused_stacked_tree_reduce(stacked: Any, weights: jnp.ndarray) -> Any:
+    """Traceable FedAvg over a pytree with a leading client/pod axis.
+
+    Flattens every leaf of the replica stack into one ``(N, L)`` buffer
+    and reduces it with a single fused contraction (Pallas kernel on
+    TPU, fp32 einsum elsewhere) instead of a per-leaf ``tree.map`` —
+    this is the fused call `pod_fedavg` lowers inside `fl_round_step`.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    if not leaves:
+        return stacked
+    n = leaves[0].shape[0]
+    w = weights.astype(jnp.float32)
+    flat = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+    if jax.default_backend() == "tpu":
+        red = _pallas_flat_reduce(flat, w, interpret=False)
+    else:
+        red = _dot_reduce(flat, w / jnp.sum(w))
+    outs = []
+    off = 0
+    for l in leaves:
+        size = int(np.prod(l.shape[1:])) if l.ndim > 1 else 1
+        outs.append(red[off:off + size].reshape(l.shape[1:]).astype(l.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AggStats:
+    """Engine counters: `n_traces` counts XLA retraces (a steady-state
+    round must hit the jit cache, i.e. n_traces stays flat while n_calls
+    grows), `last_bytes` is the client-side byte volume of the last
+    reduce (for GB/s accounting)."""
+
+    n_calls: int = 0
+    n_traces: int = 0
+    last_bytes: int = 0
+    total_bytes: int = 0
+
+
+class AggregationEngine:
+    """Backend-aware fused FedAvg reducer with cached per-model plans.
+
+    Parameters
+    ----------
+    backend : override ``jax.default_backend()`` ("tpu" enables the
+        flatten-once + Pallas + donation path).
+    use_pallas : force the kernel path on/off (defaults to backend=="tpu").
+    interpret : explicit Pallas interpret-mode override (tests); None
+        defers to backend detection in `kernels.ops`.
+    chunk_elems : if set, `reduce_flat` streams in column blocks of this
+        many elements (O(N·block) working memory).
+    """
+
+    def __init__(
+        self,
+        backend: Optional[str] = None,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+        chunk_elems: Optional[int] = None,
+    ) -> None:
+        self.backend = backend if backend is not None else jax.default_backend()
+        self.use_pallas = (self.backend == "tpu") if use_pallas is None else use_pallas
+        self.interpret = interpret
+        self.chunk_elems = chunk_elems
+        self.stats = AggStats()
+        self._tree_reduce_cache: Dict[Any, Callable] = {}
+
+    # -- weights -------------------------------------------------------------
+    @staticmethod
+    def _normalized_weights(weights: Sequence[float]) -> np.ndarray:
+        w = np.asarray(weights, np.float64)
+        if w.ndim != 1 or w.size == 0:
+            raise ValueError("weights must be a non-empty 1-D sequence")
+        if w.sum() <= 0:
+            raise ValueError("aggregation weights must sum to a positive value")
+        return (w / w.sum()).astype(np.float32)
+
+    # -- tree path (FLServer hot path) ---------------------------------------
+    def aggregate(self, client_params: Sequence[Any], weights: Sequence[float]) -> Any:
+        """Weighted average of N client pytrees in one fused call.
+
+        Numerically equivalent to the `aggregation.fedavg` oracle (fp32
+        accumulation, cast back to each leaf's dtype) but with exactly
+        one pass over the client bytes per round.
+        """
+        w = self._normalized_weights(weights)
+        if len(client_params) != w.size:
+            raise ValueError("len(client_params) != len(weights)")
+        self.stats.n_calls += 1
+        nbytes = sum(l.nbytes for t in client_params for l in jax.tree.leaves(t))
+        self.stats.last_bytes = nbytes
+        self.stats.total_bytes += nbytes
+
+        if self.use_pallas:
+            plan = plan_for(client_params[0])
+            stacked = plan.flatten_stack(list(client_params))
+            red = self.reduce_flat(stacked, jnp.asarray(w))
+            return plan.unflatten(red)
+
+        fn = self._get_tree_reduce(client_params)
+        return fn(list(client_params), jnp.asarray(w))
+
+    def _get_tree_reduce(self, client_params: Sequence[Any]) -> Callable:
+        key = (len(client_params), _structure_key(client_params[0]))
+        fn = self._tree_reduce_cache.get(key)
+        if fn is not None:
+            return fn
+        stats = self.stats
+
+        def tree_reduce(trees, w):
+            stats.n_traces += 1  # executes at trace time only
+
+            def avg(*leaves):
+                acc = leaves[0].astype(jnp.float32) * w[0]
+                for i in range(1, len(leaves)):
+                    acc = acc + leaves[i].astype(jnp.float32) * w[i]
+                return acc.astype(leaves[0].dtype)
+
+            return jax.tree.map(avg, *trees)
+
+        fn = jax.jit(tree_reduce)
+        self._tree_reduce_cache[key] = fn
+        return fn
+
+    # -- flat path ((N, L) stacked buffers) ----------------------------------
+    def reduce_flat(
+        self,
+        stacked: jnp.ndarray,
+        weights: jnp.ndarray,
+        donate: Optional[bool] = None,
+        chunk_elems: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Weighted average over axis 0 of a contiguous (N, L) buffer.
+
+        ``donate=True`` hands the stacked buffer to XLA (the caller must
+        not reuse it); defaults to donating only on the Pallas/TPU path,
+        where the buffer would otherwise be duplicated for padding.
+        Chunked mode slices the buffer, so donation does not apply there
+        (an explicit ``donate=True`` with chunking is an error).
+        """
+        if stacked.ndim != 2:
+            raise ValueError(f"expected (N, L) stacked buffer, got {stacked.shape}")
+        w = weights.astype(jnp.float32)
+        chunk = chunk_elems if chunk_elems is not None else self.chunk_elems
+        if chunk:
+            if donate:
+                raise ValueError("chunked reduce slices the buffer; donation "
+                                 "does not apply (pass donate=False/None)")
+            return self._reduce_flat_chunked(stacked, w, int(chunk))
+        if donate is None:
+            donate = self.use_pallas and self.backend == "tpu"
+        return self._get_flat_reduce(donate)(stacked, w)
+
+    def _get_flat_reduce(self, donate: bool) -> Callable:
+        """Per-engine jitted flat reduce (trace-counted, backend-routed)."""
+        key = ("flat", self.use_pallas, bool(donate))
+        fn = self._tree_reduce_cache.get(key)
+        if fn is not None:
+            return fn
+        stats = self.stats
+        if self.use_pallas:
+            interp = self.interpret
+            if interp is None:
+                from repro.kernels.ops import _interpret_default
+                interp = _interpret_default()
+
+            def flat_reduce(stacked, w):
+                stats.n_traces += 1  # executes at trace time only
+                return _pallas_flat_reduce(stacked, w, interpret=interp)
+        else:
+            def flat_reduce(stacked, w):
+                stats.n_traces += 1  # executes at trace time only
+                return _dot_reduce(stacked, w / jnp.sum(w))
+
+        fn = jax.jit(flat_reduce, donate_argnums=(0,) if donate else ())
+        self._tree_reduce_cache[key] = fn
+        return fn
+
+    def _reduce_flat_chunked(self, stacked, w, chunk):
+        """Column-blocked streaming reduce: O(N*chunk) working set.
+
+        Each block goes through the same backend-routed reduce as the
+        unchunked path (Pallas kernel when use_pallas, einsum otherwise)."""
+        _, L = stacked.shape
+        fn = self._get_flat_reduce(donate=False)
+        outs = [fn(stacked[:, off:off + chunk], w) for off in range(0, L, chunk)]
+        return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+
+    # -- streaming -----------------------------------------------------------
+    def streaming(self) -> "StreamingAggregator":
+        """New per-round streaming accumulator (async client folding)."""
+        return StreamingAggregator(self)
+
+
+# ---------------------------------------------------------------------------
+# Streaming / incremental accumulation
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _scale_tree(tree, w):
+    return jax.tree.map(lambda l: l.astype(jnp.float32) * w, tree)
+
+
+# The accumulator is donated: same shape/dtype in and out, so XLA updates
+# it in place — O(L) extra memory total, regardless of client count.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _accum_tree(acc, tree, w):
+    return jax.tree.map(lambda a, l: a + l.astype(jnp.float32) * w, acc, tree)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scale_acc(acc, inv):
+    return jax.tree.map(lambda a: a * inv, acc)
+
+
+class StreamingAggregator:
+    """Running weighted accumulation: fold clients in as they land.
+
+    ``add(params, weight)`` costs one fused pass over that client's
+    bytes and keeps only a single fp32 accumulator (donated in place),
+    so asynchronously arriving silos are aggregated in O(L) memory
+    rather than O(N·L).  ``result()`` normalizes by the running weight
+    total, casts back to the model dtypes, and consumes the accumulator.
+    """
+
+    def __init__(self, engine: Optional[AggregationEngine] = None) -> None:
+        self._engine = engine
+        self._acc: Any = None
+        self._dtypes: Optional[List[Any]] = None
+        self._treedef = None
+        self._wsum = 0.0
+        self.n_clients = 0
+
+    def add(self, params: Any, weight: float) -> None:
+        w = float(weight)
+        if w < 0:
+            raise ValueError("client weight must be non-negative")
+        if self._acc is None:
+            leaves, self._treedef = jax.tree.flatten(params)
+            self._dtypes = [jnp.result_type(l) for l in leaves]
+            self._acc = _scale_tree(params, jnp.float32(w))
+        else:
+            self._acc = _accum_tree(self._acc, params, jnp.float32(w))
+        self._wsum += w
+        self.n_clients += 1
+        if self._engine is not None:
+            nbytes = sum(l.nbytes for l in jax.tree.leaves(params))
+            self._engine.stats.last_bytes = nbytes
+            self._engine.stats.total_bytes += nbytes
+
+    def result(self) -> Any:
+        if self._acc is None:
+            raise ValueError("no clients have been added")
+        if self._wsum <= 0:
+            raise ValueError("aggregation weights must sum to a positive value")
+        acc = _scale_acc(self._acc, jnp.float32(1.0 / self._wsum))
+        self._acc = None  # consumed (the buffer was donated)
+        leaves = jax.tree.leaves(acc)
+        outs = [l.astype(dt) for l, dt in zip(leaves, self._dtypes)]
+        if self._engine is not None:
+            self._engine.stats.n_calls += 1
+        return jax.tree.unflatten(self._treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# Cost-accounting hook (simulator integration)
+# ---------------------------------------------------------------------------
+
+def make_measured_aggreg_fn(
+    env: Any,
+    bytes_per_round: int,
+    gb_per_s: float,
+    base_vm_id: Optional[str] = None,
+) -> Callable[[str], float]:
+    """Build a `CostModel.t_aggreg` override from a measured reduce rate.
+
+    ``bytes_per_round`` is the client-side byte volume the server reduces
+    each round (N clients x model bytes, e.g. `AggStats.last_bytes`);
+    ``gb_per_s`` the measured engine bandwidth (benchmarks/aggregation_bench
+    reports it per shape).  The time scales with each VM's instance
+    slowdown exactly like the paper's `aggreg_bl` baseline does.
+    """
+    if gb_per_s <= 0:
+        raise ValueError("gb_per_s must be positive")
+    base_s = bytes_per_round / (gb_per_s * 1e9)
+    base_slow = env.inst_slowdown(base_vm_id) if base_vm_id is not None else 1.0
+
+    def t_aggreg(vm_id: str) -> float:
+        return base_s * env.inst_slowdown(vm_id) / base_slow
+
+    return t_aggreg

@@ -2,9 +2,18 @@
 
 FedAvg (McMahan et al. 2017) is the paper's method for all three
 applications (§5.1): the aggregated weight is the sample-count-weighted
-mean of client weights. `fedavg` is the pure-jnp implementation;
-`repro.kernels.fedavg_reduce` provides the Pallas TPU kernel with this as
-its oracle (dispatch via use_kernel=True).
+mean of client weights.
+
+Dispatch hierarchy (hot paths never run the per-leaf Python loop):
+
+  `agg_engine.AggregationEngine`   — what `FLServer` calls each round:
+      one fused jitted reduce on CPU/GPU, flatten-once + Pallas
+      `fedavg_reduce` + buffer donation on TPU.
+  `fedavg_stacked` (below)         — traceable fused reduce over a
+      replica stack, lowered inside `pod_fedavg.fl_round_step`; wraps
+      `agg_engine.fused_stacked_tree_reduce`.
+  `fedavg` (below)                 — the pure-jnp per-leaf oracle, kept
+      ONLY as the correctness ground truth for tests and benchmarks.
 """
 from __future__ import annotations
 
@@ -16,7 +25,11 @@ import numpy as np
 
 
 def fedavg(client_params: Sequence[Any], weights: Sequence[float]) -> Any:
-    """Weighted average of client parameter pytrees."""
+    """Weighted average of client parameter pytrees (per-leaf oracle).
+
+    This is the slow op-by-op reference; round paths go through
+    `agg_engine.AggregationEngine.aggregate` instead.
+    """
     w = np.asarray(weights, np.float64)
     if w.sum() <= 0:
         raise ValueError("aggregation weights must sum to a positive value")
@@ -36,14 +49,14 @@ def fedavg_stacked(stacked: Any, weights: jnp.ndarray) -> Any:
 
     stacked: pytree whose leaves have leading dim n_clients;
     weights: (n_clients,) float32, need not be normalized.
+
+    The whole flattened replica stack is reduced in one fused call
+    ((N, L) contraction; Pallas kernel on TPU) rather than a per-leaf
+    `tree.map` — see `agg_engine.fused_stacked_tree_reduce`.
     """
-    w = weights / jnp.sum(weights)
+    from .agg_engine import fused_stacked_tree_reduce
 
-    def avg(leaf):
-        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
-
-    return jax.tree.map(avg, stacked)
+    return fused_stacked_tree_reduce(stacked, weights)
 
 
 def aggregate_metrics(

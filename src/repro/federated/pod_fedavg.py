@@ -7,6 +7,10 @@ axis, so every pod holds an independent replica; local SGD steps are
 pod-local). Once per round, FedAvg averages the replicas over the pod
 axis — the ONLY cross-pod collective, an all-reduce of the parameter tree
 over the slow DCN axis, amortized over `local_steps` ICI-local steps.
+The reduce itself is `aggregation.fedavg_stacked`, which flattens the
+whole replica stack into one (n_pods, L) buffer and lowers a single
+fused contraction (Pallas `fedavg_reduce` on TPU) instead of a per-leaf
+`tree.map`.
 This is exactly the paper's communication pattern (rounds as
 synchronization barriers) expressed in the TPU memory/collective
 hierarchy.

@@ -3,7 +3,9 @@
 Each round:
   training phase   — send s_msg_train (current weights) to every client;
                      each trains locally and returns c_msg_train;
-                     server aggregates (FedAvg).
+                     server aggregates (FedAvg) through the fused
+                     `AggregationEngine` (one jitted reduce per round;
+                     Pallas kernel + buffer donation on TPU).
   evaluation phase — send s_msg_aggreg (aggregated weights); clients
                      evaluate and return c_msg_test metrics; server
                      aggregates metrics and starts the next round.
@@ -21,12 +23,15 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+import jax
+
 from repro.checkpoint import (
     ClientCheckpointManager,
     ServerCheckpointManager,
     resolve_freshest,
 )
-from .aggregation import aggregate_metrics, fedavg
+from .agg_engine import AggregationEngine
+from .aggregation import aggregate_metrics
 from .client import ClientResult, EvalResult, FLClient
 from .messages import RoundMessageLog, measure_messages
 
@@ -40,6 +45,7 @@ class RoundRecord:
     metrics: Dict[str, float]
     message_log: Optional[RoundMessageLog]
     restarted_from: Optional[str] = None
+    agg_time_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -62,9 +68,11 @@ class FLServer:
         client_ckpts: Optional[Dict[str, ClientCheckpointManager]] = None,
         fault_hook: Optional[Callable[[int], Optional[str]]] = None,
         measure_round_messages: bool = False,
+        agg_engine: Optional[AggregationEngine] = None,
     ) -> None:
         self.clients = list(clients)
         self.params = initial_params
+        self.agg_engine = agg_engine if agg_engine is not None else AggregationEngine()
         self.server_ckpt = server_ckpt
         self.client_ckpts = client_ckpts or {}
         self.fault_hook = fault_hook
@@ -101,9 +109,12 @@ class FLServer:
         # Training phase: s_msg_train -> local train -> c_msg_train.
         t0 = time.monotonic()
         results: List[ClientResult] = [c.train(self.params) for c in self.clients]
-        self.params = fedavg(
+        t_agg = time.monotonic()
+        self.params = self.agg_engine.aggregate(
             [res.params for res in results], [res.n_samples for res in results]
         )
+        jax.block_until_ready(self.params)
+        agg_time = time.monotonic() - t_agg
         train_time = time.monotonic() - t0
 
         # Evaluation phase: s_msg_aggreg -> local eval -> c_msg_test.
@@ -133,6 +144,7 @@ class FLServer:
             metrics=metrics,
             message_log=log,
             restarted_from=restarted_from,
+            agg_time_s=agg_time,
         )
 
     # ------------------------------------------------------------------

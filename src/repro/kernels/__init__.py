@@ -6,8 +6,14 @@
                     training/prefill compute for the attention archs);
   ssd_scan        — Mamba-2 SSD intra-chunk scan (SSM / hybrid archs).
 
-Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
-entry point (interpret mode on CPU, Mosaic on TPU).
+Dispatch hierarchy: ops.py is the entry point — it routes each call to
+the Pallas implementation or the pure-jnp oracle in ref.py, and resolves
+interpret mode by backend detection (`jax.default_backend() != "tpu"`),
+overridable via `REPRO_KERNEL_INTERPRET` or an explicit ``interpret=``.
+The federated aggregation engine (`repro.federated.agg_engine`) sits one
+layer above: it feeds `fedavg_reduce` a flatten-once (N, L) client
+buffer on TPU (donated, so HBM is reused) and a fused jnp contraction
+elsewhere.
 """
 from .ops import fedavg_reduce, flash_attention, ssd_scan
 

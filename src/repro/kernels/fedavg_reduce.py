@@ -15,6 +15,7 @@ counts (N <= ~64).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +36,15 @@ def _fedavg_kernel(w_ref, x_ref, o_ref):
 def fedavg_reduce(
     stacked: jnp.ndarray,   # (N, L) — flattened client params
     weights: jnp.ndarray,   # (N,) — unnormalized sample counts
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Weighted average over axis 0. Returns (L,) in stacked.dtype."""
+    """Weighted average over axis 0. Returns (L,) in stacked.dtype.
+
+    ``interpret=None`` auto-detects: compiled Mosaic on TPU, Pallas
+    interpreter elsewhere. Pass an explicit bool to override (tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, L = stacked.shape
     w = (weights / jnp.sum(weights)).astype(jnp.float32).reshape(n, 1)
 

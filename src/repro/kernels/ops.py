@@ -1,10 +1,11 @@
 """Jitted dispatch wrappers: one entry point per kernel that routes to the
-Pallas implementation (interpret mode on CPU, compiled on real TPU) or the
-pure-jnp oracle.
+Pallas implementation or the pure-jnp oracle.
 
-On this CPU container Pallas executes via `interpret=True`; on a TPU
-runtime set `REPRO_KERNEL_INTERPRET=0` (or pass interpret=False) and the
-same `pl.pallas_call` lowers to Mosaic.
+Interpret mode is backend-detected: on a TPU runtime the same
+`pl.pallas_call` lowers to Mosaic (`interpret=False`); everywhere else
+(CPU/GPU containers) the kernels execute via the Pallas interpreter.
+`REPRO_KERNEL_INTERPRET=0|1` (or an explicit ``interpret=`` argument)
+overrides the detection — tests use the explicit override.
 """
 from __future__ import annotations
 
@@ -21,7 +22,10 @@ from .ssd_scan import ssd_chunk_scan as _ssd_pallas
 
 
 def _interpret_default() -> bool:
-    return os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"
 
 
 def fedavg_reduce(

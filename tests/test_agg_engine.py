@@ -1,0 +1,335 @@
+"""Fused aggregation engine: kernel-vs-oracle equivalence (dtypes, ragged
+leaves, BLOCK padding, degenerate weights), donation/no-recompile
+behavior, chunked + streaming modes, and the FLServer/pod hot-path
+rewiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federated.agg_engine import (
+    AggregationEngine,
+    StreamingAggregator,
+    fused_stacked_tree_reduce,
+    make_measured_aggreg_fn,
+    plan_for,
+)
+from repro.federated.aggregation import fedavg, fedavg_stacked
+from repro.kernels import ops, ref
+from repro.kernels.fedavg_reduce import BLOCK
+
+
+def _ragged_trees(n_clients, dtype=jnp.float32, seed=0):
+    """Structurally-identical trees with ragged/nested leaf shapes."""
+    rng = np.random.default_rng(seed)
+    def one():
+        return {
+            "emb": jnp.asarray(rng.standard_normal((7, 33)), dtype),
+            "blocks": [
+                {"w": jnp.asarray(rng.standard_normal((5, 2, 9)), dtype),
+                 "b": jnp.asarray(rng.standard_normal((11,)), dtype)}
+                for _ in range(2)
+            ],
+            "head": jnp.asarray(rng.standard_normal((123,)), dtype),
+        }
+    trees = [one() for _ in range(n_clients)]
+    weights = [float(rng.uniform(0.5, 5.0)) for _ in range(n_clients)]
+    return trees, weights
+
+
+def _assert_trees_close(got, want, dtype=jnp.float32):
+    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=atol, rtol=atol,
+        )
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle (tree path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_clients", [2, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_engine_matches_oracle(n_clients, dtype):
+    trees, weights = _ragged_trees(n_clients, dtype)
+    engine = AggregationEngine()
+    got = engine.aggregate(trees, weights)
+    want = fedavg(trees, weights)
+    _assert_trees_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_engine_pallas_path_matches_oracle(dtype):
+    """Flatten-once + Pallas kernel path (interpret on CPU) == oracle.
+
+    The ragged tree's total size is far from a BLOCK multiple, so this
+    also exercises the kernel's non-divisible padding."""
+    trees, weights = _ragged_trees(4, dtype)
+    total = sum(l.size for l in jax.tree.leaves(trees[0]))
+    assert total % BLOCK != 0
+    engine = AggregationEngine(use_pallas=True, interpret=True)
+    got = engine.aggregate(trees, weights)
+    want = fedavg(trees, weights)
+    # the kernel path accumulates in fp32 and restores per-leaf dtypes
+    _assert_trees_close(got, want, dtype)
+
+
+def test_engine_single_client_identity():
+    trees, _ = _ragged_trees(1)
+    engine = AggregationEngine()
+    got = engine.aggregate(trees, [42.0])
+    _assert_trees_close(got, trees[0])
+
+
+def test_engine_zero_weight_client_ignored():
+    trees, _ = _ragged_trees(3)
+    engine = AggregationEngine()
+    got = engine.aggregate(trees, [1.0, 0.0, 1.0])
+    want = fedavg([trees[0], trees[2]], [1.0, 1.0])
+    _assert_trees_close(got, want)
+
+
+def test_engine_all_zero_weights_raise():
+    trees, _ = _ragged_trees(2)
+    with pytest.raises(ValueError):
+        AggregationEngine().aggregate(trees, [0.0, 0.0])
+
+
+def test_engine_weight_count_mismatch_raises():
+    trees, _ = _ragged_trees(2)
+    with pytest.raises(ValueError):
+        AggregationEngine().aggregate(trees, [1.0, 1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# no per-round retracing / donation
+# ---------------------------------------------------------------------------
+
+def test_engine_no_recompile_across_rounds():
+    engine = AggregationEngine()
+    for round_idx in range(3):
+        trees, weights = _ragged_trees(3, seed=round_idx)
+        engine.aggregate(trees, weights)
+    assert engine.stats.n_calls == 3
+    assert engine.stats.n_traces == 1  # jit cache hit on rounds 2..3
+
+
+def test_plan_cached_per_structure():
+    trees, _ = _ragged_trees(2)
+    p1 = plan_for(trees[0])
+    p2 = plan_for(trees[1])
+    assert p1 is p2
+    assert p1.total_elems == sum(l.size for l in jax.tree.leaves(trees[0]))
+
+
+def test_plan_flatten_roundtrip():
+    trees, _ = _ragged_trees(1, dtype=jnp.bfloat16)
+    plan = plan_for(trees[0])
+    flat = plan.flatten(trees[0])
+    assert flat.dtype == jnp.float32 and flat.shape == (plan.total_elems,)
+    _assert_trees_close(plan.unflatten(flat), trees[0], jnp.bfloat16)
+
+
+def test_streaming_accumulator_donates_in_place():
+    """The O(L) accumulator is donated: the previous buffer is consumed
+    by each fold (XLA reuses it instead of allocating a second model)."""
+    trees, weights = _ragged_trees(3)
+    agg = StreamingAggregator()
+    agg.add(trees[0], weights[0])
+    first_acc_leaf = jax.tree.leaves(agg._acc)[0]
+    agg.add(trees[1], weights[1])
+    assert first_acc_leaf.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# flat (N, L) path: kernel vs oracle, chunking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [100, BLOCK, BLOCK + 17, 20000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reduce_flat_matches_kernel_oracle(length, dtype):
+    rng = np.random.default_rng(length)
+    x = jnp.asarray(rng.standard_normal((5, length)), dtype)
+    w = jnp.asarray(rng.uniform(0.5, 5.0, 5), jnp.float32)
+    want = ref.fedavg_reduce_ref(x, w)
+    for engine in (AggregationEngine(),
+                   AggregationEngine(use_pallas=True, interpret=True)):
+        got = engine.reduce_flat(x, w)
+        assert got.shape == (length,) and got.dtype == dtype
+        atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_reduce_flat_chunked_matches_full(use_pallas):
+    """Chunked mode routes blocks through the same backend path
+    (kernel when use_pallas) and matches the unchunked reduce."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((4, 4097)).astype(np.float32))
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    engine = AggregationEngine(use_pallas=use_pallas, interpret=True)
+    full = engine.reduce_flat(x, w)
+    chunked = engine.reduce_flat(x, w, chunk_elems=1000)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full), atol=1e-6)
+
+
+def test_reduce_flat_chunked_rejects_donate():
+    x = jnp.ones((2, 100))
+    with pytest.raises(ValueError):
+        AggregationEngine().reduce_flat(x, jnp.ones(2), donate=True, chunk_elems=10)
+
+
+def test_pallas_path_no_recompile_across_rounds():
+    """n_traces also tracks the flatten-once/Pallas path (TPU default)."""
+    engine = AggregationEngine(use_pallas=True, interpret=True)
+    for round_idx in range(3):
+        trees, weights = _ragged_trees(3, seed=round_idx)
+        engine.aggregate(trees, weights)
+    assert engine.stats.n_calls == 3
+    assert engine.stats.n_traces == 1
+
+
+def test_reduce_flat_rejects_non_2d():
+    with pytest.raises(ValueError):
+        AggregationEngine().reduce_flat(jnp.zeros((2, 3, 4)), jnp.ones(2))
+
+
+# ---------------------------------------------------------------------------
+# streaming mode
+# ---------------------------------------------------------------------------
+
+def test_streaming_matches_batch():
+    trees, weights = _ragged_trees(4)
+    engine = AggregationEngine()
+    agg = engine.streaming()
+    for t, w in zip(trees, weights):  # clients land one at a time
+        agg.add(t, w)
+    got = agg.result()
+    want = fedavg(trees, weights)
+    _assert_trees_close(got, want)
+    assert agg.n_clients == 4
+
+
+def test_streaming_bf16_restores_dtype():
+    trees, weights = _ragged_trees(3, dtype=jnp.bfloat16)
+    agg = StreamingAggregator()
+    for t, w in zip(trees, weights):
+        agg.add(t, w)
+    _assert_trees_close(agg.result(), fedavg(trees, weights), jnp.bfloat16)
+
+
+def test_streaming_empty_or_zero_raises():
+    agg = StreamingAggregator()
+    with pytest.raises(ValueError):
+        agg.result()
+    trees, _ = _ragged_trees(1)
+    agg.add(trees[0], 0.0)
+    with pytest.raises(ValueError):
+        agg.result()
+
+
+# ---------------------------------------------------------------------------
+# pod path: fused stacked reduce
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_stacked_fused_matches_per_leaf(dtype):
+    """`fedavg_stacked` (now one fused (N, L) contraction) == the seed
+    per-leaf formula."""
+    rng = np.random.default_rng(3)
+    n = 4
+    stacked = {
+        "w": jnp.asarray(rng.standard_normal((n, 6, 5)), dtype),
+        "b": jnp.asarray(rng.standard_normal((n, 13)), dtype),
+        "scalarish": jnp.asarray(rng.standard_normal((n,)), dtype),
+    }
+    weights = jnp.asarray(rng.uniform(0.5, 3.0, n), jnp.float32)
+    got = fedavg_stacked(stacked, weights)
+
+    wn = weights / jnp.sum(weights)
+    def per_leaf(leaf):
+        wf = wn.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+    want = jax.tree.map(per_leaf, stacked)
+    _assert_trees_close(got, want, dtype)
+
+
+def test_fused_stacked_tree_reduce_traceable_under_jit():
+    rng = np.random.default_rng(11)
+    stacked = {"w": jnp.asarray(rng.standard_normal((3, 8, 4)).astype(np.float32))}
+    w = jnp.ones((3,), jnp.float32)
+    got = jax.jit(fused_stacked_tree_reduce)(stacked, w)
+    want = fused_stacked_tree_reduce(stacked, w)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FLServer hot-path rewiring
+# ---------------------------------------------------------------------------
+
+class _StubClient:
+    """Duck-typed FLClient returning fixed params (no training)."""
+
+    def __init__(self, client_id, params, n_samples):
+        self.client_id = client_id
+        self._params = params
+        self._n = n_samples
+
+    def train(self, global_params):
+        from repro.federated.client import ClientResult
+        return ClientResult(self.client_id, self._params, self._n, 0.0)
+
+    def evaluate(self, aggregated_params):
+        from repro.federated.client import EvalResult
+        return EvalResult(self.client_id, {"loss": 1.0}, self._n, 0.0)
+
+
+def test_server_round_uses_fused_engine():
+    from repro.federated.server import FLServer
+
+    trees, _ = _ragged_trees(3)
+    clients = [_StubClient(f"c{i}", t, n) for i, (t, n) in
+               enumerate(zip(trees, [10, 20, 30]))]
+    server = FLServer(clients, trees[0])
+    res = server.run(2)
+    # the engine (not the per-leaf oracle) ran once per round, fused
+    assert server.agg_engine.stats.n_calls == 2
+    assert server.agg_engine.stats.n_traces == 1
+    assert res.rounds[0].agg_time_s >= 0.0
+    want = fedavg(trees, [10.0, 20.0, 30.0])
+    _assert_trees_close(res.final_params, want)
+
+
+# ---------------------------------------------------------------------------
+# backend detection + cost hook
+# ---------------------------------------------------------------------------
+
+def test_interpret_default_backend_detection(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
+    assert ops._interpret_default() == (jax.default_backend() != "tpu")
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert ops._interpret_default() is False
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert ops._interpret_default() is True
+
+
+def test_measured_aggreg_fn_feeds_cost_model():
+    from repro.core.application_model import til_application
+    from repro.core.cloud_model import cloudlab_environment
+    from repro.core.cost_model import CostModel
+
+    env = cloudlab_environment()
+    app = til_application()
+    vm = next(iter(env.vm_types))
+    # 120 MB reduced at 12 GB/s -> 10 ms on the slowdown-1 baseline
+    fn = make_measured_aggreg_fn(env, bytes_per_round=120_000_000, gb_per_s=12.0)
+    cm = CostModel(env, app, 0.5, aggreg_time_fn=fn)
+    assert cm.t_aggreg(vm) == pytest.approx(0.01 * env.inst_slowdown(vm))
+    # default (no hook) keeps the paper's aggreg_bl baseline
+    cm0 = CostModel(env, app, 0.5)
+    assert cm0.t_aggreg(vm) == pytest.approx(app.aggreg_bl * env.inst_slowdown(vm))

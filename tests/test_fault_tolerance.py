@@ -1,7 +1,10 @@
 """Fault Tolerance module (§4.3): checkpoint policy arithmetic, recovery
 plans, freshest-wins restore decisions, and recovery-delay accounting."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip cleanly without it
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (
     SERVER,

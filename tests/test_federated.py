@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip cleanly without it
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.data import make_lm_silos
