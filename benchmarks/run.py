@@ -8,6 +8,7 @@ import sys
 
 def main() -> None:
     from .aggregation_bench import bench_aggregation
+    from .async_round_bench import bench_async_round
     from .kernel_bench import bench_kernels
     from .paper_tables import (
         bench_checkpoint_overhead,
@@ -28,6 +29,7 @@ def main() -> None:
         bench_poc_aws_gcp,          # §5.7
         bench_kernels,              # Pallas kernel hot spots
         bench_aggregation,          # fused FedAvg engine vs seed oracle
+        bench_async_round,          # streaming fold vs barrier under stragglers
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]
     print("name,us_per_call,derived")

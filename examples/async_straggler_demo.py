@@ -1,0 +1,100 @@
+"""Async straggler folding: barrier vs streaming rounds, 8 silos, one 5x slow.
+
+Runs REAL federated training (Shakespeare-style LSTM on 8 synthetic
+silos) twice over the same data:
+
+  barrier    — the classic FLServer: wait for all c_msg_train, then one
+               fused reduce (the paper's §3 protocol);
+  streaming  — AsyncFLServer on the async round engine: each silo's
+               update is folded into the StreamingAggregator the moment
+               it arrives, so the 7 fast silos' aggregation work hides
+               behind the straggler's 5x arrival delay.
+
+Cross-cloud arrival delays run on the engine's virtual clock (a
+HeavyTailSchedule with client_7 as the designated straggler); training
+and aggregation are real JAX compute.  Both servers see identical client
+results each round, so the printed losses match — only the round
+timeline changes.
+
+  PYTHONPATH=src python examples/async_straggler_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_lm_silos
+from repro.federated import AsyncFLServer, FLClient, FLServer, HeavyTailSchedule
+from repro.models.fl_models import LSTMConfig, init_shakespeare_lstm, shakespeare_loss
+from repro.optim import make_optimizer
+
+N_SILOS = 8
+STRAGGLER = "client_7"
+N_ROUNDS = 3
+
+
+def make_clients(lc):
+    silos = make_lm_silos(N_SILOS, lc.vocab_size, 20, [(32, 16)] * N_SILOS, seed=0)
+    opt = make_optimizer("adamw", 1e-2)
+
+    def loss_fn(p, batch):
+        toks, labels = batch
+        return shakespeare_loss(p, toks, labels, lc)
+
+    return [
+        FLClient(s.client_id, s, loss_fn, opt, batch_size=16,
+                 batch_fn=lambda b: (jnp.asarray(b[0]), jnp.asarray(b[1])))
+        for s in silos
+    ]
+
+
+def main():
+    lc = LSTMConfig(vocab_size=64, hidden=32)
+    params = init_shakespeare_lstm(jax.random.PRNGKey(0), lc)
+    # Cross-cloud delays: ~1 virtual second per silo, the straggler 5x.
+    schedule = HeavyTailSchedule(
+        base_s=1.0, sigma=0.15, straggler_ids=(STRAGGLER,),
+        straggler_factor=5.0, seed=0,
+    )
+
+    print(f"== {N_SILOS} silos, {STRAGGLER} is a 5x straggler, "
+          f"{N_ROUNDS} rounds ==\n")
+
+    barrier = FLServer(make_clients(lc), params).run(N_ROUNDS)
+    streaming_server = AsyncFLServer(
+        make_clients(lc), params, schedule=schedule, fold_cost_s=0.05,
+    )
+    streaming = streaming_server.run(N_ROUNDS)
+
+    print("round  loss(barrier)  loss(stream)  barrier_span  stream_span  saved")
+    for rb, rs, rep in zip(barrier.rounds, streaming.rounds,
+                           streaming_server.fold_reports):
+        print(f"  {rb.round_idx}    {rb.metrics['loss']:10.4f}  "
+              f"{rs.metrics['loss']:12.4f}  {rep.barrier_span_s:10.2f}s "
+              f"{rep.round_span_s:11.2f}s  {rep.span_saved_s:5.2f}s")
+
+    spans = [(rep.barrier_span_s, rep.round_span_s)
+             for rep in streaming_server.fold_reports]
+    tb = sum(b for b, _ in spans)
+    ts = sum(s for _, s in spans)
+    last = streaming.rounds[-1]
+    print(f"\nfold timeline, round {last.round_idx} (virtual s): "
+          + "  ".join(f"{cid}@{t:.2f}" for cid, t in
+                      sorted(last.fold_times_s.items(), key=lambda kv: kv[1])))
+    print(f"\ntotal round span: barrier {tb:.2f}s -> streaming {ts:.2f}s "
+          f"({100 * (tb - ts) / tb:.1f}% saved; every silo still in every "
+          f"round's average)")
+    err = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(barrier.final_params),
+                        jax.tree.leaves(streaming.final_params))
+    )
+    print(f"final params max abs diff barrier vs streaming: {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

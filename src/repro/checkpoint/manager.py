@@ -144,12 +144,16 @@ class ClientCheckpointManager:
 
 
 def resolve_freshest(
-    server: ServerCheckpointManager,
+    server: Optional[ServerCheckpointManager],
     clients: Dict[str, ClientCheckpointManager],
     exclude_client: Optional[str] = None,
 ) -> Tuple[str, Optional[CheckpointInfo]]:
-    """Paper §4.3 restore rule. Returns ("server"|"client:<id>"|"none", info)."""
-    s = server.latest_durable()
+    """Paper §4.3 restore rule. Returns ("server"|"client:<id>"|"none", info).
+
+    `server` may be None (no server-side checkpointing configured): the
+    clients' local copies of the aggregated weights still restore the run.
+    """
+    s = server.latest_durable() if server is not None else None
     best_cid, best_c = None, None
     for cid, mgr in clients.items():
         if cid == exclude_client:

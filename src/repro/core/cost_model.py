@@ -78,6 +78,30 @@ class CostModel:
             return self.aggreg_time_fn(vm_id)
         return self.app.aggreg_bl * self.env.inst_slowdown(vm_id)
 
+    def t_fold(self, vm_id: str, n_clients: int) -> float:
+        """Per-client streaming-fold share of the aggregation time.
+
+        The async round engine folds each c_msg_train as it lands; the
+        same total aggregation work (t_aggreg) is split across N folds,
+        so each fold costs t_aggreg/N on the server VM."""
+        return self.t_aggreg(vm_id) / max(n_clients, 1)
+
+    def async_round_time(self, arrival_offsets: Mapping[str, float], server_vm: str) -> float:
+        """Streaming-fold round span (async engine accounting).
+
+        ``arrival_offsets`` maps client -> seconds from dispatch until its
+        c_msg_train lands on the server (exec + comm, *without* the
+        aggregation term).  Folds serialize on the server and pipeline
+        behind arrivals: fold_i starts at max(arrival_i, previous fold
+        end).  The barrier protocol's span is max(arrival) + t_aggreg;
+        the streaming span is <= that, with equality when every message
+        is in before the first fold finishes the queue."""
+        t_fold = self.t_fold(server_vm, len(arrival_offsets))
+        server_free = 0.0
+        for arrival in sorted(arrival_offsets.values()):
+            server_free = max(server_free, arrival) + t_fold
+        return server_free
+
     def comm_cost(self, client_provider: str, server_provider: str) -> float:
         """Eq. 6: comm_{jm} with j = client's provider, m = server's."""
         m = self.app.messages

@@ -47,6 +47,11 @@ class SimulationConfig:
     # repro.federated.agg_engine.make_measured_aggreg_fn. None keeps the
     # paper's profiled aggreg_bl baseline.
     aggreg_time_fn: Optional[Callable[[str], float]] = None
+    # Async round engine (repro.federated.async_server): the server folds
+    # each c_msg_train as it lands (t_aggreg/N per fold, pipelined behind
+    # arrivals) instead of barriering on the slowest silo and then paying
+    # the full t_aggreg. False keeps the paper's barrier accounting.
+    async_rounds: bool = False
 
 
 @dataclasses.dataclass
@@ -143,16 +148,29 @@ class MultiCloudSimulator:
             svm = self.env.vm_types[server_vm]
             t_aggreg = self.cost_model.t_aggreg(server_vm)
 
-            client_times = {}
+            arrival_offsets = {}
             for c in self.app.clients:
                 cvm = self.env.vm_types[placement[c.client_id].vm_id]
-                client_times[c.client_id] = (
-                    self.cost_model.t_exec(c.client_id, cvm.vm_id)
-                    + self.cost_model.t_comm(cvm.region, svm.region)
-                    + t_aggreg
+                arrival_offsets[c.client_id] = self.cost_model.t_exec(
+                    c.client_id, cvm.vm_id
+                ) + self.cost_model.t_comm(cvm.region, svm.region)
+            if cfg.async_rounds:
+                # Streaming fold: each message is folded as it lands
+                # (t_aggreg/N per fold), so a client "completes" at its
+                # arrival; the round ends when the last fold drains.
+                client_times = dict(arrival_offsets)
+                round_span = self.cost_model.async_round_time(
+                    arrival_offsets, server_vm
                 )
+            else:
+                # Barrier: every client's round time carries the full
+                # aggregation term (paper Eq. 16 / Algorithm 1).
+                client_times = {
+                    cid: t + t_aggreg for cid, t in arrival_offsets.items()
+                }
+                round_span = max(client_times.values())
             round_start = now
-            round_end = round_start + max(client_times.values())
+            round_end = round_start + round_span
 
             interrupted = False
             while next_rev <= round_end:

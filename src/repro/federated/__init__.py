@@ -7,6 +7,18 @@ from .agg_engine import (
     plan_for,
 )
 from .aggregation import aggregate_metrics, fedavg, fedavg_stacked
+from .async_server import (
+    ArrivalSchedule,
+    AsyncFLServer,
+    AsyncRoundEngine,
+    ClientArrival,
+    DeterministicSchedule,
+    FoldEvent,
+    FoldReport,
+    HeavyTailSchedule,
+    InstantSchedule,
+    RevocationInjector,
+)
 from .client import ClientResult, EvalResult, FLClient
 from .messages import (
     RoundMessageLog,
@@ -24,7 +36,17 @@ from .server import FLRunResult, FLServer, RoundRecord
 
 __all__ = [
     "AggregationEngine",
+    "ArrivalSchedule",
+    "AsyncFLServer",
+    "AsyncRoundEngine",
+    "ClientArrival",
     "ClientResult",
+    "DeterministicSchedule",
+    "FoldEvent",
+    "FoldReport",
+    "HeavyTailSchedule",
+    "InstantSchedule",
+    "RevocationInjector",
     "EvalResult",
     "FLClient",
     "FLRunResult",

@@ -382,7 +382,10 @@ class StreamingAggregator:
         self._wsum = 0.0
         self.n_clients = 0
 
-    def add(self, params: Any, weight: float) -> None:
+    def add(self, params: Any, weight: float, block: bool = False) -> None:
+        """Fold one client in; ``block=True`` waits for the fused
+        accumulate to finish (the async round engine uses it to measure
+        the true per-fold cost instead of dispatch latency)."""
         w = float(weight)
         if w < 0:
             raise ValueError("client weight must be non-negative")
@@ -392,6 +395,8 @@ class StreamingAggregator:
             self._acc = _scale_tree(params, jnp.float32(w))
         else:
             self._acc = _accum_tree(self._acc, params, jnp.float32(w))
+        if block:
+            jax.block_until_ready(self._acc)
         self._wsum += w
         self.n_clients += 1
         if self._engine is not None:

@@ -1,0 +1,463 @@
+"""Async round engine: straggler-folding FL rounds on the StreamingAggregator.
+
+The paper's §3 protocol barriers every round on the slowest silo: the
+server collects all N ``c_msg_train`` messages, then aggregates.  In
+multi-cloud runs (§4.3/§5) stragglers and preemptible-VM revocations
+dominate round time, so the barrier leaves the server idle exactly when
+it has work available.  This module replaces the barrier with an
+event-driven fold: each ``c_msg_train`` is folded into a
+:class:`~repro.federated.agg_engine.StreamingAggregator` the moment it
+arrives (O(L) accumulator memory, never an (N, L) gather), and the round
+barriers only on the *round count* — every silo's update is still in the
+round's average, preserving the paper's cross-silo "wait for all
+clients" semantics; only the server's idle time is folded away.
+
+Arrival-schedule abstraction
+----------------------------
+Message arrival is decoupled from message *content* so the same engine
+serves both the simulator and real ``FLClient`` processes.  An
+:class:`ArrivalSchedule` maps ``(round_idx, client_ids)`` to per-client
+:class:`ClientArrival` events on a virtual clock that starts at the
+round's ``s_msg_train`` dispatch:
+
+* ``delay_s``      — virtual seconds until the client's ``c_msg_train``
+  lands on the server (local train + cross-cloud transfer);
+* ``revoke_at_s``  — optional virtual time the silo's spot VM is
+  revoked.  A revocation *before* delivery loses the update; one after
+  delivery is harmless for this round (the simulator's "already
+  delivered" rule).
+
+Schedules provided: :class:`InstantSchedule` (every message present at
+dispatch — the degenerate case that makes the barrier ``FLServer`` a
+special case of this engine), :class:`DeterministicSchedule` (fixed
+per-client delays and revocation times, for tests),
+:class:`HeavyTailSchedule` (lognormal delays with designated or random
+stragglers), and :class:`RevocationInjector` (decorates any schedule
+with Poisson spot revocations reusing :mod:`repro.core.revocation`).
+
+Revocation handling follows §4.3: by default the engine *re-requests*
+the lost update (the replacement VM retrains and its message arrives
+after the recovery delay — the server never silently drops a silo);
+``on_revocation="exclude"`` instead drops the silo from the current
+round only, for deadline-bound deployments.
+
+The fold loop advances a virtual clock but charges each fold with the
+*measured* wall-clock cost of the real ``StreamingAggregator.add``, so
+reports mix simulated arrival latency with real aggregation compute.
+Per-client fold completion times are threaded into
+:class:`~repro.federated.server.RoundRecord` and (via
+``CostModel.t_fold`` / ``async_round_time``) into the simulator's
+round-time accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+import jax
+
+from repro.core.revocation import RevocationModel, RevocationSampler
+from .agg_engine import AggregationEngine
+from .client import ClientResult
+
+__all__ = [
+    "ArrivalSchedule",
+    "AsyncFLServer",
+    "AsyncRoundEngine",
+    "ClientArrival",
+    "DeterministicSchedule",
+    "FoldEvent",
+    "FoldReport",
+    "HeavyTailSchedule",
+    "InstantSchedule",
+    "RevocationInjector",
+]
+
+
+# ---------------------------------------------------------------------------
+# Arrival model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClientArrival:
+    """One client's ``c_msg_train`` arrival event on the round's virtual clock."""
+
+    client_id: str
+    delay_s: float                      # dispatch -> message-on-server
+    revoke_at_s: Optional[float] = None  # spot VM revoked at this time (None = survives)
+
+    def delivered_before_revocation(self) -> bool:
+        return self.revoke_at_s is None or self.revoke_at_s > self.delay_s
+
+
+class ArrivalSchedule:
+    """Maps a round to per-client arrival events (virtual seconds)."""
+
+    def round_arrivals(
+        self, round_idx: int, client_ids: Sequence[str]
+    ) -> Dict[str, ClientArrival]:
+        raise NotImplementedError
+
+
+class InstantSchedule(ArrivalSchedule):
+    """Every message is present at dispatch: the barrier server's timeline.
+
+    With this schedule the async engine degenerates to one fused batch
+    reduce (all inputs available at t=0), which is exactly the sync
+    ``FLServer`` hot path."""
+
+    def round_arrivals(self, round_idx, client_ids):
+        return {cid: ClientArrival(cid, 0.0) for cid in client_ids}
+
+
+class DeterministicSchedule(ArrivalSchedule):
+    """Fixed delays (scalar or per-client) and optional revocation times."""
+
+    def __init__(
+        self,
+        delays: Union[float, Mapping[str, float]],
+        revoke_at: Optional[Mapping[str, float]] = None,
+    ) -> None:
+        self.delays = delays
+        self.revoke_at = dict(revoke_at or {})
+
+    def round_arrivals(self, round_idx, client_ids):
+        out = {}
+        for cid in client_ids:
+            d = self.delays if isinstance(self.delays, (int, float)) else self.delays[cid]
+            out[cid] = ClientArrival(cid, float(d), self.revoke_at.get(cid))
+        return out
+
+
+class HeavyTailSchedule(ArrivalSchedule):
+    """Lognormal arrival delays with heavy-tail stragglers.
+
+    Each client's delay is ``base_s * lognormal(0, sigma)``; clients in
+    ``straggler_ids`` (or hit by ``straggler_prob`` each round) are
+    multiplied by ``straggler_factor`` — the 1-slow-silo-in-8 shape the
+    paper's multi-cloud traces show."""
+
+    def __init__(
+        self,
+        base_s: float = 1.0,
+        sigma: float = 0.25,
+        straggler_ids: Sequence[str] = (),
+        straggler_factor: float = 5.0,
+        straggler_prob: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        import numpy as np
+
+        self.base_s = base_s
+        self.sigma = sigma
+        self.straggler_ids = frozenset(straggler_ids)
+        self.straggler_factor = straggler_factor
+        self.straggler_prob = straggler_prob
+        self._rng = np.random.default_rng(seed)
+
+    def round_arrivals(self, round_idx, client_ids):
+        out = {}
+        for cid in client_ids:
+            d = self.base_s * float(self._rng.lognormal(0.0, self.sigma))
+            if cid in self.straggler_ids or (
+                self.straggler_prob > 0.0
+                and self._rng.uniform() < self.straggler_prob
+            ):
+                d *= self.straggler_factor
+            out[cid] = ClientArrival(cid, d)
+        return out
+
+
+class RevocationInjector(ArrivalSchedule):
+    """Decorate any schedule with Poisson spot revocations (§5.6 model).
+
+    Events are drawn from the *global* Poisson process of
+    :class:`repro.core.revocation.RevocationModel` against a running
+    cross-round clock; each event landing inside a round's horizon
+    revokes one uniformly-chosen still-running spot client (a client
+    whose message has not yet arrived).  Events with no live spot
+    victim are absorbed, matching the revocation module's semantics."""
+
+    def __init__(
+        self,
+        inner: ArrivalSchedule,
+        model: RevocationModel,
+        spot_clients: Optional[Sequence[str]] = None,
+        horizon_s: Optional[float] = None,
+    ) -> None:
+        self.inner = inner
+        self.spot_clients = None if spot_clients is None else frozenset(spot_clients)
+        self.horizon_s = horizon_s
+        self._sampler: RevocationSampler = model.sampler()
+        self._clock = 0.0
+        self._next_event = self._sampler.next_event_after(0.0)
+
+    def round_arrivals(self, round_idx, client_ids):
+        arrivals = dict(self.inner.round_arrivals(round_idx, client_ids))
+        horizon = self.horizon_s
+        if horizon is None:
+            horizon = max((a.delay_s for a in arrivals.values()), default=0.0)
+        round_end = self._clock + horizon
+
+        while self._next_event <= round_end:
+            t = self._next_event - self._clock  # round-local virtual time
+            self._next_event = self._sampler.next_event_after(self._next_event)
+            live_spot = sorted(
+                cid
+                for cid, a in arrivals.items()
+                if a.delay_s > t
+                and a.revoke_at_s is None
+                and (self.spot_clients is None or cid in self.spot_clients)
+            )
+            victim = self._sampler.pick_victim(live_spot)
+            if victim is None:
+                continue
+            a = arrivals[victim]
+            arrivals[victim] = dataclasses.replace(a, revoke_at_s=t)
+        self._clock = round_end
+        return arrivals
+
+
+# ---------------------------------------------------------------------------
+# Fold engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FoldEvent:
+    """One client fold on the round's virtual clock."""
+
+    client_id: str
+    arrival_s: float       # when its c_msg_train became foldable
+    fold_start_s: float    # server picked it up (>= arrival; folds serialize)
+    fold_end_s: float
+    attempt: int = 1       # >1 after a revocation re-request
+    revoked_at_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class FoldReport:
+    """Result of one async round fold."""
+
+    params: Any
+    events: List[FoldEvent]
+    excluded: List[str]           # silos dropped this round (exclude policy)
+    rerequested: List[str]        # silos whose update was re-requested
+    fold_times: Dict[str, float]  # client_id -> virtual fold-completion time
+    round_span_s: float           # dispatch -> aggregated params ready
+    busy_s: float                 # server time spent folding
+    idle_s: float                 # round_span_s - busy_s (waiting on arrivals)
+    # Counterfactual: wait for the last arrival, then do the SAME fold
+    # work (last_arrival + busy_s).  With measured fold costs this is an
+    # upper bound on the real sync FLServer's span — the barrier path
+    # runs the fused batch reduce, which beats N incremental folds; see
+    # benchmarks/async_round_bench.py for the measured-batch comparison.
+    barrier_span_s: float
+
+    @property
+    def span_saved_s(self) -> float:
+        """Round time the streaming fold hides vs. barriering on the last
+        arrival and then doing the same fold work (see barrier_span_s for
+        why this bounds, rather than equals, the sync-server saving)."""
+        return self.barrier_span_s - self.round_span_s
+
+
+class AsyncRoundEngine:
+    """Folds one round's client results in arrival order.
+
+    Parameters
+    ----------
+    agg_engine : the fused :class:`AggregationEngine` (stats and the
+        degenerate batch path route through it).
+    on_revocation : §4.3 recovery rule for an update lost to revocation:
+        ``"rerequest"`` (default — the replacement VM retrains, arriving
+        ``recovery_delay_s + delay`` after the revocation, so the silo is
+        still in the round's average) or ``"exclude"`` (drop the silo
+        from this round only).
+    recovery_delay_s : virtual VM replacement + restore time charged
+        before a re-requested client restarts training.
+    max_rerequests : re-request budget per client per round; a client
+        revoked more than this many times is excluded.
+    fold_cost_s : override the virtual cost of each fold (deterministic
+        tests / simulators); None charges the measured wall-clock cost
+        of the real ``StreamingAggregator.add``.
+    """
+
+    def __init__(
+        self,
+        agg_engine: Optional[AggregationEngine] = None,
+        on_revocation: str = "rerequest",
+        recovery_delay_s: float = 0.0,
+        max_rerequests: int = 1,
+        fold_cost_s: Optional[float] = None,
+    ) -> None:
+        if on_revocation not in ("rerequest", "exclude"):
+            raise ValueError("on_revocation must be 'rerequest' or 'exclude'")
+        self.agg_engine = agg_engine if agg_engine is not None else AggregationEngine()
+        self.on_revocation = on_revocation
+        self.recovery_delay_s = recovery_delay_s
+        self.max_rerequests = max_rerequests
+        self.fold_cost_s = fold_cost_s
+
+    # ------------------------------------------------------------------
+    def fold_round(
+        self,
+        round_idx: int,
+        results: Sequence[ClientResult],
+        schedule: ArrivalSchedule,
+    ) -> FoldReport:
+        """Fold all of a round's ``c_msg_train`` messages per the schedule."""
+        if not results:
+            raise ValueError("fold_round needs at least one client result")
+        by_id = {r.client_id: r for r in results}
+        arrivals = schedule.round_arrivals(round_idx, list(by_id))
+
+        if all(
+            a.delay_s == 0.0 and a.revoke_at_s is None for a in arrivals.values()
+        ):
+            return self._fold_degenerate(results)
+
+        # Event heap: (effective arrival, seq, client_id, attempt, revoke_at).
+        heap: List[Any] = []
+        for seq, (cid, a) in enumerate(arrivals.items()):
+            heapq.heappush(heap, (a.delay_s, seq, cid, 1, a.revoke_at_s))
+        seq = len(heap)
+
+        agg = self.agg_engine.streaming()
+        events: List[FoldEvent] = []
+        excluded: List[str] = []
+        rerequested: List[str] = []
+        server_free = 0.0
+        busy = 0.0
+
+        while heap:
+            arrival, _, cid, attempt, revoke_at = heapq.heappop(heap)
+            if revoke_at is not None and revoke_at <= arrival:
+                # The silo died before its message landed: §4.3 recovery.
+                if self.on_revocation == "rerequest" and attempt <= self.max_rerequests:
+                    retrain = arrivals[cid].delay_s
+                    re_arrival = revoke_at + self.recovery_delay_s + retrain
+                    heapq.heappush(heap, (re_arrival, seq, cid, attempt + 1, None))
+                    seq += 1
+                    rerequested.append(cid)
+                else:
+                    excluded.append(cid)
+                continue
+
+            res = by_id[cid]
+            t0 = time.monotonic()
+            agg.add(res.params, res.n_samples, block=True)
+            measured = time.monotonic() - t0
+            cost = self.fold_cost_s if self.fold_cost_s is not None else measured
+            start = max(arrival, server_free)
+            end = start + cost
+            server_free = end
+            busy += cost
+            events.append(
+                FoldEvent(cid, arrival, start, end, attempt=attempt,
+                          revoked_at_s=revoke_at)
+            )
+
+        if not events:
+            raise ValueError(
+                "every silo's update was revoked and excluded; nothing to fold"
+            )
+
+        t0 = time.monotonic()
+        params = agg.result()
+        jax.block_until_ready(params)
+        finalize = (time.monotonic() - t0) if self.fold_cost_s is None else 0.0
+        busy += finalize
+        span = server_free + finalize
+        last_arrival = max(e.arrival_s for e in events)
+        return FoldReport(
+            params=params,
+            events=events,
+            excluded=excluded,
+            rerequested=rerequested,
+            fold_times={e.client_id: e.fold_end_s for e in events},
+            round_span_s=span,
+            busy_s=busy,
+            idle_s=max(0.0, span - busy),
+            # A barrier server waits for the last arrival, then does the
+            # same total aggregation work in one go.
+            barrier_span_s=last_arrival + busy,
+        )
+
+    # ------------------------------------------------------------------
+    def _fold_degenerate(self, results: Sequence[ClientResult]) -> FoldReport:
+        """All messages present at dispatch: one fused batch reduce.
+
+        This is the sync ``FLServer`` path — the barrier protocol is the
+        degenerate schedule of this engine, and it keeps the fused
+        flatten-once/Pallas reduce (better than N streaming folds when
+        every input is already in memory)."""
+        t0 = time.monotonic()
+        params = self.agg_engine.aggregate(
+            [r.params for r in results], [r.n_samples for r in results]
+        )
+        jax.block_until_ready(params)
+        agg_s = time.monotonic() - t0
+        events = [
+            FoldEvent(r.client_id, 0.0, 0.0, agg_s) for r in results
+        ]
+        return FoldReport(
+            params=params,
+            events=events,
+            excluded=[],
+            rerequested=[],
+            fold_times={r.client_id: agg_s for r in results},
+            round_span_s=agg_s,
+            busy_s=agg_s,
+            idle_s=0.0,
+            barrier_span_s=agg_s,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Async server
+# ---------------------------------------------------------------------------
+
+# Imported late: server.py's sync path lazily imports this module, so a
+# top-level `from .server import FLServer` here completes the cycle only
+# after server.py has fully loaded.
+from .server import FLServer  # noqa: E402
+
+
+class AsyncFLServer(FLServer):
+    """FLServer whose rounds fold ``c_msg_train`` messages as they land.
+
+    Identical protocol and results to :class:`FLServer` (same training,
+    evaluation, checkpointing, and fault-hook semantics) but the
+    aggregation phase runs through :class:`AsyncRoundEngine` with a
+    pluggable :class:`ArrivalSchedule`, so round records carry per-client
+    fold timestamps, the server's busy/idle split, and the counterfactual
+    barrier span."""
+
+    def __init__(
+        self,
+        clients,
+        initial_params,
+        schedule: Optional[ArrivalSchedule] = None,
+        on_revocation: str = "rerequest",
+        recovery_delay_s: float = 0.0,
+        max_rerequests: int = 1,
+        fold_cost_s: Optional[float] = None,
+        **kwargs,
+    ) -> None:
+        super().__init__(clients, initial_params, **kwargs)
+        self.schedule = schedule if schedule is not None else InstantSchedule()
+        self._round_engine = AsyncRoundEngine(
+            self.agg_engine,
+            on_revocation=on_revocation,
+            recovery_delay_s=recovery_delay_s,
+            max_rerequests=max_rerequests,
+            fold_cost_s=fold_cost_s,
+        )
+        self.fold_reports: List[FoldReport] = []
+
+    def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]) -> FoldReport:
+        report = self._round_engine.fold_round(round_idx, results, self.schedule)
+        self.fold_reports.append(report)
+        return report

@@ -46,6 +46,13 @@ class RoundRecord:
     message_log: Optional[RoundMessageLog]
     restarted_from: Optional[str] = None
     agg_time_s: float = 0.0
+    # Async round-engine accounting (virtual clock, see async_server):
+    # per-client c_msg_train fold-completion times, the dispatch->params
+    # span, and the server's idle share of that span.  The sync barrier
+    # path reports every fold completing at the fused-reduce finish.
+    fold_times_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    round_span_s: float = 0.0
+    idle_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -78,6 +85,7 @@ class FLServer:
         self.fault_hook = fault_hook
         self.measure_round_messages = measure_round_messages
         self.start_round = 1
+        self._round_engine = None  # lazily built (see _fold_phase)
 
     # ------------------------------------------------------------------
     def run(self, n_rounds: int) -> FLRunResult:
@@ -110,9 +118,8 @@ class FLServer:
         t0 = time.monotonic()
         results: List[ClientResult] = [c.train(self.params) for c in self.clients]
         t_agg = time.monotonic()
-        self.params = self.agg_engine.aggregate(
-            [res.params for res in results], [res.n_samples for res in results]
-        )
+        fold = self._fold_phase(round_idx, results)
+        self.params = fold.params
         jax.block_until_ready(self.params)
         agg_time = time.monotonic() - t_agg
         train_time = time.monotonic() - t0
@@ -145,13 +152,39 @@ class FLServer:
             message_log=log,
             restarted_from=restarted_from,
             agg_time_s=agg_time,
+            fold_times_s=fold.fold_times,
+            round_span_s=fold.round_span_s,
+            idle_s=fold.idle_s,
         )
+
+    # ------------------------------------------------------------------
+    def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]):
+        """Aggregate one round's c_msg_train set.
+
+        The barrier protocol is the degenerate (all-messages-at-dispatch)
+        schedule of the async round engine, so the sync server routes
+        through the same engine; AsyncFLServer overrides only the
+        schedule/policy (see async_server.AsyncFLServer)."""
+        # Lazy import: async_server imports RoundRecord/FLServer from here.
+        from .async_server import AsyncRoundEngine, InstantSchedule
+
+        if self._round_engine is None:
+            self._round_engine = AsyncRoundEngine(self.agg_engine)
+        return self._round_engine.fold_round(round_idx, results, InstantSchedule())
 
     # ------------------------------------------------------------------
     def _recover_server(self) -> str:
         """Server VM died: restore weights from the freshest checkpoint
-        (paper §4.3 rule) and rewind the round counter accordingly."""
-        source, info = resolve_freshest(self.server_ckpt, self.client_ckpts) if self.server_ckpt else ("none", None)
+        (paper §4.3 rule) and rewind the round counter accordingly.
+
+        The freshest-wins resolution runs whenever *any* checkpoint source
+        exists: client checkpoints alone can restore the server (the paper's
+        "the FL server ... waits for any client to send its weights"), so a
+        missing ServerCheckpointManager must not skip resolution."""
+        if self.server_ckpt is None and not self.client_ckpts:
+            source, info = "none", None
+        else:
+            source, info = resolve_freshest(self.server_ckpt, self.client_ckpts)
         if source == "none" or info is None:
             # No checkpoint anywhere: restart from scratch semantics is the
             # caller's job; here we just keep current in-memory weights.

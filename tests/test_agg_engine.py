@@ -7,6 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip cleanly without it
+    from _hypothesis_stub import given, settings, st
+
 from repro.federated.agg_engine import (
     AggregationEngine,
     StreamingAggregator,
@@ -221,6 +226,51 @@ def test_streaming_bf16_restores_dtype():
     for t, w in zip(trees, weights):
         agg.add(t, w)
     _assert_trees_close(agg.result(), fedavg(trees, weights), jnp.bfloat16)
+
+
+@st.composite
+def streaming_cases(draw):
+    """Random pytree shapes/dtypes/weights + a fold permutation."""
+    n = draw(st.integers(2, 6))
+    n_leaves = draw(st.integers(1, 3))
+    shapes = [
+        tuple(draw(st.lists(st.integers(1, 5), min_size=1, max_size=3)))
+        for _ in range(n_leaves)
+    ]
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    trees = [
+        {f"l{i}": jnp.asarray(rng.standard_normal(s), dtype)
+         for i, s in enumerate(shapes)}
+        for _ in range(n)
+    ]
+    weights = [draw(st.floats(0.1, 100.0)) for _ in range(n)]
+    order = draw(st.permutations(list(range(n))))
+    return trees, weights, order, dtype
+
+
+@settings(max_examples=25, deadline=None)
+@given(streaming_cases())
+def test_streaming_any_fold_order_matches_batch(case):
+    """Property: folding clients in ANY arrival permutation equals the
+    batch AggregationEngine.aggregate to tolerance (async round engine
+    invariant)."""
+    trees, weights, order, dtype = case
+    agg = StreamingAggregator()
+    for i in order:
+        agg.add(trees[i], weights[i])
+    got = agg.result()
+    want = AggregationEngine().aggregate(trees, weights)
+    _assert_trees_close(got, want, dtype)
+
+
+def test_streaming_blocking_add_matches():
+    """block=True (async engine's measured fold) changes timing only."""
+    trees, weights = _ragged_trees(3)
+    agg = StreamingAggregator()
+    for t, w in zip(trees, weights):
+        agg.add(t, w, block=True)
+    _assert_trees_close(agg.result(), fedavg(trees, weights))
 
 
 def test_streaming_empty_or_zero_raises():

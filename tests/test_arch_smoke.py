@@ -13,6 +13,10 @@ from repro.models import get_model
 from repro.optim import make_optimizer
 from repro.launch.steps import make_train_step
 
+# Heaviest end-to-end module (~55 s: every architecture's forward + train +
+# decode): deselected from the default tier-1 loop, CI runs it in full.
+pytestmark = pytest.mark.slow
+
 ARCH_IDS = sorted(ARCHITECTURES)
 
 

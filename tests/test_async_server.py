@@ -1,0 +1,383 @@
+"""Async round engine: streaming-fold vs barrier equivalence (hypothesis
+property over arrival orderings + deterministic permutation fallback),
+virtual-clock span/idle accounting, §4.3 revocation fault injection
+(re-request / exclude), and server recovery from client-only checkpoints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip cleanly without it
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.revocation import RevocationModel
+from repro.federated import (
+    AggregationEngine,
+    AsyncFLServer,
+    AsyncRoundEngine,
+    ClientArrival,
+    DeterministicSchedule,
+    FLServer,
+    HeavyTailSchedule,
+    InstantSchedule,
+    RevocationInjector,
+    fedavg,
+)
+from repro.federated.client import ClientResult, EvalResult
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _random_tree(rng, shapes, dtype):
+    return {
+        f"leaf{i}": jnp.asarray(rng.standard_normal(s), dtype)
+        for i, s in enumerate(shapes)
+    }
+
+
+def _results(n_clients, shapes=((3, 5), (7,)), dtype=jnp.float32, seed=0,
+             weights=None):
+    rng = np.random.default_rng(seed)
+    if weights is None:
+        weights = [10 * (i + 1) for i in range(n_clients)]
+    return [
+        ClientResult(f"c{i}", _random_tree(rng, shapes, dtype), int(w), 0.0)
+        for i, w in enumerate(weights)
+    ]
+
+
+def _batch_params(results):
+    return fedavg([r.params for r in results], [r.n_samples for r in results])
+
+
+def _assert_close(got, want, dtype=jnp.float32):
+    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=atol, rtol=atol,
+        )
+
+
+class _StubClient:
+    """Duck-typed FLClient returning fixed params (no training)."""
+
+    def __init__(self, result: ClientResult) -> None:
+        self.client_id = result.client_id
+        self._result = result
+
+    def train(self, global_params):
+        return self._result
+
+    def evaluate(self, aggregated_params):
+        return EvalResult(self.client_id, {"loss": 1.0}, self._result.n_samples, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties: fold order never changes the aggregate
+# ---------------------------------------------------------------------------
+
+@st.composite
+def fold_scenarios(draw):
+    """Random pytree shapes/dtypes/weights plus a random arrival ordering."""
+    n = draw(st.integers(2, 6))
+    n_leaves = draw(st.integers(1, 3))
+    shapes = tuple(
+        tuple(draw(st.lists(st.integers(1, 5), min_size=1, max_size=3)))
+        for _ in range(n_leaves)
+    )
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    seed = draw(st.integers(0, 2**16))
+    weights = [draw(st.integers(1, 500)) for _ in range(n)]
+    delays = draw(st.permutations(list(range(n))))
+    return n, shapes, dtype, seed, weights, [float(d) for d in delays]
+
+
+@settings(max_examples=25, deadline=None)
+@given(fold_scenarios())
+def test_streaming_fold_matches_barrier_any_arrival_order(scenario):
+    """Acceptance property: AsyncFLServer on the StreamingAggregator ==
+    barrier FLServer on identical client results, for every arrival
+    permutation (max abs err <= 1e-5 in fp32)."""
+    n, shapes, dtype, seed, weights, delays = scenario
+    results = _results(n, shapes, dtype, seed, weights)
+    clients = [_StubClient(r) for r in results]
+    schedule = DeterministicSchedule(
+        {r.client_id: d for r, d in zip(results, delays)}
+    )
+
+    barrier = FLServer(clients, results[0].params).run(1)
+    streaming = AsyncFLServer(
+        clients, results[0].params, schedule=schedule, fold_cost_s=0.1
+    ).run(1)
+    _assert_close(streaming.final_params, barrier.final_params, dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(fold_scenarios())
+def test_engine_fold_matches_batch_engine(scenario):
+    """Engine-level property: fold_round over any arrival permutation ==
+    AggregationEngine.aggregate on the same results."""
+    n, shapes, dtype, seed, weights, delays = scenario
+    results = _results(n, shapes, dtype, seed, weights)
+    schedule = DeterministicSchedule(
+        {r.client_id: d for r, d in zip(results, delays)}
+    )
+    report = AsyncRoundEngine(fold_cost_s=0.1).fold_round(1, results, schedule)
+    want = AggregationEngine().aggregate(
+        [r.params for r in results], [r.n_samples for r in results]
+    )
+    _assert_close(report.params, want, dtype)
+
+
+# Deterministic fallback (always runs, even without hypothesis): seeded
+# random permutations must match the batch reduce.
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fold_permutation_fallback(seed, dtype):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 7))
+    results = _results(n, dtype=dtype, seed=seed)
+    delays = rng.permutation(n).astype(float)
+    schedule = DeterministicSchedule(
+        {r.client_id: float(d) for r, d in zip(results, delays)}
+    )
+    report = AsyncRoundEngine(fold_cost_s=0.1).fold_round(1, results, schedule)
+    _assert_close(report.params, _batch_params(results), dtype)
+
+
+# ---------------------------------------------------------------------------
+# virtual-clock accounting
+# ---------------------------------------------------------------------------
+
+def test_straggler_folds_hide_behind_arrival():
+    """1 straggler in 4: the streaming span is the straggler's arrival
+    plus ONE fold; the barrier span pays all folds after it."""
+    results = _results(4)
+    schedule = DeterministicSchedule({"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0})
+    report = AsyncRoundEngine(fold_cost_s=0.5).fold_round(1, results, schedule)
+    assert report.round_span_s == pytest.approx(5.5)
+    assert report.barrier_span_s == pytest.approx(5.0 + 4 * 0.5)
+    assert report.span_saved_s == pytest.approx(1.5)
+    assert report.idle_s == pytest.approx(5.5 - 2.0)
+    assert report.fold_times["c3"] == pytest.approx(5.5)
+    # folds serialize: simultaneous arrivals queue behind the server
+    assert report.fold_times["c2"] == pytest.approx(1.0 + 3 * 0.5)
+
+
+def test_fold_events_ordered_and_complete():
+    results = _results(5, seed=3)
+    schedule = HeavyTailSchedule(base_s=1.0, straggler_ids=("c2",), seed=7)
+    report = AsyncRoundEngine(fold_cost_s=0.01).fold_round(1, results, schedule)
+    ends = [e.fold_end_s for e in report.events]
+    assert ends == sorted(ends)
+    assert {e.client_id for e in report.events} == {r.client_id for r in results}
+    assert report.round_span_s >= max(e.arrival_s for e in report.events)
+
+
+def test_degenerate_schedule_uses_fused_batch_reduce():
+    """InstantSchedule == the sync barrier: one fused engine.aggregate
+    call (jit-cached across rounds), not N streaming folds."""
+    engine = AggregationEngine()
+    round_engine = AsyncRoundEngine(engine)
+    for r in range(3):
+        report = round_engine.fold_round(
+            r + 1, _results(3, seed=r), InstantSchedule()
+        )
+        assert report.idle_s == 0.0 and not report.excluded
+    assert engine.stats.n_calls == 3
+    assert engine.stats.n_traces == 1
+
+
+def test_sync_server_routes_through_round_engine():
+    """FLServer's barrier path is the degenerate schedule of the same
+    engine; fold timestamps land in RoundRecord."""
+    results = _results(3)
+    server = FLServer([_StubClient(r) for r in results], results[0].params)
+    run = server.run(2)
+    _assert_close(run.final_params, _batch_params(results))
+    rec = run.rounds[0]
+    assert set(rec.fold_times_s) == {r.client_id for r in results}
+    assert rec.round_span_s > 0.0 and rec.idle_s == 0.0
+    assert server.agg_engine.stats.n_calls == 2  # fused batch path kept
+
+
+def test_async_server_threads_fold_times_into_records():
+    results = _results(3)
+    server = AsyncFLServer(
+        [_StubClient(r) for r in results], results[0].params,
+        schedule=DeterministicSchedule({"c0": 1.0, "c1": 3.0, "c2": 2.0}),
+        fold_cost_s=0.25,
+    )
+    run = server.run(2)
+    _assert_close(run.final_params, _batch_params(results))
+    rec = run.rounds[0]
+    assert rec.fold_times_s == {
+        "c0": pytest.approx(1.25), "c2": pytest.approx(2.25),
+        "c1": pytest.approx(3.25),
+    }
+    assert rec.round_span_s == pytest.approx(3.25)
+    assert len(server.fold_reports) == 2
+    assert server.fold_reports[0].barrier_span_s == pytest.approx(3.75)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: revocation mid-fold (§4.3 recovery rule)
+# ---------------------------------------------------------------------------
+
+def test_revoked_silo_is_rerequested_and_still_aggregated():
+    """Default policy: a silo revoked before its message lands retrains on
+    the replacement VM and its update is still folded into the round."""
+    results = _results(4)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0}, revoke_at={"c3": 2.0}
+    )
+    engine = AsyncRoundEngine(fold_cost_s=0.5, recovery_delay_s=1.0)
+    report = engine.fold_round(1, results, schedule)
+    assert report.rerequested == ["c3"] and report.excluded == []
+    # revoked at 2, recovery 1, retrain 5 -> arrives at 8, folds by 8.5
+    assert report.fold_times["c3"] == pytest.approx(8.5)
+    assert report.round_span_s == pytest.approx(8.5)
+    retry = [e for e in report.events if e.client_id == "c3"]
+    assert len(retry) == 1 and retry[0].attempt == 2
+    _assert_close(report.params, _batch_params(results))  # all 4 silos in
+
+
+def test_revoked_silo_excluded_under_exclude_policy():
+    results = _results(4)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0}, revoke_at={"c3": 2.0}
+    )
+    engine = AsyncRoundEngine(fold_cost_s=0.5, on_revocation="exclude")
+    report = engine.fold_round(1, results, schedule)
+    assert report.excluded == ["c3"] and report.rerequested == []
+    assert "c3" not in report.fold_times
+    _assert_close(report.params, _batch_params(results[:3]))
+
+
+def test_revocation_after_delivery_is_harmless():
+    """A VM revoked after its c_msg_train landed does not lose the round
+    (the simulator's already-delivered rule)."""
+    results = _results(3)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 2.0, "c2": 3.0}, revoke_at={"c1": 2.5}
+    )
+    report = AsyncRoundEngine(fold_cost_s=0.1).fold_round(1, results, schedule)
+    assert report.rerequested == [] and report.excluded == []
+    _assert_close(report.params, _batch_params(results))
+
+
+def test_rerequest_budget_exhaustion_excludes():
+    results = _results(2)
+    schedule = DeterministicSchedule({"c0": 1.0, "c1": 4.0}, revoke_at={"c1": 0.5})
+    engine = AsyncRoundEngine(fold_cost_s=0.1, max_rerequests=0)
+    report = engine.fold_round(1, results, schedule)
+    assert report.excluded == ["c1"]
+    _assert_close(report.params, _batch_params(results[:1]))
+
+
+def test_all_silos_revoked_raises():
+    results = _results(2)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 1.0}, revoke_at={"c0": 0.1, "c1": 0.1}
+    )
+    engine = AsyncRoundEngine(fold_cost_s=0.1, on_revocation="exclude")
+    with pytest.raises(ValueError):
+        engine.fold_round(1, results, schedule)
+
+
+def test_invalid_revocation_policy_rejected():
+    with pytest.raises(ValueError):
+        AsyncRoundEngine(on_revocation="drop-table")
+
+
+def test_revocation_injector_marks_only_undelivered_spot_clients():
+    inner = DeterministicSchedule({"c0": 1.0, "c1": 50.0, "c2": 50.0})
+    inj = RevocationInjector(
+        inner, RevocationModel(k_r=5.0, seed=3), spot_clients=("c1",),
+        horizon_s=50.0,
+    )
+    hit = False
+    for r in range(5):
+        arrivals = inj.round_arrivals(r, ["c0", "c1", "c2"])
+        assert arrivals["c2"].revoke_at_s is None  # on-demand never revokes
+        a = arrivals["c1"]
+        if a.revoke_at_s is not None:
+            hit = True
+            assert a.revoke_at_s <= a.delay_s  # only pre-delivery marks
+    assert hit  # k_r=5s vs 50s rounds: the process fires within 5 rounds
+
+
+def test_async_server_end_to_end_with_revocations():
+    """AsyncFLServer under injected revocations still averages every silo
+    (re-request policy) and matches the barrier result."""
+    results = _results(4, seed=9)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 2.0, "c2": 3.0, "c3": 6.0}, revoke_at={"c3": 1.5}
+    )
+    server = AsyncFLServer(
+        [_StubClient(r) for r in results], results[0].params,
+        schedule=schedule, fold_cost_s=0.2, recovery_delay_s=2.0,
+    )
+    run = server.run(1)
+    _assert_close(run.final_params, _batch_params(results))
+    assert server.fold_reports[0].rerequested == ["c3"]
+    # revoked at 1.5, recovery 2, retrain 6 -> folded at 9.5 + 0.2
+    assert run.rounds[0].fold_times_s["c3"] == pytest.approx(9.7)
+
+
+# ---------------------------------------------------------------------------
+# server recovery: freshest checkpoint, client-only case (§4.3)
+# ---------------------------------------------------------------------------
+
+def test_recover_server_from_client_checkpoints_without_server_manager(tmp_path):
+    """Regression: recovery used to skip resolve_freshest entirely when
+    server_ckpt was None, even though clients held the aggregated weights
+    (paper: the server 'waits for any client to send its weights')."""
+    from repro.checkpoint import ClientCheckpointManager
+
+    results = _results(2)
+    saved = _batch_params(results)
+    mgr = ClientCheckpointManager(str(tmp_path / "c0"))
+    mgr.save(5, saved)
+
+    server = FLServer(
+        [_StubClient(r) for r in results],
+        jax.tree.map(jnp.zeros_like, results[0].params),  # stale in-memory state
+        client_ckpts={"c0": mgr},
+    )
+    source = server._recover_server()
+    assert source == "client:c0"
+    _assert_close(server.params, saved)
+
+
+def test_recover_server_prefers_freshest_client(tmp_path):
+    from repro.checkpoint import ClientCheckpointManager
+
+    results = _results(2)
+    old, new = results[0].params, results[1].params
+    mgrs = {
+        "c0": ClientCheckpointManager(str(tmp_path / "c0")),
+        "c1": ClientCheckpointManager(str(tmp_path / "c1")),
+    }
+    mgrs["c0"].save(3, old)
+    mgrs["c1"].save(7, new)
+    server = FLServer(
+        [_StubClient(r) for r in results],
+        jax.tree.map(jnp.zeros_like, old),
+        client_ckpts=mgrs,
+    )
+    assert server._recover_server() == "client:c1"
+    _assert_close(server.params, new)
+
+
+def test_recover_server_without_any_checkpoint_keeps_params():
+    results = _results(2)
+    server = FLServer([_StubClient(r) for r in results], results[0].params)
+    assert server._recover_server() == "none"
+    _assert_close(server.params, results[0].params)

@@ -138,6 +138,16 @@ def test_tie_prefers_server(tmp_path):
     assert src == "server"
 
 
+def test_freshest_without_server_manager(tmp_path):
+    """§4.3: client local copies restore the run even when no server-side
+    checkpointing was configured (server arg is None)."""
+    cs = {"c0": ClientCheckpointManager(str(tmp_path / "c0"))}
+    cs["c0"].save(3, _state(3.0))
+    src, info = resolve_freshest(None, cs)
+    assert src == "client:c0" and info.round_idx == 3
+    assert resolve_freshest(None, {}) == ("none", None)
+
+
 def test_pytree_num_bytes():
     tree = {"a": np.zeros((10,), np.float32), "b": np.zeros((3,), np.int8)}
     assert pytree_num_bytes(tree) == 43

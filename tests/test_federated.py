@@ -141,6 +141,7 @@ def _make_clients(lc, n=2):
     ]
 
 
+@pytest.mark.slow
 def test_server_runs_rounds_and_improves(tmp_path):
     lc = LSTMConfig(vocab_size=64, hidden=32)
     clients = _make_clients(lc)
@@ -152,6 +153,7 @@ def test_server_runs_rounds_and_improves(tmp_path):
     assert losses[-1] < losses[0]  # Markov-stream loss decreases
 
 
+@pytest.mark.slow
 def test_server_fault_recovery_round_trip(tmp_path):
     from repro.checkpoint import ClientCheckpointManager, ServerCheckpointManager
 
@@ -186,6 +188,7 @@ def test_server_fault_recovery_round_trip(tmp_path):
 # Pod-parallel FL round == sequential per-silo reference
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_pod_fedavg_equals_sequential():
     cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=32,
                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=61,

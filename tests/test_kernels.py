@@ -48,6 +48,7 @@ def test_fedavg_reduce_weights_normalized():
     (256, 4, 1, 128),   # MQA
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_flash_attention_causal_sweep(seq, heads, kv, dim, dtype):
     ks = jax.random.split(jax.random.PRNGKey(seq + heads), 3)
     q = jax.random.normal(ks[0], (2, seq, heads, dim), dtype)
@@ -100,6 +101,7 @@ def test_flash_attention_block_shape_invariance(bq, bk):
     (128, 8, 32, 64, 32),
     (256, 8, 64, 128, 64),   # mamba2-130m-like tile
 ])
+@pytest.mark.slow
 def test_ssd_scan_sweep(L, H, P, N, chunk):
     ks = jax.random.split(jax.random.PRNGKey(L + H), 5)
     x = jax.random.normal(ks[0], (2, L, H, P))
@@ -128,6 +130,7 @@ def test_ssd_scan_matches_sequential_semantics():
     np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_seq), atol=1e-3)
 
 
+@pytest.mark.slow
 def test_ssd_scan_initial_state_continuation():
     """Splitting a sequence in two with state carry == one long scan."""
     ks = jax.random.split(jax.random.PRNGKey(11), 5)

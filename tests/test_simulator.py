@@ -106,6 +106,62 @@ def test_rounds_all_complete_under_failures(env):
     assert res.total_time_s > 0 and res.total_cost > 0
 
 
+def test_async_rounds_never_slower_than_barrier(env):
+    """Streaming-fold accounting: folds pipeline behind arrivals, so the
+    async round span is <= the barrier span on every config — with
+    equality only when every silo arrives simultaneously (TIL's four
+    identical clients) and strict improvement on heterogeneous arrivals
+    (Shakespeare's ragged silos)."""
+    til = til_application(n_rounds=10)
+    barrier = MultiCloudSimulator(env, til, SimulationConfig(k_r=None)).run()
+    stream = MultiCloudSimulator(
+        env, til, SimulationConfig(k_r=None, async_rounds=True)
+    ).run()
+    assert stream.rounds_completed == 10
+    # identical clients -> simultaneous arrivals -> degenerate barrier cost
+    assert stream.fl_exec_time_s == pytest.approx(barrier.fl_exec_time_s)
+
+    shak = shakespeare_application(n_rounds=10)
+    barrier = MultiCloudSimulator(env, shak, SimulationConfig(k_r=None)).run()
+    stream = MultiCloudSimulator(
+        env, shak, SimulationConfig(k_r=None, async_rounds=True)
+    ).run()
+    assert stream.fl_exec_time_s < barrier.fl_exec_time_s
+    # the saving per round is bounded by the aggregation term the barrier
+    # pays after the last arrival
+    server_vm = barrier.final_placement["s"].vm_id
+    cm = MultiCloudSimulator(env, shak, SimulationConfig(k_r=None)).cost_model
+    max_save = 10 * cm.t_aggreg(server_vm)
+    assert barrier.fl_exec_time_s - stream.fl_exec_time_s <= max_save + 1e-6
+
+
+def test_async_round_time_accounting(env):
+    """CostModel.async_round_time: folds serialize and pipeline."""
+    app = til_application()
+    cm = MultiCloudSimulator(env, app, SimulationConfig(k_r=None)).cost_model
+    vm = next(iter(env.vm_types))
+    t_fold = cm.t_fold(vm, 2)
+    assert t_fold == pytest.approx(cm.t_aggreg(vm) / 2)
+    # far-apart arrivals: each fold hides behind the next arrival
+    span = cm.async_round_time({"a": 0.0, "b": 1000.0}, vm)
+    assert span == pytest.approx(1000.0 + t_fold)
+    # simultaneous arrivals: folds queue -> degenerate barrier cost
+    span = cm.async_round_time({"a": 0.0, "b": 0.0}, vm)
+    assert span == pytest.approx(2 * t_fold)
+
+
+def test_async_rounds_survive_revocations(env):
+    app = til_application(n_rounds=20)
+    res = MultiCloudSimulator(
+        env, app,
+        SimulationConfig(server_market="spot", client_market="spot", k_r=3600,
+                         seed=3, remove_revoked=False, async_rounds=True,
+                         checkpoint=CheckpointPolicy(server_interval_rounds=10)),
+    ).run()
+    assert res.rounds_completed == 20
+    assert res.total_time_s > 0 and res.total_cost > 0
+
+
 def test_events_are_ordered_and_spot_only(env):
     app = til_application(n_rounds=60)
     res = MultiCloudSimulator(
