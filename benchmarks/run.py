@@ -9,6 +9,7 @@ import sys
 def main() -> None:
     from .aggregation_bench import bench_aggregation
     from .async_round_bench import bench_async_round
+    from .deadline_bench import bench_deadline_round
     from .kernel_bench import bench_kernels
     from .paper_tables import (
         bench_checkpoint_overhead,
@@ -30,6 +31,7 @@ def main() -> None:
         bench_kernels,              # Pallas kernel hot spots
         bench_aggregation,          # fused FedAvg engine vs seed oracle
         bench_async_round,          # streaming fold vs barrier under stragglers
+        bench_deadline_round,       # T_round partial rounds vs barrier-on-count
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]
     print("name,us_per_call,derived")

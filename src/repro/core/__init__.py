@@ -25,7 +25,14 @@ from .cloud_model import (
     aws_gcp_environment,
     cloudlab_environment,
 )
-from .cost_model import SERVER, Assignment, CostModel, Placement, PlacementEvaluation
+from .cost_model import (
+    SERVER,
+    Assignment,
+    CostModel,
+    DeadlineRoundPlan,
+    Placement,
+    PlacementEvaluation,
+)
 from .dynamic_scheduler import DynamicScheduler, ReplacementDecision
 from .fault_tolerance import CheckpointPolicy, CheckpointRecord, FaultToleranceModule, RecoveryPlan
 from .initial_mapping import InfeasibleMappingError, InitialMapping, MappingSolution
@@ -41,6 +48,7 @@ from .pre_scheduling import (
 )
 from .revocation import RevocationModel, RevocationSampler
 from .simulator import (
+    EscalationEvent,
     MultiCloudSimulator,
     RevocationEvent,
     SimulationConfig,
@@ -57,6 +65,8 @@ __all__ = [
     "CloudEnvironment",
     "CostModel",
     "DynamicScheduler",
+    "DeadlineRoundPlan",
+    "EscalationEvent",
     "ExecutionProbe",
     "FLApplication",
     "FaultToleranceModule",

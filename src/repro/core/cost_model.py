@@ -35,6 +35,20 @@ class PlacementEvaluation:
     objective: float           # Eq. 3, normalized
 
 
+@dataclasses.dataclass(frozen=True)
+class DeadlineRoundPlan:
+    """`CostModel.deadline_round_time` output: who made the round's cut.
+
+    ``span_s`` is the round's dispatch->close time; ``on_time``/``late``
+    partition the clients by the effective (quorum-extended) deadline —
+    late clients' updates carry into the next round's average."""
+
+    span_s: float
+    effective_deadline_s: float
+    on_time: Tuple[str, ...]
+    late: Tuple[str, ...]
+
+
 class CostModel:
     """Evaluates placements for one FL application on one environment."""
 
@@ -101,6 +115,59 @@ class CostModel:
         for arrival in sorted(arrival_offsets.values()):
             server_free = max(server_free, arrival) + t_fold
         return server_free
+
+    def deadline_round_time(
+        self,
+        arrival_offsets: Mapping[str, float],
+        server_vm: str,
+        deadline_s: float,
+        carry_in: int = 0,
+        min_clients: int = 1,
+    ) -> DeadlineRoundPlan:
+        """Partial-round (T_round) span accounting for the deadline engine.
+
+        The round closes at the effective deadline — ``deadline_s``
+        extended, never shrunk, until at least ``min_clients`` fresh
+        messages are in — with whatever subset arrived by then; later
+        arrivals carry into the next round.  ``carry_in`` counts the
+        previous round's stragglers whose parked messages fold first
+        (they sit on the server at dispatch, i.e. arrival 0).  Each fold
+        costs ``t_fold`` (t_aggreg split over the full cohort) and folds
+        pipeline behind arrivals exactly like `async_round_time`; when
+        nobody misses, the round closes at the fold drain (barrier on
+        count reached before T_round), otherwise not before the
+        effective deadline — a missing message could land until then.
+        """
+        if not arrival_offsets:
+            raise ValueError("deadline_round_time needs at least one client")
+        t_fold = self.t_fold(server_vm, len(arrival_offsets))
+        order = sorted(arrival_offsets.items(), key=lambda kv: (kv[1], kv[0]))
+        effective = float(deadline_s)
+        need = min(int(min_clients), len(order))
+        if need > 0:
+            effective = max(effective, order[need - 1][1])
+        on_time = tuple(cid for cid, t in order if t <= effective)
+        late = tuple(cid for cid, t in order if t > effective)
+        server_free = carry_in * t_fold
+        for cid, arrival in order:
+            if arrival > effective:
+                continue
+            server_free = max(server_free, arrival) + t_fold
+        span = server_free if not late else max(server_free, effective)
+        return DeadlineRoundPlan(
+            span_s=span,
+            effective_deadline_s=effective,
+            on_time=on_time,
+            late=late,
+        )
+
+    def deadline_from_t_max(self, frac: float = 1.0) -> float:
+        """T_round derived from the worst-case round bound (Eq. 7's
+        normalizer): any silo slower than ``frac * t_max()`` is
+        pathological by the model's own accounting."""
+        if frac <= 0.0:
+            raise ValueError("frac must be positive")
+        return frac * self.t_max()
 
     def comm_cost(self, client_provider: str, server_provider: str) -> float:
         """Eq. 6: comm_{jm} with j = client's provider, m = server's."""

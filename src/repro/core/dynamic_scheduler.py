@@ -1,7 +1,11 @@
 """Dynamic Scheduler module (paper §4.4, Algorithms 1-3).
 
 On a VM revocation (or runtime fault) the Fault Tolerance module asks this
-scheduler for a replacement VM for the faulty task. The choice is greedy:
+scheduler for a replacement VM for the faulty task.  Deadline-driven
+partial rounds treat a silo that repeatedly misses T_round the same way —
+a slow VM is a soft fault (`FaultToleranceModule.handle_straggler`), so
+its reassignment routes through `select_instance` and the slow type enters
+the same revocation cooldown. The choice is greedy:
 for every candidate instance, recompute the expected round makespan
 (Algorithm 1) and financial cost (Algorithm 2) with the candidate standing
 in for the faulty task, and pick the candidate minimizing the same
@@ -45,7 +49,13 @@ class DynamicScheduler:
         self._revoked_at: Dict[str, Dict[str, float]] = {}
 
     def candidate_set(self, task: str, now_s: float = 0.0) -> Set[str]:
-        """I_t at time now_s: all VM types minus those inside their cooldown."""
+        """I_t at time now_s: all VM types minus those inside their cooldown.
+
+        The boundary is inclusive: a type revoked at ``t`` becomes
+        eligible again exactly at ``t + revoked_cooldown_s`` (``>=``).
+        An empty set is possible when every type is cooling down;
+        `select_instance` then falls back to the full pool minus the VM
+        that just died rather than dead-ending."""
         hist = self._revoked_at.get(task, {})
         return {
             vm_id

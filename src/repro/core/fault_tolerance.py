@@ -7,7 +7,10 @@ Responsibilities:
   * task monitoring — observe task health, detect revocations/faults;
   * recovery orchestration — on a fault, ask the Dynamic Scheduler for a
     replacement VM, restore from the freshest checkpoint (server's if newer,
-    otherwise any client's), relaunch, resume monitoring.
+    otherwise any client's), relaunch, resume monitoring.  A silo that
+    repeatedly misses round deadlines (T_round partial rounds, §4.4) is a
+    *soft* fault: `handle_straggler` routes it through the same scheduler
+    without a checkpoint restore.
 
 The module is runtime-agnostic: the event-driven simulator drives it with
 simulated clock/events, and `repro.federated.server` drives it with real
@@ -199,6 +202,41 @@ class FaultToleranceModule:
         )
         self.recovery_log.append(plan)
         self.task_state[faulty_task] = TaskState.RUNNING
+        return plan
+
+    def handle_straggler(
+        self,
+        slow_task: str,
+        current_placement: Placement,
+        slow_vm: str,
+        now_s: float,
+        current_round: int,
+    ) -> RecoveryPlan:
+        """§4.4 soft fault: a silo repeatedly missing round deadlines.
+
+        The VM is alive — no checkpoint restore is needed (the server
+        re-sends the current weights with the next ``s_msg_train``) — but
+        it is too slow to make rounds, so the Dynamic Scheduler picks a
+        replacement exactly as it would after a revocation; the slow type
+        enters the same cooldown so it is not immediately re-selected.
+        The silo trains the *next* round on the new VM (its current late
+        update, if any, is already in the carry-over buffer)."""
+        self.task_state[slow_task] = TaskState.FAULTY
+        decision = self.scheduler.select_instance(
+            slow_task,
+            current_placement,
+            slow_vm,
+            remove_revoked=self.remove_revoked,
+            now_s=now_s,
+        )
+        plan = RecoveryPlan(
+            decision=decision,
+            restore_from=self.client_checkpoints.get(slow_task),
+            resume_round=current_round + 1,
+            restore_transfer_s=0.0,
+        )
+        self.recovery_log.append(plan)
+        self.task_state[slow_task] = TaskState.RUNNING
         return plan
 
     def recovery_delay_s(self, plan: RecoveryPlan) -> float:

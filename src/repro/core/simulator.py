@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from .application_model import FLApplication
 from .cloud_model import CloudEnvironment
@@ -52,6 +52,19 @@ class SimulationConfig:
     # arrivals) instead of barriering on the slowest silo and then paying
     # the full t_aggreg. False keeps the paper's barrier accounting.
     async_rounds: bool = False
+    # Deadline-driven partial rounds (requires async_rounds=True): the
+    # round closes at T_round with whatever c_msg_train subset arrived —
+    # extended until `deadline_min_clients` fresh silos are in — and late
+    # silos carry into the next round's (discounted) average instead of
+    # holding the round hostage.  A float is a fixed T_round in seconds; a
+    # callable (round_idx, arrival_offsets) -> seconds derives it per
+    # round (e.g. a quantile of the offsets, or CostModel.deadline_from_
+    # t_max).  None keeps pure barrier-on-count async rounds.
+    round_deadline: Optional[Union[float, Callable[[int, Dict[str, float]], float]]] = None
+    deadline_min_clients: int = 1
+    # Consecutive deadline misses by the same silo before its VM is
+    # treated as a §4.4 soft fault and replaced via the Dynamic Scheduler.
+    deadline_escalate_after: int = 2
 
 
 @dataclasses.dataclass
@@ -62,6 +75,19 @@ class RevocationEvent:
     new_vm: str
     round_idx: int
     interrupted_round: bool
+
+
+@dataclasses.dataclass
+class EscalationEvent:
+    """A silo's VM replaced for repeatedly missing round deadlines (§4.4
+    soft fault — the VM was alive, just too slow for T_round)."""
+
+    time_s: float
+    task: str
+    old_vm: str
+    new_vm: str
+    round_idx: int
+    consecutive_misses: int
 
 
 @dataclasses.dataclass
@@ -77,6 +103,10 @@ class SimulationResult:
     initial_mapping: MappingSolution
     events: List[RevocationEvent]
     final_placement: Placement
+    # Deadline-driven partial rounds (round_deadline set):
+    n_deadline_misses: int = 0           # late c_msg_train messages carried over
+    carried_folds: int = 0               # stale folds drained into later rounds
+    escalations: List[EscalationEvent] = dataclasses.field(default_factory=list)
 
 
 class _Allocation:
@@ -109,6 +139,13 @@ class MultiCloudSimulator:
     # ------------------------------------------------------------------
     def run(self) -> SimulationResult:
         cfg = self.config
+        if cfg.round_deadline is not None and not cfg.async_rounds:
+            raise ValueError(
+                "round_deadline requires async_rounds=True (partial rounds "
+                "are a mode of the streaming fold engine)"
+            )
+        if cfg.deadline_escalate_after < 1:
+            raise ValueError("deadline_escalate_after must be >= 1")
         n_rounds = cfg.n_rounds if cfg.n_rounds is not None else self.app.n_rounds
         sampler = RevocationModel(cfg.k_r, cfg.seed).sampler()
 
@@ -142,6 +179,14 @@ class MultiCloudSimulator:
         retired: List[_Allocation] = []
         next_rev = sampler.next_event_after(0.0)
 
+        # Deadline-driven partial rounds: stragglers carried between rounds
+        # and per-silo consecutive-miss streaks (§4.4 escalation).
+        carry_tasks: List[str] = []
+        miss_streak: Dict[str, int] = {}
+        escalations: List[EscalationEvent] = []
+        n_deadline_misses = 0
+        carried_folds_total = 0
+
         round_idx = 1
         while round_idx <= n_rounds:
             server_vm = placement[SERVER].vm_id
@@ -154,7 +199,26 @@ class MultiCloudSimulator:
                 arrival_offsets[c.client_id] = self.cost_model.t_exec(
                     c.client_id, cvm.vm_id
                 ) + self.cost_model.t_comm(cvm.region, svm.region)
-            if cfg.async_rounds:
+            deadline_plan = None
+            if cfg.async_rounds and cfg.round_deadline is not None:
+                # Partial round: close at the (quorum-extended) T_round
+                # with whatever arrived; last round's stragglers fold
+                # first (carry_in), this round's land in the next one.
+                t_round = (
+                    cfg.round_deadline(round_idx, dict(arrival_offsets))
+                    if callable(cfg.round_deadline)
+                    else float(cfg.round_deadline)
+                )
+                deadline_plan = self.cost_model.deadline_round_time(
+                    arrival_offsets,
+                    server_vm,
+                    t_round,
+                    carry_in=len(carry_tasks),
+                    min_clients=cfg.deadline_min_clients,
+                )
+                client_times = dict(arrival_offsets)
+                round_span = deadline_plan.span_s
+            elif cfg.async_rounds:
                 # Streaming fold: each message is folded as it lands
                 # (t_aggreg/N per fold), so a client "completes" at its
                 # arrival; the round ends when the last fold drains.
@@ -173,6 +237,8 @@ class MultiCloudSimulator:
             round_end = round_start + round_span
 
             interrupted = False
+            lost_late: set = set()
+            replaced_this_round: set = set()
             while next_rev <= round_end:
                 t_rev = next_rev
                 next_rev = sampler.next_event_after(t_rev)
@@ -184,10 +250,22 @@ class MultiCloudSimulator:
                     continue
                 alloc = allocations[victim]
 
-                if victim != SERVER and t_rev >= round_start + client_times[victim]:
-                    # Client already delivered this round's weights: replace it
-                    # in the background; the round result stands but the next
-                    # round cannot start before the new VM is ready.
+                is_late_client = (
+                    deadline_plan is not None and victim in deadline_plan.late
+                )
+                if victim != SERVER and (
+                    t_rev >= round_start + client_times[victim] or is_late_client
+                ):
+                    # The round is not waiting on this client — either its
+                    # weights already landed, or the deadline closed without
+                    # it (its update would only carry into the NEXT round).
+                    # Replace it in the background; the round result stands
+                    # but the next round cannot start before the new VM is
+                    # ready.  A late client revoked before delivery loses
+                    # its in-flight update: nothing to carry over.
+                    if is_late_client and t_rev < round_start + client_times[victim]:
+                        lost_late.add(victim)
+                    replaced_this_round.add(victim)
                     plan = ft.handle_fault(victim, placement, alloc.vm_id, t_rev, round_idx)
                     delay = ft.recovery_delay_s(plan)
                     self._swap_allocation(allocations, retired, victim, plan.decision.new_vm, placement, t_rev)
@@ -226,6 +304,50 @@ class MultiCloudSimulator:
 
             # Round completed.
             now = round_end
+            if deadline_plan is not None:
+                # Last round's parked messages were folded this round;
+                # this round's late silos take their place in the buffer —
+                # minus any whose VM was revoked pre-delivery (update lost;
+                # the replacement trains the next round fresh, and the
+                # revocation already replaced the VM, so no miss streak).
+                carried_folds_total += len(carry_tasks)
+                n_deadline_misses += len(deadline_plan.late)
+                carry_tasks = [c for c in deadline_plan.late if c not in lost_late]
+                for cid in deadline_plan.on_time:
+                    miss_streak[cid] = 0
+                for cid in lost_late:
+                    miss_streak[cid] = 0
+                for cid in carry_tasks:
+                    if cid in replaced_this_round:
+                        # A revocation already provisioned this silo a fresh
+                        # VM mid-round; escalating at round end would replace
+                        # the replacement. The delivered-late message still
+                        # carries, but the slow-VM evidence is gone.
+                        miss_streak[cid] = 0
+                        continue
+                    streak = miss_streak.get(cid, 0) + 1
+                    if streak >= cfg.deadline_escalate_after:
+                        # §4.4 soft fault: replace the chronically slow VM
+                        # via the Dynamic Scheduler. The swap runs in the
+                        # background, but the silo cannot train the next
+                        # round before its replacement is up.
+                        old_vm = allocations[cid].vm_id
+                        plan = ft.handle_straggler(
+                            cid, placement, old_vm, round_end, round_idx
+                        )
+                        delay = ft.recovery_delay_s(plan)
+                        self._swap_allocation(
+                            allocations, retired, cid,
+                            plan.decision.new_vm, placement, round_end,
+                        )
+                        escalations.append(
+                            EscalationEvent(round_end, cid, old_vm,
+                                            plan.decision.new_vm, round_idx,
+                                            streak)
+                        )
+                        now = max(now, round_end + delay)
+                        streak = 0
+                    miss_streak[cid] = streak
             if ckpt_enabled:
                 ov = ft.on_round_complete(round_idx, now)
                 ckpt_overhead_total += ov
@@ -255,6 +377,9 @@ class MultiCloudSimulator:
             initial_mapping=mapping,
             events=events,
             final_placement=placement,
+            n_deadline_misses=n_deadline_misses,
+            carried_folds=carried_folds_total,
+            escalations=escalations,
         )
 
     # ------------------------------------------------------------------

@@ -29,6 +29,12 @@ in O(N·block) rather than O(N·L) working memory, and
 :class:`StreamingAggregator` folds clients in *as they land* (running
 weighted accumulation with an O(L) donated-in-place accumulator), so
 asynchronously arriving silos never require holding all N models.
+
+Deadline-driven partial rounds (see :mod:`repro.federated.async_server`)
+park updates that miss a round's ``T_round`` in a :class:`CarryOverBuffer`;
+the next round's :class:`StreamingAggregator` drains it first, folding each
+late silo with a staleness-discounted weight (``StreamingAggregator
+.add_stale`` / ``fold_carry``), so no silo's contribution is ever dropped.
 """
 from __future__ import annotations
 
@@ -347,6 +353,63 @@ class AggregationEngine:
 # Streaming / incremental accumulation
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class CarryEntry:
+    """One late ``c_msg_train`` buffered for a later round's average.
+
+    The update was computed against ``origin_round``'s global weights; when
+    it is finally folded, its example weight is discounted by the staleness
+    factor ``discount ** (fold_round - origin_round)`` so fresh silos
+    dominate while the straggler's contribution still lands (never silently
+    dropped)."""
+
+    client_id: str
+    params: Any
+    weight: float       # raw example weight (n_samples), undiscounted
+    origin_round: int   # round whose deadline the message missed
+    late_by_s: float = 0.0  # virtual seconds past that round's deadline
+
+    def age_at(self, round_idx: int) -> int:
+        """Rounds of staleness when folded in ``round_idx`` (floor 1).
+
+        The single source of the age rule — `fold_carry` and the async
+        round engine's timed drain both discount by ``discount**age_at``."""
+        return max(1, round_idx - self.origin_round)
+
+
+class CarryOverBuffer:
+    """Late updates parked between rounds (deadline-driven partial rounds).
+
+    The async round engine defers any ``c_msg_train`` that misses its
+    round's ``T_round`` deadline into this buffer; the next round's
+    :class:`StreamingAggregator` drains it first (the messages are already
+    on the server), folding each entry with a staleness-discounted weight.
+    """
+
+    def __init__(self) -> None:
+        self._entries: List[CarryEntry] = []
+
+    def defer(self, entry: CarryEntry) -> None:
+        self._entries.append(entry)
+
+    def drain(self) -> List[CarryEntry]:
+        entries, self._entries = self._entries, []
+        return entries
+
+    def clients(self) -> List[str]:
+        return [e.client_id for e in self._entries]
+
+    def pending_weight(self) -> float:
+        """Total raw (undiscounted) example weight awaiting a fold."""
+        return sum(e.weight for e in self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+
 @jax.jit
 def _scale_tree(tree, w):
     return jax.tree.map(lambda l: l.astype(jnp.float32) * w, tree)
@@ -403,6 +466,47 @@ class StreamingAggregator:
             nbytes = sum(l.nbytes for l in jax.tree.leaves(params))
             self._engine.stats.last_bytes = nbytes
             self._engine.stats.total_bytes += nbytes
+
+    def add_stale(
+        self,
+        params: Any,
+        weight: float,
+        stale_rounds: int,
+        discount: float,
+        block: bool = False,
+    ) -> float:
+        """Fold a carried-over (stale) update with a staleness-discounted
+        weight ``weight * discount**stale_rounds``; returns the effective
+        weight that entered the average."""
+        if stale_rounds < 1:
+            raise ValueError("a stale fold must be at least one round late")
+        if not 0.0 <= discount <= 1.0:
+            raise ValueError("staleness discount must be in [0, 1]")
+        w_eff = float(weight) * float(discount) ** int(stale_rounds)
+        self.add(params, w_eff, block=block)
+        return w_eff
+
+    def fold_carry(
+        self,
+        buffer: CarryOverBuffer,
+        round_idx: int,
+        discount: float,
+        block: bool = False,
+    ) -> List[Tuple[CarryEntry, float]]:
+        """Drain a :class:`CarryOverBuffer` into the accumulator.
+
+        Every parked entry is folded with its staleness discount applied
+        (age = ``round_idx - origin_round`` rounds, at least 1); returns
+        the ``(entry, effective_weight)`` pairs so callers can account the
+        raw-vs-discounted weights (weight conservation audits)."""
+        folded: List[Tuple[CarryEntry, float]] = []
+        for entry in buffer.drain():
+            w_eff = self.add_stale(
+                entry.params, entry.weight, entry.age_at(round_idx),
+                discount, block=block,
+            )
+            folded.append((entry, w_eff))
+        return folded
 
     def result(self) -> Any:
         if self._acc is None:

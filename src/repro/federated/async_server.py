@@ -48,18 +48,44 @@ Per-client fold completion times are threaded into
 :class:`~repro.federated.server.RoundRecord` and (via
 ``CostModel.t_fold`` / ``async_round_time``) into the simulator's
 round-time accounting.
+
+Deadline-driven partial rounds (T_round folding)
+------------------------------------------------
+Barriering on the round *count* still holds the round hostage to one
+heavy-tail straggler.  A :class:`RoundDeadline` policy closes the round
+at ``T_round`` with whatever subset of ``c_msg_train`` messages arrived
+by then — provided a configurable quorum (``min_clients`` fresh silos
+and/or ``min_weight_frac`` of the round's deliverable example weight) is
+met; the deadline silently *extends* to the earliest quorum-satisfying
+arrival otherwise.  Three policies are provided: :class:`FixedDeadline`
+(a constant T_round, the paper's per-round share of deadline ``T``),
+:class:`QuantileDeadline` (a quantile of this round's arrival delays,
+FedCostAware-style), and :class:`CostModelDeadline` (derived from
+``CostModel.t_max()``, the worst-case round bound of Eq. 7).
+
+A silo that misses the deadline is **never silently dropped**: its late
+message is parked in the engine's
+:class:`~repro.federated.agg_engine.CarryOverBuffer` and folded into the
+*next* round's weighted average with a staleness discount
+(``carry_discount ** rounds_late``), so every update eventually lands.
+Repeated consecutive misses (``escalate_after``) mark the silo in
+``FoldReport.escalations`` — a slow VM is treated like a soft fault per
+§4.4, and callers (``AsyncFLServer.on_straggler``, the simulator's
+``FaultToleranceModule.handle_straggler``) escalate it to
+``DynamicScheduler.select_instance`` for a replacement instance.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
 
 import jax
 
 from repro.core.revocation import RevocationModel, RevocationSampler
-from .agg_engine import AggregationEngine
+from .agg_engine import AggregationEngine, CarryEntry, CarryOverBuffer
 from .client import ClientResult
 
 __all__ = [
@@ -67,12 +93,16 @@ __all__ = [
     "AsyncFLServer",
     "AsyncRoundEngine",
     "ClientArrival",
+    "CostModelDeadline",
     "DeterministicSchedule",
+    "FixedDeadline",
     "FoldEvent",
     "FoldReport",
     "HeavyTailSchedule",
     "InstantSchedule",
+    "QuantileDeadline",
     "RevocationInjector",
+    "RoundDeadline",
 ]
 
 
@@ -221,6 +251,118 @@ class RevocationInjector(ArrivalSchedule):
 
 
 # ---------------------------------------------------------------------------
+# Deadline policies (T_round folding)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundDeadline:
+    """Partial-round closure policy: when does the round stop waiting?
+
+    ``deadline_s`` maps a round to its T_round on the round's virtual
+    clock (seconds from ``s_msg_train`` dispatch).  The quorum fields
+    guard against closing a round on too little evidence: the effective
+    deadline extends to the earliest time at which at least
+    ``min_clients`` fresh silos *and* ``min_weight_frac`` of the round's
+    deliverable example weight have arrived.
+    """
+
+    min_clients: int = 1
+    min_weight_frac: float = 0.0
+
+    def __post_init__(self) -> None:
+        # min_clients >= 1 guarantees every round has at least one fresh
+        # fold (a zero-quorum deadline could park the whole cohort and
+        # leave nothing to aggregate).
+        if self.min_clients < 1:
+            raise ValueError("min_clients must be >= 1")
+        if not 0.0 <= self.min_weight_frac <= 1.0:
+            raise ValueError("min_weight_frac must be in [0, 1]")
+
+    def deadline_s(
+        self, round_idx: int, arrivals: Mapping[str, ClientArrival]
+    ) -> float:
+        raise NotImplementedError
+
+    def effective_deadline(
+        self,
+        round_idx: int,
+        arrivals: Mapping[str, ClientArrival],
+        deliveries: Mapping[str, float],
+        weights: Mapping[str, float],
+    ) -> float:
+        """T_round extended (never shrunk) until the quorum is met.
+
+        ``deliveries`` are final per-client delivery times *after* §4.3
+        re-request resolution — a re-requested silo can still be the one
+        that satisfies the quorum."""
+        t = float(self.deadline_s(round_idx, arrivals))
+        if not deliveries:
+            return t
+        order = sorted(deliveries.items(), key=lambda kv: (kv[1], kv[0]))
+        need_n = min(int(self.min_clients), len(order))
+        need_w = float(self.min_weight_frac) * sum(
+            weights[cid] for cid, _ in order
+        )
+        got_n, got_w, t_quorum = 0, 0.0, -math.inf
+        for cid, delivery in order:
+            if got_n >= need_n and got_w + 1e-12 >= need_w:
+                break
+            got_n += 1
+            got_w += weights[cid]
+            t_quorum = delivery
+        return max(t, t_quorum)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedDeadline(RoundDeadline):
+    """Constant T_round: the per-round share of the application deadline T."""
+
+    t_round_s: float = math.inf
+
+    def deadline_s(self, round_idx, arrivals):
+        return self.t_round_s
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantileDeadline(RoundDeadline):
+    """T_round = ``slack`` x the q-quantile of this round's arrival delays.
+
+    Adapts to each round's arrival distribution (q=0.75, slack=1.0 closes
+    on the fastest three quarters), which is the FedCostAware-style lever
+    for cost control on spot capacity: the deadline tracks the cohort, not
+    a wall-clock constant."""
+
+    q: float = 0.75
+    slack: float = 1.0
+
+    def deadline_s(self, round_idx, arrivals):
+        import numpy as np
+
+        delays = [a.delay_s for a in arrivals.values()]
+        if not delays:
+            return 0.0
+        return float(self.slack) * float(np.quantile(delays, self.q))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelDeadline(RoundDeadline):
+    """T_round derived from the cost model's worst-case round bound.
+
+    ``frac * CostModel.t_max()`` — t_max (Eq. 7's normalizer) is the
+    worst round time over every client/VM/server-VM choice, so any silo
+    slower than a ``frac`` share of it is pathological by the model's own
+    accounting and belongs in the carry-over path."""
+
+    cost_model: Any = None
+    frac: float = 1.0
+
+    def deadline_s(self, round_idx, arrivals):
+        if self.cost_model is None:
+            raise ValueError("CostModelDeadline needs a CostModel instance")
+        return float(self.cost_model.deadline_from_t_max(self.frac))
+
+
+# ---------------------------------------------------------------------------
 # Fold engine
 # ---------------------------------------------------------------------------
 
@@ -234,6 +376,13 @@ class FoldEvent:
     fold_end_s: float
     attempt: int = 1       # >1 after a revocation re-request
     revoked_at_s: Optional[float] = None
+    weight: float = 0.0         # raw example weight folded (n_samples)
+    folded_weight: float = 0.0  # after staleness discount (== weight when fresh)
+    origin_round: Optional[int] = None  # set on carried-in (stale) folds only
+
+    @property
+    def is_stale(self) -> bool:
+        return self.origin_round is not None
 
 
 @dataclasses.dataclass
@@ -253,7 +402,16 @@ class FoldReport:
     # upper bound on the real sync FLServer's span — the barrier path
     # runs the fused batch reduce, which beats N incremental folds; see
     # benchmarks/async_round_bench.py for the measured-batch comparison.
+    # Under a deadline the counterfactual is the PR-2 barrier-on-count
+    # timeline: wait for every deliverable message (including the ones the
+    # deadline deferred), then fold them all.
     barrier_span_s: float
+    # Deadline accounting (None / empty when the round ran without one):
+    deadline_s: Optional[float] = None        # effective close (quorum-extended)
+    policy_deadline_s: Optional[float] = None  # raw T_round from the policy
+    carried_over: List[str] = dataclasses.field(default_factory=list)
+    carried_in: List[str] = dataclasses.field(default_factory=list)
+    escalations: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def span_saved_s(self) -> float:
@@ -282,6 +440,15 @@ class AsyncRoundEngine:
     fold_cost_s : override the virtual cost of each fold (deterministic
         tests / simulators); None charges the measured wall-clock cost
         of the real ``StreamingAggregator.add``.
+    deadline : default :class:`RoundDeadline` policy for every round
+        (``fold_round`` can override per call).  None keeps the PR-2
+        barrier-on-count behaviour: the round waits for every silo.
+    carry_discount : staleness discount applied to a carried-over update's
+        example weight per round of lateness (``weight * discount**age``).
+    escalate_after : consecutive deadline misses by the same silo before
+        it is reported in ``FoldReport.escalations`` (§4.4 soft-fault
+        escalation to the Dynamic Scheduler); the streak resets on an
+        on-time delivery or an escalation.
     """
 
     def __init__(
@@ -291,14 +458,28 @@ class AsyncRoundEngine:
         recovery_delay_s: float = 0.0,
         max_rerequests: int = 1,
         fold_cost_s: Optional[float] = None,
+        deadline: Optional[RoundDeadline] = None,
+        carry_discount: float = 0.5,
+        escalate_after: int = 2,
     ) -> None:
         if on_revocation not in ("rerequest", "exclude"):
             raise ValueError("on_revocation must be 'rerequest' or 'exclude'")
+        if not 0.0 <= carry_discount <= 1.0:
+            raise ValueError("carry_discount must be in [0, 1]")
+        if escalate_after < 1:
+            raise ValueError("escalate_after must be >= 1")
         self.agg_engine = agg_engine if agg_engine is not None else AggregationEngine()
         self.on_revocation = on_revocation
         self.recovery_delay_s = recovery_delay_s
         self.max_rerequests = max_rerequests
         self.fold_cost_s = fold_cost_s
+        self.deadline = deadline
+        self.carry_discount = carry_discount
+        self.escalate_after = escalate_after
+        # Cross-round state: late updates awaiting their discounted fold,
+        # and per-silo consecutive deadline-miss streaks.
+        self.carry = CarryOverBuffer()
+        self._miss_streak: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def fold_round(
@@ -306,30 +487,89 @@ class AsyncRoundEngine:
         round_idx: int,
         results: Sequence[ClientResult],
         schedule: ArrivalSchedule,
+        deadline: Optional[RoundDeadline] = None,
     ) -> FoldReport:
-        """Fold all of a round's ``c_msg_train`` messages per the schedule."""
+        """Fold one round's ``c_msg_train`` messages per the schedule.
+
+        Without a deadline (engine default and ``deadline`` both None)
+        the round barriers on the round count: every deliverable silo is
+        in the average.  With one, the round closes at the effective
+        (quorum-extended) T_round; messages arriving later are parked in
+        the carry-over buffer and folded into the *next* round's average
+        with a staleness discount.  Any previously parked updates are
+        drained first — they are already sitting on the server."""
+        deadline = deadline if deadline is not None else self.deadline
         if not results:
             raise ValueError("fold_round needs at least one client result")
         by_id = {r.client_id: r for r in results}
         arrivals = schedule.round_arrivals(round_idx, list(by_id))
 
-        if all(
-            a.delay_s == 0.0 and a.revoke_at_s is None for a in arrivals.values()
+        if (
+            deadline is None
+            and not self.carry
+            and all(
+                a.delay_s == 0.0 and a.revoke_at_s is None
+                for a in arrivals.values()
+            )
         ):
             return self._fold_degenerate(results)
+
+        # Final delivery times after §4.3 re-request resolution, so the
+        # deadline's quorum extension can see through a revocation: a
+        # re-requested silo delivers at revoke + recovery + retrain.
+        t_close: Optional[float] = None
+        policy_t: Optional[float] = None
+        if deadline is not None:
+            deliveries: Dict[str, float] = {}
+            for cid, a in arrivals.items():
+                if a.delivered_before_revocation():
+                    deliveries[cid] = a.delay_s
+                elif self.on_revocation == "rerequest" and self.max_rerequests >= 1:
+                    deliveries[cid] = (
+                        a.revoke_at_s + self.recovery_delay_s + a.delay_s
+                    )
+            weights = {cid: float(by_id[cid].n_samples) for cid in deliveries}
+            policy_t = float(deadline.deadline_s(round_idx, arrivals))
+            t_close = deadline.effective_deadline(
+                round_idx, arrivals, deliveries, weights
+            )
+
+        agg = self.agg_engine.streaming()
+        events: List[FoldEvent] = []
+        excluded: List[str] = []
+        rerequested: List[str] = []
+        carried_over: List[str] = []
+        carried_in: List[str] = []
+        escalations: List[str] = []
+        server_free = 0.0
+        busy = 0.0
+
+        # Drain last round's stragglers first: their messages are already
+        # on the server (arrival 0 on this round's clock), folded with the
+        # staleness discount.
+        for entry in self.carry.drain():
+            t0 = time.monotonic()
+            w_eff = agg.add_stale(
+                entry.params, entry.weight, entry.age_at(round_idx),
+                self.carry_discount, block=True,
+            )
+            measured = time.monotonic() - t0
+            cost = self.fold_cost_s if self.fold_cost_s is not None else measured
+            start = server_free
+            server_free = start + cost
+            busy += cost
+            carried_in.append(entry.client_id)
+            events.append(
+                FoldEvent(entry.client_id, 0.0, start, server_free,
+                          weight=entry.weight, folded_weight=w_eff,
+                          origin_round=entry.origin_round)
+            )
 
         # Event heap: (effective arrival, seq, client_id, attempt, revoke_at).
         heap: List[Any] = []
         for seq, (cid, a) in enumerate(arrivals.items()):
             heapq.heappush(heap, (a.delay_s, seq, cid, 1, a.revoke_at_s))
         seq = len(heap)
-
-        agg = self.agg_engine.streaming()
-        events: List[FoldEvent] = []
-        excluded: List[str] = []
-        rerequested: List[str] = []
-        server_free = 0.0
-        busy = 0.0
 
         while heap:
             arrival, _, cid, attempt, revoke_at = heapq.heappop(heap)
@@ -346,6 +586,23 @@ class AsyncRoundEngine:
                 continue
 
             res = by_id[cid]
+            if t_close is not None and arrival > t_close:
+                # Missed the (quorum-extended) deadline: park the update
+                # for the next round's discounted average and advance the
+                # silo's miss streak toward §4.4 escalation.
+                self.carry.defer(
+                    CarryEntry(cid, res.params, float(res.n_samples),
+                               origin_round=round_idx,
+                               late_by_s=arrival - t_close)
+                )
+                carried_over.append(cid)
+                streak = self._miss_streak.get(cid, 0) + 1
+                if streak >= self.escalate_after:
+                    escalations.append(cid)
+                    streak = 0
+                self._miss_streak[cid] = streak
+                continue
+
             t0 = time.monotonic()
             agg.add(res.params, res.n_samples, block=True)
             measured = time.monotonic() - t0
@@ -354,9 +611,13 @@ class AsyncRoundEngine:
             end = start + cost
             server_free = end
             busy += cost
+            if t_close is not None:
+                self._miss_streak[cid] = 0
             events.append(
                 FoldEvent(cid, arrival, start, end, attempt=attempt,
-                          revoked_at_s=revoke_at)
+                          revoked_at_s=revoke_at,
+                          weight=float(res.n_samples),
+                          folded_weight=float(res.n_samples))
             )
 
         if not events:
@@ -370,7 +631,32 @@ class AsyncRoundEngine:
         finalize = (time.monotonic() - t0) if self.fold_cost_s is None else 0.0
         busy += finalize
         span = server_free + finalize
+        if t_close is not None and carried_over:
+            # The server cannot close a partial round before T_round — a
+            # missing message could still land until then.
+            span = max(server_free, t_close) + finalize
         last_arrival = max(e.arrival_s for e in events)
+        if t_close is not None and carried_over:
+            # Counterfactual barrier-on-count for THIS round's messages
+            # only: wait for the last deliverable one (the deferred
+            # stragglers included), then fold them all.  Carried-in folds
+            # are excluded — the counterfactual barrier paid those in
+            # their origin round — so each deferred fold is counted
+            # exactly once across a run (here, at the mean measured fold
+            # cost).
+            fold_costs = [e.fold_end_s - e.fold_start_s for e in events]
+            mean_cost = sum(fold_costs) / max(1, len(fold_costs))
+            fresh_busy = finalize + sum(
+                e.fold_end_s - e.fold_start_s for e in events if not e.is_stale
+            )
+            barrier_span = (
+                max(deliveries.values())
+                + fresh_busy + len(carried_over) * mean_cost
+            )
+        else:
+            # A barrier server waits for the last arrival, then does the
+            # same total aggregation work in one go.
+            barrier_span = last_arrival + busy
         return FoldReport(
             params=params,
             events=events,
@@ -380,9 +666,12 @@ class AsyncRoundEngine:
             round_span_s=span,
             busy_s=busy,
             idle_s=max(0.0, span - busy),
-            # A barrier server waits for the last arrival, then does the
-            # same total aggregation work in one go.
-            barrier_span_s=last_arrival + busy,
+            barrier_span_s=barrier_span,
+            deadline_s=t_close,
+            policy_deadline_s=policy_t,
+            carried_over=carried_over,
+            carried_in=carried_in,
+            escalations=escalations,
         )
 
     # ------------------------------------------------------------------
@@ -400,7 +689,10 @@ class AsyncRoundEngine:
         jax.block_until_ready(params)
         agg_s = time.monotonic() - t0
         events = [
-            FoldEvent(r.client_id, 0.0, 0.0, agg_s) for r in results
+            FoldEvent(r.client_id, 0.0, 0.0, agg_s,
+                      weight=float(r.n_samples),
+                      folded_weight=float(r.n_samples))
+            for r in results
         ]
         return FoldReport(
             params=params,
@@ -433,7 +725,15 @@ class AsyncFLServer(FLServer):
     aggregation phase runs through :class:`AsyncRoundEngine` with a
     pluggable :class:`ArrivalSchedule`, so round records carry per-client
     fold timestamps, the server's busy/idle split, and the counterfactual
-    barrier span."""
+    barrier span.
+
+    ``round_deadline`` turns on deadline-driven partial rounds: rounds
+    close at the policy's (quorum-extended) T_round, late silos carry
+    into the next round's discounted average, and each §4.4 escalation
+    (a silo with ``escalate_after`` consecutive misses) invokes
+    ``on_straggler(client_id, round_idx)`` — wire it to
+    ``DynamicScheduler.select_instance`` to reassign the slow silo's VM.
+    """
 
     def __init__(
         self,
@@ -444,6 +744,10 @@ class AsyncFLServer(FLServer):
         recovery_delay_s: float = 0.0,
         max_rerequests: int = 1,
         fold_cost_s: Optional[float] = None,
+        round_deadline: Optional[RoundDeadline] = None,
+        carry_discount: float = 0.5,
+        escalate_after: int = 2,
+        on_straggler: Optional[Any] = None,
         **kwargs,
     ) -> None:
         super().__init__(clients, initial_params, **kwargs)
@@ -454,10 +758,22 @@ class AsyncFLServer(FLServer):
             recovery_delay_s=recovery_delay_s,
             max_rerequests=max_rerequests,
             fold_cost_s=fold_cost_s,
+            deadline=round_deadline,
+            carry_discount=carry_discount,
+            escalate_after=escalate_after,
         )
+        self.on_straggler = on_straggler
         self.fold_reports: List[FoldReport] = []
+
+    @property
+    def pending_carryover(self) -> CarryOverBuffer:
+        """Late updates parked for the next round (empty without deadlines)."""
+        return self._round_engine.carry
 
     def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]) -> FoldReport:
         report = self._round_engine.fold_round(round_idx, results, self.schedule)
         self.fold_reports.append(report)
+        if self.on_straggler is not None:
+            for cid in report.escalations:
+                self.on_straggler(cid, round_idx)
         return report

@@ -53,6 +53,13 @@ class RoundRecord:
     fold_times_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     round_span_s: float = 0.0
     idle_s: float = 0.0
+    # Deadline-driven partial rounds (async_server.RoundDeadline): the
+    # effective (quorum-extended) close time, the silos whose late update
+    # was parked for the next round, and the stale silos folded into this
+    # round's average with their staleness discount applied.
+    deadline_s: Optional[float] = None
+    carried_over: List[str] = dataclasses.field(default_factory=list)
+    carried_in: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -155,6 +162,9 @@ class FLServer:
             fold_times_s=fold.fold_times,
             round_span_s=fold.round_span_s,
             idle_s=fold.idle_s,
+            deadline_s=fold.deadline_s,
+            carried_over=list(fold.carried_over),
+            carried_in=list(fold.carried_in),
         )
 
     # ------------------------------------------------------------------

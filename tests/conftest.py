@@ -1,0 +1,193 @@
+"""Shared fixture layer for the federated + core test suites.
+
+The tiny-pytree builders, stub clients, tree-comparison helper, and toy
+cloud-environment/application builders used to be copy-pasted across
+test_async_server.py, test_agg_engine.py, test_core_scheduler.py, and
+test_simulator.py; they live here once so every suite builds scenarios
+the same way.
+
+Plain helpers are imported directly (``from conftest import ...`` — the
+tests directory is on sys.path under pytest's rootdir handling); pytest
+fixtures (`cloudlab_env`, `til_setup`) are injected by name as usual.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClientSpec,
+    CloudEnvironment,
+    CostModel,
+    FLApplication,
+    InitialMapping,
+    MessageSizes,
+    Provider,
+    Region,
+    VMType,
+    cloudlab_environment,
+    til_application,
+)
+from repro.federated.aggregation import fedavg
+from repro.federated.client import ClientResult, EvalResult
+
+
+# ---------------------------------------------------------------------------
+# Tiny pytrees / client results
+# ---------------------------------------------------------------------------
+
+def random_tree(rng, shapes, dtype=jnp.float32):
+    """One flat dict pytree with the given leaf shapes."""
+    return {
+        f"leaf{i}": jnp.asarray(rng.standard_normal(s), dtype)
+        for i, s in enumerate(shapes)
+    }
+
+
+def make_results(n_clients, shapes=((3, 5), (7,)), dtype=jnp.float32, seed=0,
+                 weights=None):
+    """N structurally-identical ClientResults with distinct params/weights."""
+    rng = np.random.default_rng(seed)
+    if weights is None:
+        weights = [10 * (i + 1) for i in range(n_clients)]
+    return [
+        ClientResult(f"c{i}", random_tree(rng, shapes, dtype), int(w), 0.0)
+        for i, w in enumerate(weights)
+    ]
+
+
+def ragged_trees(n_clients, dtype=jnp.float32, seed=0):
+    """Structurally-identical trees with ragged/nested leaf shapes."""
+    rng = np.random.default_rng(seed)
+
+    def one():
+        return {
+            "emb": jnp.asarray(rng.standard_normal((7, 33)), dtype),
+            "blocks": [
+                {"w": jnp.asarray(rng.standard_normal((5, 2, 9)), dtype),
+                 "b": jnp.asarray(rng.standard_normal((11,)), dtype)}
+                for _ in range(2)
+            ],
+            "head": jnp.asarray(rng.standard_normal((123,)), dtype),
+        }
+
+    trees = [one() for _ in range(n_clients)]
+    weights = [float(rng.uniform(0.5, 5.0)) for _ in range(n_clients)]
+    return trees, weights
+
+
+def batch_params(results):
+    """Seed-oracle FedAvg of a list of ClientResults."""
+    return fedavg([r.params for r in results], [r.n_samples for r in results])
+
+
+def assert_trees_close(got, want, dtype=jnp.float32):
+    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=atol, rtol=atol,
+        )
+
+
+class StubClient:
+    """Duck-typed FLClient returning fixed params (no training)."""
+
+    def __init__(self, result: ClientResult) -> None:
+        self.client_id = result.client_id
+        self._result = result
+
+    @classmethod
+    def from_params(cls, client_id, params, n_samples):
+        return cls(ClientResult(client_id, params, n_samples, 0.0))
+
+    def train(self, global_params):
+        return self._result
+
+    def evaluate(self, aggregated_params):
+        return EvalResult(self.client_id, {"loss": 1.0},
+                          self._result.n_samples, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Toy cloud environments / applications (cost-model + scheduler suites)
+# ---------------------------------------------------------------------------
+
+def make_toy_env(n_vms=2, vm_regions=None, od_prices=None, inst_slowdowns=None,
+                 comm_slowdowns=None, vcpus=None, gpus=None):
+    """Two-provider/two-region environment with n_vms configurable types.
+
+    Defaults give a deterministic tiny environment; every per-VM knob
+    accepts a list indexed like the VM ids (``vm0..vm{n-1}``).
+    """
+    providers = [Provider("p0", 0.01), Provider("p1", 0.02)]
+    regions = [Region("r0", "p0"), Region("r1", "p1")]
+    vm_regions = vm_regions or ["r0" if i % 2 == 0 else "r1" for i in range(n_vms)]
+    od_prices = od_prices or [1.0 + i for i in range(n_vms)]
+    vcpus = vcpus or [4] * n_vms
+    gpus = gpus or [0] * n_vms
+    vms = [
+        VMType(
+            vm_id=f"vm{i}",
+            name=f"t{i}",
+            provider="p0" if vm_regions[i] == "r0" else "p1",
+            region=vm_regions[i],
+            vcpus=vcpus[i],
+            gpus=gpus[i],
+            ram_gb=16,
+            cost_on_demand_hour=od_prices[i],
+            cost_spot_hour=od_prices[i] * 0.3,
+        )
+        for i in range(n_vms)
+    ]
+    env = CloudEnvironment(providers, regions, vms)
+    env.sl_inst = {v.vm_id: 1.0 for v in vms}
+    if inst_slowdowns is not None:
+        env.sl_inst = {f"vm{i}": s for i, s in enumerate(inst_slowdowns)}
+    env.sl_comm = comm_slowdowns or {
+        ("r0", "r0"): 1.0,
+        ("r0", "r1"): 2.0,
+        ("r1", "r1"): 1.0,
+    }
+    return env
+
+
+def make_toy_app(n_clients=2, train_bls=None, test_bls=None,
+                 train_comm_bl=5.0, test_comm_bl=1.0, aggreg_bl=1.0,
+                 n_rounds=5):
+    """Tiny FLApplication matching `make_toy_env`'s scale."""
+    train_bls = train_bls or [100.0] * n_clients
+    test_bls = test_bls or [10.0] * n_clients
+    clients = [
+        ClientSpec(f"c{i}", train_bl=train_bls[i], test_bl=test_bls[i])
+        for i in range(n_clients)
+    ]
+    return FLApplication(
+        name="toy",
+        clients=clients,
+        messages=MessageSizes(0.1, 0.1, 0.1, 1e-6),
+        n_rounds=n_rounds,
+        train_comm_bl=train_comm_bl,
+        test_comm_bl=test_comm_bl,
+        aggreg_bl=aggreg_bl,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def cloudlab_env():
+    """The paper's CloudLab testbed environment (read-only per session)."""
+    return cloudlab_environment()
+
+
+@pytest.fixture
+def til_setup(cloudlab_env):
+    """(env, app, cost_model, solved placement) for the TIL application."""
+    app = til_application()
+    cm = CostModel(cloudlab_env, app, 0.5)
+    placement = InitialMapping(cloudlab_env, app, alpha=0.5).solve().placement
+    return cloudlab_env, app, cm, placement

@@ -1,6 +1,7 @@
 """Fused aggregation engine: kernel-vs-oracle equivalence (dtypes, ragged
 leaves, BLOCK padding, degenerate weights), donation/no-recompile
-behavior, chunked + streaming modes, and the FLServer/pod hot-path
+behavior, chunked + streaming modes, the carry-over buffer / stale folds
+(deadline-driven partial rounds), and the FLServer/pod hot-path
 rewiring."""
 import jax
 import jax.numpy as jnp
@@ -12,8 +13,11 @@ try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
 except ModuleNotFoundError:  # property tests skip cleanly without it
     from _hypothesis_stub import given, settings, st
 
+from conftest import StubClient, assert_trees_close, ragged_trees
 from repro.federated.agg_engine import (
     AggregationEngine,
+    CarryEntry,
+    CarryOverBuffer,
     StreamingAggregator,
     fused_stacked_tree_reduce,
     make_measured_aggreg_fn,
@@ -24,34 +28,6 @@ from repro.kernels import ops, ref
 from repro.kernels.fedavg_reduce import BLOCK
 
 
-def _ragged_trees(n_clients, dtype=jnp.float32, seed=0):
-    """Structurally-identical trees with ragged/nested leaf shapes."""
-    rng = np.random.default_rng(seed)
-    def one():
-        return {
-            "emb": jnp.asarray(rng.standard_normal((7, 33)), dtype),
-            "blocks": [
-                {"w": jnp.asarray(rng.standard_normal((5, 2, 9)), dtype),
-                 "b": jnp.asarray(rng.standard_normal((11,)), dtype)}
-                for _ in range(2)
-            ],
-            "head": jnp.asarray(rng.standard_normal((123,)), dtype),
-        }
-    trees = [one() for _ in range(n_clients)]
-    weights = [float(rng.uniform(0.5, 5.0)) for _ in range(n_clients)]
-    return trees, weights
-
-
-def _assert_trees_close(got, want, dtype=jnp.float32):
-    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
-    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
-        assert a.dtype == b.dtype and a.shape == b.shape
-        np.testing.assert_allclose(
-            np.asarray(a, np.float32), np.asarray(b, np.float32),
-            atol=atol, rtol=atol,
-        )
-
-
 # ---------------------------------------------------------------------------
 # engine vs oracle (tree path)
 # ---------------------------------------------------------------------------
@@ -59,11 +35,11 @@ def _assert_trees_close(got, want, dtype=jnp.float32):
 @pytest.mark.parametrize("n_clients", [2, 5])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_engine_matches_oracle(n_clients, dtype):
-    trees, weights = _ragged_trees(n_clients, dtype)
+    trees, weights = ragged_trees(n_clients, dtype)
     engine = AggregationEngine()
     got = engine.aggregate(trees, weights)
     want = fedavg(trees, weights)
-    _assert_trees_close(got, want, dtype)
+    assert_trees_close(got, want, dtype)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -72,39 +48,39 @@ def test_engine_pallas_path_matches_oracle(dtype):
 
     The ragged tree's total size is far from a BLOCK multiple, so this
     also exercises the kernel's non-divisible padding."""
-    trees, weights = _ragged_trees(4, dtype)
+    trees, weights = ragged_trees(4, dtype)
     total = sum(l.size for l in jax.tree.leaves(trees[0]))
     assert total % BLOCK != 0
     engine = AggregationEngine(use_pallas=True, interpret=True)
     got = engine.aggregate(trees, weights)
     want = fedavg(trees, weights)
     # the kernel path accumulates in fp32 and restores per-leaf dtypes
-    _assert_trees_close(got, want, dtype)
+    assert_trees_close(got, want, dtype)
 
 
 def test_engine_single_client_identity():
-    trees, _ = _ragged_trees(1)
+    trees, _ = ragged_trees(1)
     engine = AggregationEngine()
     got = engine.aggregate(trees, [42.0])
-    _assert_trees_close(got, trees[0])
+    assert_trees_close(got, trees[0])
 
 
 def test_engine_zero_weight_client_ignored():
-    trees, _ = _ragged_trees(3)
+    trees, _ = ragged_trees(3)
     engine = AggregationEngine()
     got = engine.aggregate(trees, [1.0, 0.0, 1.0])
     want = fedavg([trees[0], trees[2]], [1.0, 1.0])
-    _assert_trees_close(got, want)
+    assert_trees_close(got, want)
 
 
 def test_engine_all_zero_weights_raise():
-    trees, _ = _ragged_trees(2)
+    trees, _ = ragged_trees(2)
     with pytest.raises(ValueError):
         AggregationEngine().aggregate(trees, [0.0, 0.0])
 
 
 def test_engine_weight_count_mismatch_raises():
-    trees, _ = _ragged_trees(2)
+    trees, _ = ragged_trees(2)
     with pytest.raises(ValueError):
         AggregationEngine().aggregate(trees, [1.0, 1.0, 1.0])
 
@@ -116,14 +92,14 @@ def test_engine_weight_count_mismatch_raises():
 def test_engine_no_recompile_across_rounds():
     engine = AggregationEngine()
     for round_idx in range(3):
-        trees, weights = _ragged_trees(3, seed=round_idx)
+        trees, weights = ragged_trees(3, seed=round_idx)
         engine.aggregate(trees, weights)
     assert engine.stats.n_calls == 3
     assert engine.stats.n_traces == 1  # jit cache hit on rounds 2..3
 
 
 def test_plan_cached_per_structure():
-    trees, _ = _ragged_trees(2)
+    trees, _ = ragged_trees(2)
     p1 = plan_for(trees[0])
     p2 = plan_for(trees[1])
     assert p1 is p2
@@ -131,17 +107,17 @@ def test_plan_cached_per_structure():
 
 
 def test_plan_flatten_roundtrip():
-    trees, _ = _ragged_trees(1, dtype=jnp.bfloat16)
+    trees, _ = ragged_trees(1, dtype=jnp.bfloat16)
     plan = plan_for(trees[0])
     flat = plan.flatten(trees[0])
     assert flat.dtype == jnp.float32 and flat.shape == (plan.total_elems,)
-    _assert_trees_close(plan.unflatten(flat), trees[0], jnp.bfloat16)
+    assert_trees_close(plan.unflatten(flat), trees[0], jnp.bfloat16)
 
 
 def test_streaming_accumulator_donates_in_place():
     """The O(L) accumulator is donated: the previous buffer is consumed
     by each fold (XLA reuses it instead of allocating a second model)."""
-    trees, weights = _ragged_trees(3)
+    trees, weights = ragged_trees(3)
     agg = StreamingAggregator()
     agg.add(trees[0], weights[0])
     first_acc_leaf = jax.tree.leaves(agg._acc)[0]
@@ -193,7 +169,7 @@ def test_pallas_path_no_recompile_across_rounds():
     """n_traces also tracks the flatten-once/Pallas path (TPU default)."""
     engine = AggregationEngine(use_pallas=True, interpret=True)
     for round_idx in range(3):
-        trees, weights = _ragged_trees(3, seed=round_idx)
+        trees, weights = ragged_trees(3, seed=round_idx)
         engine.aggregate(trees, weights)
     assert engine.stats.n_calls == 3
     assert engine.stats.n_traces == 1
@@ -209,23 +185,23 @@ def test_reduce_flat_rejects_non_2d():
 # ---------------------------------------------------------------------------
 
 def test_streaming_matches_batch():
-    trees, weights = _ragged_trees(4)
+    trees, weights = ragged_trees(4)
     engine = AggregationEngine()
     agg = engine.streaming()
     for t, w in zip(trees, weights):  # clients land one at a time
         agg.add(t, w)
     got = agg.result()
     want = fedavg(trees, weights)
-    _assert_trees_close(got, want)
+    assert_trees_close(got, want)
     assert agg.n_clients == 4
 
 
 def test_streaming_bf16_restores_dtype():
-    trees, weights = _ragged_trees(3, dtype=jnp.bfloat16)
+    trees, weights = ragged_trees(3, dtype=jnp.bfloat16)
     agg = StreamingAggregator()
     for t, w in zip(trees, weights):
         agg.add(t, w)
-    _assert_trees_close(agg.result(), fedavg(trees, weights), jnp.bfloat16)
+    assert_trees_close(agg.result(), fedavg(trees, weights), jnp.bfloat16)
 
 
 @st.composite
@@ -261,26 +237,86 @@ def test_streaming_any_fold_order_matches_batch(case):
         agg.add(trees[i], weights[i])
     got = agg.result()
     want = AggregationEngine().aggregate(trees, weights)
-    _assert_trees_close(got, want, dtype)
+    assert_trees_close(got, want, dtype)
 
 
 def test_streaming_blocking_add_matches():
     """block=True (async engine's measured fold) changes timing only."""
-    trees, weights = _ragged_trees(3)
+    trees, weights = ragged_trees(3)
     agg = StreamingAggregator()
     for t, w in zip(trees, weights):
         agg.add(t, w, block=True)
-    _assert_trees_close(agg.result(), fedavg(trees, weights))
+    assert_trees_close(agg.result(), fedavg(trees, weights))
 
 
 def test_streaming_empty_or_zero_raises():
     agg = StreamingAggregator()
     with pytest.raises(ValueError):
         agg.result()
-    trees, _ = _ragged_trees(1)
+    trees, _ = ragged_trees(1)
     agg.add(trees[0], 0.0)
     with pytest.raises(ValueError):
         agg.result()
+
+
+# ---------------------------------------------------------------------------
+# carry-over buffer + stale folds (deadline-driven partial rounds)
+# ---------------------------------------------------------------------------
+
+def test_carry_buffer_defer_drain_accounting():
+    trees, _ = ragged_trees(2)
+    buf = CarryOverBuffer()
+    assert not buf and len(buf) == 0 and buf.pending_weight() == 0.0
+    buf.defer(CarryEntry("c0", trees[0], 30.0, origin_round=1, late_by_s=0.5))
+    buf.defer(CarryEntry("c1", trees[1], 20.0, origin_round=2))
+    assert buf and len(buf) == 2
+    assert buf.clients() == ["c0", "c1"]
+    assert buf.pending_weight() == pytest.approx(50.0)
+    entries = buf.drain()
+    assert [e.client_id for e in entries] == ["c0", "c1"]
+    assert not buf and buf.drain() == []  # drained exactly once
+
+
+def test_add_stale_applies_staleness_discount():
+    """A stale fold enters the average at weight * discount**age and is
+    otherwise a normal weighted contribution."""
+    trees, _ = ragged_trees(3)
+    agg = StreamingAggregator()
+    agg.add(trees[0], 10.0)
+    agg.add(trees[1], 20.0)
+    w_eff = agg.add_stale(trees[2], 40.0, stale_rounds=2, discount=0.5)
+    assert w_eff == pytest.approx(10.0)
+    want = fedavg(trees, [10.0, 20.0, 10.0])
+    assert_trees_close(agg.result(), want)
+
+
+def test_add_stale_validates_inputs():
+    trees, _ = ragged_trees(1)
+    agg = StreamingAggregator()
+    with pytest.raises(ValueError):
+        agg.add_stale(trees[0], 1.0, stale_rounds=0, discount=0.5)
+    with pytest.raises(ValueError):
+        agg.add_stale(trees[0], 1.0, stale_rounds=1, discount=1.5)
+
+
+def test_fold_carry_drains_buffer_with_per_entry_age():
+    """fold_carry folds every parked entry with its own age-derived
+    discount and empties the buffer (no double-fold on a later call)."""
+    trees, _ = ragged_trees(3)
+    buf = CarryOverBuffer()
+    buf.defer(CarryEntry("c1", trees[1], 8.0, origin_round=2))   # 1 round late
+    buf.defer(CarryEntry("c2", trees[2], 8.0, origin_round=1))   # 2 rounds late
+    agg = StreamingAggregator()
+    agg.add(trees[0], 10.0)
+    folded = agg.fold_carry(buf, round_idx=3, discount=0.5)
+    assert [(e.client_id, w) for e, w in folded] == [("c1", 4.0), ("c2", 2.0)]
+    assert not buf
+    want = fedavg(trees, [10.0, 4.0, 2.0])
+    assert_trees_close(agg.result(), want)
+    # a second fold_carry is a no-op on the drained buffer
+    agg2 = StreamingAggregator()
+    agg2.add(trees[0], 1.0)
+    assert agg2.fold_carry(buf, round_idx=4, discount=0.5) == []
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +342,7 @@ def test_fedavg_stacked_fused_matches_per_leaf(dtype):
         wf = wn.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
         return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
     want = jax.tree.map(per_leaf, stacked)
-    _assert_trees_close(got, want, dtype)
+    assert_trees_close(got, want, dtype)
 
 
 def test_fused_stacked_tree_reduce_traceable_under_jit():
@@ -322,28 +358,11 @@ def test_fused_stacked_tree_reduce_traceable_under_jit():
 # FLServer hot-path rewiring
 # ---------------------------------------------------------------------------
 
-class _StubClient:
-    """Duck-typed FLClient returning fixed params (no training)."""
-
-    def __init__(self, client_id, params, n_samples):
-        self.client_id = client_id
-        self._params = params
-        self._n = n_samples
-
-    def train(self, global_params):
-        from repro.federated.client import ClientResult
-        return ClientResult(self.client_id, self._params, self._n, 0.0)
-
-    def evaluate(self, aggregated_params):
-        from repro.federated.client import EvalResult
-        return EvalResult(self.client_id, {"loss": 1.0}, self._n, 0.0)
-
-
 def test_server_round_uses_fused_engine():
     from repro.federated.server import FLServer
 
-    trees, _ = _ragged_trees(3)
-    clients = [_StubClient(f"c{i}", t, n) for i, (t, n) in
+    trees, _ = ragged_trees(3)
+    clients = [StubClient.from_params(f"c{i}", t, n) for i, (t, n) in
                enumerate(zip(trees, [10, 20, 30]))]
     server = FLServer(clients, trees[0])
     res = server.run(2)
@@ -352,7 +371,7 @@ def test_server_round_uses_fused_engine():
     assert server.agg_engine.stats.n_traces == 1
     assert res.rounds[0].agg_time_s >= 0.0
     want = fedavg(trees, [10.0, 20.0, 30.0])
-    _assert_trees_close(res.final_params, want)
+    assert_trees_close(res.final_params, want)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,10 @@
 """Async round engine: streaming-fold vs barrier equivalence (hypothesis
 property over arrival orderings + deterministic permutation fallback),
 virtual-clock span/idle accounting, §4.3 revocation fault injection
-(re-request / exclude), and server recovery from client-only checkpoints."""
+(re-request / exclude), deadline-driven partial rounds (T_round folding
+with straggler carry-over, quorum extension, §4.4 escalation into the
+DynamicScheduler), the weight-conservation property of carry-over, and
+server recovery from client-only checkpoints."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,70 +15,30 @@ try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
 except ModuleNotFoundError:  # property tests skip cleanly without it
     from _hypothesis_stub import given, settings, st
 
+from conftest import (
+    StubClient,
+    assert_trees_close,
+    batch_params,
+    make_results,
+    make_toy_app,
+    make_toy_env,
+)
+from repro.core import Assignment, CostModel, DynamicScheduler, SERVER
 from repro.core.revocation import RevocationModel
 from repro.federated import (
     AggregationEngine,
     AsyncFLServer,
     AsyncRoundEngine,
-    ClientArrival,
+    CostModelDeadline,
     DeterministicSchedule,
+    FixedDeadline,
     FLServer,
     HeavyTailSchedule,
     InstantSchedule,
+    QuantileDeadline,
     RevocationInjector,
     fedavg,
 )
-from repro.federated.client import ClientResult, EvalResult
-
-
-# ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
-
-def _random_tree(rng, shapes, dtype):
-    return {
-        f"leaf{i}": jnp.asarray(rng.standard_normal(s), dtype)
-        for i, s in enumerate(shapes)
-    }
-
-
-def _results(n_clients, shapes=((3, 5), (7,)), dtype=jnp.float32, seed=0,
-             weights=None):
-    rng = np.random.default_rng(seed)
-    if weights is None:
-        weights = [10 * (i + 1) for i in range(n_clients)]
-    return [
-        ClientResult(f"c{i}", _random_tree(rng, shapes, dtype), int(w), 0.0)
-        for i, w in enumerate(weights)
-    ]
-
-
-def _batch_params(results):
-    return fedavg([r.params for r in results], [r.n_samples for r in results])
-
-
-def _assert_close(got, want, dtype=jnp.float32):
-    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
-    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
-        assert a.dtype == b.dtype and a.shape == b.shape
-        np.testing.assert_allclose(
-            np.asarray(a, np.float32), np.asarray(b, np.float32),
-            atol=atol, rtol=atol,
-        )
-
-
-class _StubClient:
-    """Duck-typed FLClient returning fixed params (no training)."""
-
-    def __init__(self, result: ClientResult) -> None:
-        self.client_id = result.client_id
-        self._result = result
-
-    def train(self, global_params):
-        return self._result
-
-    def evaluate(self, aggregated_params):
-        return EvalResult(self.client_id, {"loss": 1.0}, self._result.n_samples, 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -105,8 +68,8 @@ def test_streaming_fold_matches_barrier_any_arrival_order(scenario):
     barrier FLServer on identical client results, for every arrival
     permutation (max abs err <= 1e-5 in fp32)."""
     n, shapes, dtype, seed, weights, delays = scenario
-    results = _results(n, shapes, dtype, seed, weights)
-    clients = [_StubClient(r) for r in results]
+    results = make_results(n, shapes, dtype, seed, weights)
+    clients = [StubClient(r) for r in results]
     schedule = DeterministicSchedule(
         {r.client_id: d for r, d in zip(results, delays)}
     )
@@ -115,7 +78,7 @@ def test_streaming_fold_matches_barrier_any_arrival_order(scenario):
     streaming = AsyncFLServer(
         clients, results[0].params, schedule=schedule, fold_cost_s=0.1
     ).run(1)
-    _assert_close(streaming.final_params, barrier.final_params, dtype)
+    assert_trees_close(streaming.final_params, barrier.final_params, dtype)
 
 
 @settings(max_examples=25, deadline=None)
@@ -124,7 +87,7 @@ def test_engine_fold_matches_batch_engine(scenario):
     """Engine-level property: fold_round over any arrival permutation ==
     AggregationEngine.aggregate on the same results."""
     n, shapes, dtype, seed, weights, delays = scenario
-    results = _results(n, shapes, dtype, seed, weights)
+    results = make_results(n, shapes, dtype, seed, weights)
     schedule = DeterministicSchedule(
         {r.client_id: d for r, d in zip(results, delays)}
     )
@@ -132,7 +95,7 @@ def test_engine_fold_matches_batch_engine(scenario):
     want = AggregationEngine().aggregate(
         [r.params for r in results], [r.n_samples for r in results]
     )
-    _assert_close(report.params, want, dtype)
+    assert_trees_close(report.params, want, dtype)
 
 
 # Deterministic fallback (always runs, even without hypothesis): seeded
@@ -142,13 +105,13 @@ def test_engine_fold_matches_batch_engine(scenario):
 def test_fold_permutation_fallback(seed, dtype):
     rng = np.random.default_rng(seed)
     n = int(rng.integers(2, 7))
-    results = _results(n, dtype=dtype, seed=seed)
+    results = make_results(n, dtype=dtype, seed=seed)
     delays = rng.permutation(n).astype(float)
     schedule = DeterministicSchedule(
         {r.client_id: float(d) for r, d in zip(results, delays)}
     )
     report = AsyncRoundEngine(fold_cost_s=0.1).fold_round(1, results, schedule)
-    _assert_close(report.params, _batch_params(results), dtype)
+    assert_trees_close(report.params, batch_params(results), dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +121,7 @@ def test_fold_permutation_fallback(seed, dtype):
 def test_straggler_folds_hide_behind_arrival():
     """1 straggler in 4: the streaming span is the straggler's arrival
     plus ONE fold; the barrier span pays all folds after it."""
-    results = _results(4)
+    results = make_results(4)
     schedule = DeterministicSchedule({"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0})
     report = AsyncRoundEngine(fold_cost_s=0.5).fold_round(1, results, schedule)
     assert report.round_span_s == pytest.approx(5.5)
@@ -171,7 +134,7 @@ def test_straggler_folds_hide_behind_arrival():
 
 
 def test_fold_events_ordered_and_complete():
-    results = _results(5, seed=3)
+    results = make_results(5, seed=3)
     schedule = HeavyTailSchedule(base_s=1.0, straggler_ids=("c2",), seed=7)
     report = AsyncRoundEngine(fold_cost_s=0.01).fold_round(1, results, schedule)
     ends = [e.fold_end_s for e in report.events]
@@ -187,7 +150,7 @@ def test_degenerate_schedule_uses_fused_batch_reduce():
     round_engine = AsyncRoundEngine(engine)
     for r in range(3):
         report = round_engine.fold_round(
-            r + 1, _results(3, seed=r), InstantSchedule()
+            r + 1, make_results(3, seed=r), InstantSchedule()
         )
         assert report.idle_s == 0.0 and not report.excluded
     assert engine.stats.n_calls == 3
@@ -196,26 +159,29 @@ def test_degenerate_schedule_uses_fused_batch_reduce():
 
 def test_sync_server_routes_through_round_engine():
     """FLServer's barrier path is the degenerate schedule of the same
-    engine; fold timestamps land in RoundRecord."""
-    results = _results(3)
-    server = FLServer([_StubClient(r) for r in results], results[0].params)
+    engine; fold timestamps land in RoundRecord (deadline fields stay at
+    their no-deadline defaults)."""
+    results = make_results(3)
+    server = FLServer([StubClient(r) for r in results], results[0].params)
     run = server.run(2)
-    _assert_close(run.final_params, _batch_params(results))
+    assert_trees_close(run.final_params, batch_params(results))
     rec = run.rounds[0]
     assert set(rec.fold_times_s) == {r.client_id for r in results}
     assert rec.round_span_s > 0.0 and rec.idle_s == 0.0
+    assert rec.deadline_s is None
+    assert rec.carried_over == [] and rec.carried_in == []
     assert server.agg_engine.stats.n_calls == 2  # fused batch path kept
 
 
 def test_async_server_threads_fold_times_into_records():
-    results = _results(3)
+    results = make_results(3)
     server = AsyncFLServer(
-        [_StubClient(r) for r in results], results[0].params,
+        [StubClient(r) for r in results], results[0].params,
         schedule=DeterministicSchedule({"c0": 1.0, "c1": 3.0, "c2": 2.0}),
         fold_cost_s=0.25,
     )
     run = server.run(2)
-    _assert_close(run.final_params, _batch_params(results))
+    assert_trees_close(run.final_params, batch_params(results))
     rec = run.rounds[0]
     assert rec.fold_times_s == {
         "c0": pytest.approx(1.25), "c2": pytest.approx(2.25),
@@ -227,13 +193,279 @@ def test_async_server_threads_fold_times_into_records():
 
 
 # ---------------------------------------------------------------------------
+# deadline-driven partial rounds (T_round folding + carry-over)
+# ---------------------------------------------------------------------------
+
+def _straggler_setup(deadline, **engine_kwargs):
+    """4 silos, c3 5x slow; engine with the given deadline policy."""
+    results = make_results(4)
+    schedule = DeterministicSchedule({"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0})
+    engine = AsyncRoundEngine(fold_cost_s=0.1, deadline=deadline, **engine_kwargs)
+    return results, schedule, engine
+
+
+def test_fixed_deadline_closes_partial_round_and_carries_straggler():
+    """Round 1 closes at T_round=2 with the three on-time silos; the
+    straggler's update is parked, not dropped, and the round cannot close
+    before the deadline (a message could still land until then)."""
+    results, schedule, engine = _straggler_setup(FixedDeadline(t_round_s=2.0))
+    report = engine.fold_round(1, results, schedule)
+    assert report.carried_over == ["c3"] and report.carried_in == []
+    assert report.deadline_s == pytest.approx(2.0)
+    assert report.policy_deadline_s == pytest.approx(2.0)
+    # folds drained by 1.3 but the round holds until T_round
+    assert report.round_span_s == pytest.approx(2.0)
+    assert "c3" not in report.fold_times
+    assert_trees_close(report.params, batch_params(results[:3]))
+    assert engine.carry.clients() == ["c3"]
+    assert engine.carry.pending_weight() == pytest.approx(40.0)
+    # counterfactual barrier-on-count: wait for c3 (5.0), fold the three
+    # fresh messages (0.3) plus the deferred one at the mean fold cost
+    assert report.barrier_span_s == pytest.approx(5.0 + 0.3 + 0.1)
+
+
+def test_carried_update_lands_discounted_next_round():
+    """Round 2 drains the buffer first: c3's round-1 update enters round
+    2's average at weight * discount (one round late), alongside the
+    fresh on-time silos — no silo's contribution is silently dropped."""
+    results, schedule, engine = _straggler_setup(
+        FixedDeadline(t_round_s=2.0), carry_discount=0.5
+    )
+    engine.fold_round(1, results, schedule)
+    report = engine.fold_round(2, results, schedule)
+    assert report.carried_in == ["c3"]
+    assert report.carried_over == ["c3"]  # round 2's fresh c3 misses again
+    stale = [e for e in report.events if e.is_stale]
+    assert len(stale) == 1 and stale[0].client_id == "c3"
+    assert stale[0].weight == pytest.approx(40.0)
+    assert stale[0].folded_weight == pytest.approx(20.0)
+    assert stale[0].origin_round == 1
+    # carried fold happens at round start (the message is already here)
+    assert stale[0].arrival_s == 0.0
+    want = fedavg(
+        [results[3].params] + [r.params for r in results[:3]],
+        [20.0, 10.0, 20.0, 30.0],
+    )
+    assert_trees_close(report.params, want)
+
+
+def test_deadline_closes_early_when_everyone_arrives():
+    """T_round is an upper bound: with all messages in before it, the
+    round closes at the fold drain (barrier-on-count reached first)."""
+    results, schedule, engine = _straggler_setup(FixedDeadline(t_round_s=50.0))
+    report = engine.fold_round(1, results, schedule)
+    assert report.carried_over == []
+    assert report.round_span_s == pytest.approx(5.1)  # straggler + one fold
+    assert_trees_close(report.params, batch_params(results))
+
+
+def test_quorum_min_clients_extends_deadline():
+    """A deadline below the quorum extends to the earliest arrival that
+    satisfies it instead of closing an under-populated round."""
+    results, schedule, engine = _straggler_setup(
+        QuantileDeadline(q=0.5, min_clients=4)
+    )
+    report = engine.fold_round(1, results, schedule)
+    # quantile of {1,1,1,5} is < 5; min_clients=4 pulls it to c3's arrival
+    assert report.deadline_s == pytest.approx(5.0)
+    assert report.policy_deadline_s < 5.0
+    assert report.carried_over == []
+    assert_trees_close(report.params, batch_params(results))
+
+
+def test_quorum_min_weight_frac_extends_deadline():
+    """Example-weight quorum: c3 carries 40% of the round's weight, so a
+    min_weight_frac above 60% cannot close without it."""
+    results, schedule, engine = _straggler_setup(
+        FixedDeadline(t_round_s=2.0, min_weight_frac=0.7)
+    )
+    report = engine.fold_round(1, results, schedule)
+    assert report.deadline_s == pytest.approx(5.0)
+    assert report.carried_over == []
+    assert_trees_close(report.params, batch_params(results))
+
+
+def test_cost_model_deadline_uses_t_max():
+    env = make_toy_env()
+    app = make_toy_app()
+    cm = CostModel(env, app, 0.5)
+    policy = CostModelDeadline(cost_model=cm, frac=0.5)
+    assert policy.deadline_s(1, {}) == pytest.approx(0.5 * cm.t_max())
+    assert cm.deadline_from_t_max(0.5) == pytest.approx(0.5 * cm.t_max())
+    with pytest.raises(ValueError):
+        CostModelDeadline(cost_model=cm, frac=0.0).deadline_s(1, {})
+
+
+def test_deadline_policy_validates_quorum_fields():
+    """A zero-quorum deadline could park the whole cohort with nothing
+    left to aggregate; the policy rejects it at construction."""
+    with pytest.raises(ValueError):
+        FixedDeadline(t_round_s=1.0, min_clients=0)
+    with pytest.raises(ValueError):
+        QuantileDeadline(q=0.5, min_weight_frac=1.5)
+    with pytest.raises(ValueError):
+        AsyncRoundEngine(carry_discount=2.0)
+    with pytest.raises(ValueError):
+        AsyncRoundEngine(escalate_after=0)
+
+
+def test_repeated_misses_escalate_to_dynamic_scheduler():
+    """§4.4: two consecutive deadline misses mark the silo for escalation,
+    and AsyncFLServer's on_straggler hook routes it into
+    DynamicScheduler.select_instance for a replacement VM."""
+    env = make_toy_env(n_vms=3, inst_slowdowns=[1.0, 1.0, 5.0])
+    app = make_toy_app(n_clients=3)
+    cm = CostModel(env, app, 0.5)
+    scheduler = DynamicScheduler(cm)
+    placement = {SERVER: Assignment("vm0"),
+                 "c0": Assignment("vm0"), "c1": Assignment("vm0"),
+                 "c2": Assignment("vm2")}
+    decisions = []
+
+    def on_straggler(client_id, round_idx):
+        decision = scheduler.select_instance(
+            client_id, placement, placement[client_id].vm_id,
+            remove_revoked=True, now_s=float(round_idx),
+        )
+        decisions.append((client_id, round_idx, decision))
+
+    results = make_results(3)
+    server = AsyncFLServer(
+        [StubClient(r) for r in results], results[0].params,
+        schedule=DeterministicSchedule({"c0": 1.0, "c1": 1.0, "c2": 9.0}),
+        fold_cost_s=0.1,
+        round_deadline=FixedDeadline(t_round_s=2.0),
+        escalate_after=2,
+        on_straggler=on_straggler,
+    )
+    run = server.run(3)
+    # misses in rounds 1 and 2 -> escalation fires exactly once, in round 2
+    assert server.fold_reports[0].escalations == []
+    assert server.fold_reports[1].escalations == ["c2"]
+    assert server.fold_reports[2].escalations == []  # streak reset
+    assert len(decisions) == 1
+    cid, round_idx, decision = decisions[0]
+    assert (cid, round_idx) == ("c2", 2)
+    assert decision.new_vm != "vm2"  # the slow type is not re-picked
+    assert run.rounds[1].carried_in == ["c2"]
+    assert run.rounds[1].deadline_s == pytest.approx(2.0)
+
+
+def test_instant_schedule_with_deadline_folds_everyone():
+    results = make_results(3)
+    engine = AsyncRoundEngine(fold_cost_s=0.1,
+                              deadline=FixedDeadline(t_round_s=1.0))
+    report = engine.fold_round(1, results, InstantSchedule())
+    assert report.carried_over == [] and report.escalations == []
+    assert_trees_close(report.params, batch_params(results))
+
+
+def test_pending_carryover_exposed_on_server():
+    results, schedule, _ = _straggler_setup(None)
+    server = AsyncFLServer(
+        [StubClient(r) for r in results], results[0].params,
+        schedule=schedule, fold_cost_s=0.1,
+        round_deadline=FixedDeadline(t_round_s=2.0),
+    )
+    run = server.run(1)
+    assert run.rounds[0].carried_over == ["c3"]
+    assert server.pending_carryover.clients() == ["c3"]
+
+
+# ---------------------------------------------------------------------------
+# weight conservation: carry-over never drops or double-counts a silo
+# ---------------------------------------------------------------------------
+
+def _assert_weight_conserved(engine, reports, results, n_rounds):
+    """Raw folded weight + still-parked weight == per-silo weight x rounds,
+    and no (client, round) message folds twice."""
+    folded = sum(e.weight for rep in reports for e in rep.events)
+    pending = engine.carry.pending_weight()
+    total = sum(r.n_samples for r in results)
+    assert folded + pending == pytest.approx(n_rounds * total)
+    per_client = {r.client_id: 0 for r in results}
+    stale_seen = set()
+    for rep in reports:
+        for e in rep.events:
+            per_client[e.client_id] += 1
+            if e.is_stale:
+                key = (e.client_id, e.origin_round)
+                assert key not in stale_seen  # no double-fold of a carry
+                stale_seen.add(key)
+    still_parked = {}
+    for entry in engine.carry._entries:
+        still_parked[entry.client_id] = still_parked.get(entry.client_id, 0) + 1
+    for r in results:
+        assert per_client[r.client_id] + still_parked.get(r.client_id, 0) == n_rounds
+
+
+@st.composite
+def conservation_scenarios(draw):
+    """Random arrival schedule + deadline policy (no revocations)."""
+    n = draw(st.integers(2, 5))
+    n_rounds = draw(st.integers(1, 3))
+    delays = [draw(st.floats(0.0, 10.0)) for _ in range(n)]
+    weights = [draw(st.integers(1, 100)) for _ in range(n)]
+    kind = draw(st.sampled_from(["fixed", "quantile", "none"]))
+    min_clients = draw(st.integers(1, n))
+    if kind == "fixed":
+        policy = FixedDeadline(t_round_s=draw(st.floats(0.0, 12.0)),
+                               min_clients=min_clients)
+    elif kind == "quantile":
+        policy = QuantileDeadline(q=draw(st.floats(0.1, 0.9)),
+                                  min_clients=min_clients)
+    else:
+        policy = None
+    discount = draw(st.floats(0.0, 1.0))
+    return n, n_rounds, delays, weights, policy, discount
+
+
+@settings(max_examples=25, deadline=None)
+@given(conservation_scenarios())
+def test_carryover_conserves_weight_any_schedule_and_policy(scenario):
+    """Acceptance property: for ANY arrival schedule + deadline policy,
+    total folded example weight over a run equals the sum of per-silo
+    weights x rounds — carry-over never drops or double-counts a silo."""
+    n, n_rounds, delays, weights, policy, discount = scenario
+    results = make_results(n, weights=weights)
+    schedule = DeterministicSchedule(
+        {r.client_id: d for r, d in zip(results, delays)}
+    )
+    engine = AsyncRoundEngine(fold_cost_s=0.05, deadline=policy,
+                              carry_discount=discount)
+    reports = [engine.fold_round(r + 1, results, schedule)
+               for r in range(n_rounds)]
+    _assert_weight_conserved(engine, reports, results, n_rounds)
+
+
+# Deterministic fallback (always runs, even without hypothesis).
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_carryover_conservation_fallback(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    n_rounds = 3
+    results = make_results(n, seed=seed,
+                           weights=[int(w) for w in rng.integers(1, 100, n)])
+    schedule = DeterministicSchedule(
+        {r.client_id: float(d) for r, d in zip(results, rng.uniform(0, 10, n))}
+    )
+    policy = FixedDeadline(t_round_s=float(rng.uniform(0, 12)),
+                           min_clients=int(rng.integers(1, n + 1)))
+    engine = AsyncRoundEngine(fold_cost_s=0.05, deadline=policy,
+                              carry_discount=float(rng.uniform(0, 1)))
+    reports = [engine.fold_round(r + 1, results, schedule)
+               for r in range(n_rounds)]
+    _assert_weight_conserved(engine, reports, results, n_rounds)
+
+
+# ---------------------------------------------------------------------------
 # fault injection: revocation mid-fold (§4.3 recovery rule)
 # ---------------------------------------------------------------------------
 
 def test_revoked_silo_is_rerequested_and_still_aggregated():
     """Default policy: a silo revoked before its message lands retrains on
     the replacement VM and its update is still folded into the round."""
-    results = _results(4)
+    results = make_results(4)
     schedule = DeterministicSchedule(
         {"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0}, revoke_at={"c3": 2.0}
     )
@@ -245,11 +477,11 @@ def test_revoked_silo_is_rerequested_and_still_aggregated():
     assert report.round_span_s == pytest.approx(8.5)
     retry = [e for e in report.events if e.client_id == "c3"]
     assert len(retry) == 1 and retry[0].attempt == 2
-    _assert_close(report.params, _batch_params(results))  # all 4 silos in
+    assert_trees_close(report.params, batch_params(results))  # all 4 silos in
 
 
 def test_revoked_silo_excluded_under_exclude_policy():
-    results = _results(4)
+    results = make_results(4)
     schedule = DeterministicSchedule(
         {"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0}, revoke_at={"c3": 2.0}
     )
@@ -257,32 +489,32 @@ def test_revoked_silo_excluded_under_exclude_policy():
     report = engine.fold_round(1, results, schedule)
     assert report.excluded == ["c3"] and report.rerequested == []
     assert "c3" not in report.fold_times
-    _assert_close(report.params, _batch_params(results[:3]))
+    assert_trees_close(report.params, batch_params(results[:3]))
 
 
 def test_revocation_after_delivery_is_harmless():
     """A VM revoked after its c_msg_train landed does not lose the round
     (the simulator's already-delivered rule)."""
-    results = _results(3)
+    results = make_results(3)
     schedule = DeterministicSchedule(
         {"c0": 1.0, "c1": 2.0, "c2": 3.0}, revoke_at={"c1": 2.5}
     )
     report = AsyncRoundEngine(fold_cost_s=0.1).fold_round(1, results, schedule)
     assert report.rerequested == [] and report.excluded == []
-    _assert_close(report.params, _batch_params(results))
+    assert_trees_close(report.params, batch_params(results))
 
 
 def test_rerequest_budget_exhaustion_excludes():
-    results = _results(2)
+    results = make_results(2)
     schedule = DeterministicSchedule({"c0": 1.0, "c1": 4.0}, revoke_at={"c1": 0.5})
     engine = AsyncRoundEngine(fold_cost_s=0.1, max_rerequests=0)
     report = engine.fold_round(1, results, schedule)
     assert report.excluded == ["c1"]
-    _assert_close(report.params, _batch_params(results[:1]))
+    assert_trees_close(report.params, batch_params(results[:1]))
 
 
 def test_all_silos_revoked_raises():
-    results = _results(2)
+    results = make_results(2)
     schedule = DeterministicSchedule(
         {"c0": 1.0, "c1": 1.0}, revoke_at={"c0": 0.1, "c1": 0.1}
     )
@@ -316,19 +548,120 @@ def test_revocation_injector_marks_only_undelivered_spot_clients():
 def test_async_server_end_to_end_with_revocations():
     """AsyncFLServer under injected revocations still averages every silo
     (re-request policy) and matches the barrier result."""
-    results = _results(4, seed=9)
+    results = make_results(4, seed=9)
     schedule = DeterministicSchedule(
         {"c0": 1.0, "c1": 2.0, "c2": 3.0, "c3": 6.0}, revoke_at={"c3": 1.5}
     )
     server = AsyncFLServer(
-        [_StubClient(r) for r in results], results[0].params,
+        [StubClient(r) for r in results], results[0].params,
         schedule=schedule, fold_cost_s=0.2, recovery_delay_s=2.0,
     )
     run = server.run(1)
-    _assert_close(run.final_params, _batch_params(results))
+    assert_trees_close(run.final_params, batch_params(results))
     assert server.fold_reports[0].rerequested == ["c3"]
     # revoked at 1.5, recovery 2, retrain 6 -> folded at 9.5 + 0.2
     assert run.rounds[0].fold_times_s["c3"] == pytest.approx(9.7)
+
+
+# ---------------------------------------------------------------------------
+# fault-injection boundary matrix: revocations x deadlines (§4.3 + T_round)
+# ---------------------------------------------------------------------------
+
+def test_revocation_exactly_on_deadline_tick_composes_with_carryover():
+    """Boundary: the straggler's VM is revoked at exactly T_round. §4.3
+    re-request still fires, the replacement's message lands after the
+    deadline, and carry-over catches it — the silo's update arrives in
+    the NEXT round's average (discounted) instead of being lost."""
+    results = make_results(4)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0}, revoke_at={"c3": 2.0}
+    )
+    engine = AsyncRoundEngine(
+        fold_cost_s=0.1, recovery_delay_s=1.0,
+        deadline=FixedDeadline(t_round_s=2.0), carry_discount=0.5,
+    )
+    r1 = engine.fold_round(1, results, schedule)
+    assert r1.rerequested == ["c3"]          # §4.3 recovery ran
+    assert r1.carried_over == ["c3"]         # ... but the retrain missed T_round
+    assert r1.excluded == []
+    assert_trees_close(r1.params, batch_params(results[:3]))
+
+    clean = DeterministicSchedule({"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0})
+    r2 = engine.fold_round(2, results, clean)
+    assert r2.carried_in == ["c3"]
+    stale = [e for e in r2.events if e.is_stale][0]
+    assert stale.folded_weight == pytest.approx(0.5 * results[3].n_samples)
+    _assert_weight_conserved(engine, [r1, r2], results, 2)
+
+
+def test_revocation_exactly_at_arrival_loses_the_message():
+    """Boundary: revoke_at == delay means the VM died as the message was
+    leaving — the update is lost (simulator rule: only a revocation
+    strictly after delivery is harmless) and §4.3 recovery kicks in."""
+    results = make_results(2)
+    schedule = DeterministicSchedule(
+        {"c0": 1.0, "c1": 3.0}, revoke_at={"c1": 3.0}
+    )
+    engine = AsyncRoundEngine(fold_cost_s=0.1, recovery_delay_s=0.5)
+    report = engine.fold_round(1, results, schedule)
+    assert report.rerequested == ["c1"]
+    # revoked at 3, recovery 0.5, retrain 3 -> folds by 6.6
+    assert report.fold_times["c1"] == pytest.approx(6.6)
+    assert_trees_close(report.params, batch_params(results))
+
+
+def test_revocation_mid_fold_rerequest_meets_extended_deadline():
+    """Boundary: a revocation lands while the server is mid-fold on
+    another silo.  The re-requested message re-enters the queue, the
+    quorum-extended deadline covers it, and fold serialization timing
+    stays exact."""
+    results = make_results(3)
+    # c0 folds over [0.5, 1.5]; c1's VM dies at 1.0 (mid-fold), c2 on time.
+    schedule = DeterministicSchedule(
+        {"c0": 0.5, "c1": 2.0, "c2": 1.0}, revoke_at={"c1": 1.0}
+    )
+    engine = AsyncRoundEngine(
+        fold_cost_s=1.0, recovery_delay_s=0.5,
+        deadline=FixedDeadline(t_round_s=10.0, min_clients=3),
+    )
+    report = engine.fold_round(1, results, schedule)
+    assert report.rerequested == ["c1"] and report.carried_over == []
+    # c1 re-arrives at 1.0 + 0.5 + 2.0 = 3.5; server frees at 2.5 (c0,c2)
+    c1 = [e for e in report.events if e.client_id == "c1"][0]
+    assert c1.arrival_s == pytest.approx(3.5)
+    assert c1.fold_start_s == pytest.approx(3.5)
+    assert c1.fold_end_s == pytest.approx(4.5)
+    assert report.round_span_s == pytest.approx(4.5)
+    assert_trees_close(report.params, batch_params(results))
+
+
+def test_server_vm_revocation_composes_with_carryover(tmp_path):
+    """Boundary: the server VM itself dies between partial rounds.  §4.3
+    recovery restores the aggregated weights from a client checkpoint and
+    the carry-over buffer survives — the parked straggler update still
+    lands in the post-recovery round."""
+    from repro.checkpoint import ClientCheckpointManager
+
+    results = make_results(4)
+    schedule = DeterministicSchedule({"c0": 1.0, "c1": 1.0, "c2": 1.0, "c3": 5.0})
+    mgr = ClientCheckpointManager(str(tmp_path / "c0"))
+    server = AsyncFLServer(
+        [StubClient(r) for r in results], results[0].params,
+        schedule=schedule, fold_cost_s=0.1,
+        round_deadline=FixedDeadline(t_round_s=2.0), carry_discount=0.5,
+        client_ckpts={"c0": mgr},
+        fault_hook=lambda r: "s" if r == 2 else None,
+    )
+    run = server.run(2)
+    assert run.rounds[0].carried_over == ["c3"]
+    assert run.rounds[1].restarted_from == "client:c0"
+    assert run.rounds[1].carried_in == ["c3"]
+    # round 2 average: fresh on-time c0..c2 + c3's round-1 update at half weight
+    want = fedavg(
+        [results[3].params] + [r.params for r in results[:3]],
+        [0.5 * results[3].n_samples, 10.0, 20.0, 30.0],
+    )
+    assert_trees_close(run.final_params, want)
 
 
 # ---------------------------------------------------------------------------
@@ -341,25 +674,25 @@ def test_recover_server_from_client_checkpoints_without_server_manager(tmp_path)
     (paper: the server 'waits for any client to send its weights')."""
     from repro.checkpoint import ClientCheckpointManager
 
-    results = _results(2)
-    saved = _batch_params(results)
+    results = make_results(2)
+    saved = batch_params(results)
     mgr = ClientCheckpointManager(str(tmp_path / "c0"))
     mgr.save(5, saved)
 
     server = FLServer(
-        [_StubClient(r) for r in results],
+        [StubClient(r) for r in results],
         jax.tree.map(jnp.zeros_like, results[0].params),  # stale in-memory state
         client_ckpts={"c0": mgr},
     )
     source = server._recover_server()
     assert source == "client:c0"
-    _assert_close(server.params, saved)
+    assert_trees_close(server.params, saved)
 
 
 def test_recover_server_prefers_freshest_client(tmp_path):
     from repro.checkpoint import ClientCheckpointManager
 
-    results = _results(2)
+    results = make_results(2)
     old, new = results[0].params, results[1].params
     mgrs = {
         "c0": ClientCheckpointManager(str(tmp_path / "c0")),
@@ -368,16 +701,16 @@ def test_recover_server_prefers_freshest_client(tmp_path):
     mgrs["c0"].save(3, old)
     mgrs["c1"].save(7, new)
     server = FLServer(
-        [_StubClient(r) for r in results],
+        [StubClient(r) for r in results],
         jax.tree.map(jnp.zeros_like, old),
         client_ckpts=mgrs,
     )
     assert server._recover_server() == "client:c1"
-    _assert_close(server.params, new)
+    assert_trees_close(server.params, new)
 
 
 def test_recover_server_without_any_checkpoint_keeps_params():
-    results = _results(2)
-    server = FLServer([_StubClient(r) for r in results], results[0].params)
+    results = make_results(2)
+    server = FLServer([StubClient(r) for r in results], results[0].params)
     assert server._recover_server() == "none"
-    _assert_close(server.params, results[0].params)
+    assert_trees_close(server.params, results[0].params)

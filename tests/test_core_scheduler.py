@@ -12,19 +12,13 @@ try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
 except ModuleNotFoundError:  # property tests skip cleanly without it
     from _hypothesis_stub import given, settings, st
 
+from conftest import make_toy_app, make_toy_env
 from repro.core import (
     SERVER,
     Assignment,
-    ClientSpec,
-    CloudEnvironment,
     CostModel,
     DynamicScheduler,
-    FLApplication,
     InitialMapping,
-    MessageSizes,
-    Provider,
-    Region,
-    VMType,
     cloudlab_environment,
     til_application,
 )
@@ -36,43 +30,26 @@ from repro.core import (
 
 @st.composite
 def small_problem(draw):
+    """Randomized tiny env/app through the shared conftest builders."""
     n_vms = draw(st.integers(2, 4))
     n_clients = draw(st.integers(1, 3))
-    providers = [Provider("p0", 0.01), Provider("p1", 0.02)]
-    regions = [Region("r0", "p0"), Region("r1", "p1")]
-    vms = []
-    for i in range(n_vms):
-        region = draw(st.sampled_from(["r0", "r1"]))
-        od = draw(st.floats(0.1, 10.0))
-        vms.append(
-            VMType(
-                vm_id=f"vm{i}",
-                name=f"t{i}",
-                provider="p0" if region == "r0" else "p1",
-                region=region,
-                vcpus=draw(st.integers(1, 16)),
-                gpus=draw(st.integers(0, 1)),
-                ram_gb=16,
-                cost_on_demand_hour=od,
-                cost_spot_hour=od * 0.3,
-            )
-        )
-    env = CloudEnvironment(providers, regions, vms)
-    env.sl_inst = {v.vm_id: draw(st.floats(0.1, 3.0)) for v in vms}
-    env.sl_comm = {
-        ("r0", "r0"): draw(st.floats(0.5, 2.0)),
-        ("r0", "r1"): draw(st.floats(0.5, 20.0)),
-        ("r1", "r1"): draw(st.floats(0.5, 2.0)),
-    }
-    clients = [
-        ClientSpec(f"c{i}", train_bl=draw(st.floats(10, 500)), test_bl=draw(st.floats(1, 50)))
-        for i in range(n_clients)
-    ]
-    app = FLApplication(
-        name="prop",
-        clients=clients,
-        messages=MessageSizes(0.1, 0.1, 0.1, 1e-6),
-        n_rounds=5,
+    env = make_toy_env(
+        n_vms=n_vms,
+        vm_regions=[draw(st.sampled_from(["r0", "r1"])) for _ in range(n_vms)],
+        od_prices=[draw(st.floats(0.1, 10.0)) for _ in range(n_vms)],
+        inst_slowdowns=[draw(st.floats(0.1, 3.0)) for _ in range(n_vms)],
+        comm_slowdowns={
+            ("r0", "r0"): draw(st.floats(0.5, 2.0)),
+            ("r0", "r1"): draw(st.floats(0.5, 20.0)),
+            ("r1", "r1"): draw(st.floats(0.5, 2.0)),
+        },
+        vcpus=[draw(st.integers(1, 16)) for _ in range(n_vms)],
+        gpus=[draw(st.integers(0, 1)) for _ in range(n_vms)],
+    )
+    app = make_toy_app(
+        n_clients=n_clients,
+        train_bls=[draw(st.floats(10, 500)) for _ in range(n_clients)],
+        test_bls=[draw(st.floats(1, 50)) for _ in range(n_clients)],
         train_comm_bl=draw(st.floats(1, 20)),
         test_comm_bl=draw(st.floats(0.5, 5)),
         aggreg_bl=draw(st.floats(0.1, 5)),
@@ -187,15 +164,6 @@ def test_cost_max_upper_bounds_all_costs():
 # Dynamic Scheduler (Algorithms 1-3)
 # ---------------------------------------------------------------------------
 
-@pytest.fixture
-def til_setup():
-    env = cloudlab_environment()
-    app = til_application()
-    cm = CostModel(env, app, 0.5)
-    placement = InitialMapping(env, app, alpha=0.5).solve().placement
-    return env, app, cm, placement
-
-
 def test_algorithm1_server_fault(til_setup):
     env, app, cm, placement = til_setup
     ds = DynamicScheduler(cm)
@@ -266,3 +234,47 @@ def test_algorithm3_objective_consistent(til_setup):
         cost = ds.recompute_cost(victim, vm_id, ms, placement)
         value = 0.5 * cost / cm.cost_max() + 0.5 * ms / cm.t_max()
         assert value >= dec.objective_value - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# candidate_set cooldown semantics (regression pins)
+# ---------------------------------------------------------------------------
+
+def test_candidate_set_eligible_exactly_at_cooldown_boundary(til_setup):
+    """The cooldown boundary is inclusive: a type revoked at t becomes
+    eligible again exactly at t + revoked_cooldown_s (>=), not one tick
+    later."""
+    env, app, cm, placement = til_setup
+    ds = DynamicScheduler(cm, revoked_cooldown_s=100.0)
+    victim = app.clients[0].client_id
+    ds.select_instance(victim, placement, "vm_126", remove_revoked=True, now_s=0.0)
+    assert "vm_126" not in ds.candidate_set(victim, now_s=99.999)
+    assert "vm_126" in ds.candidate_set(victim, now_s=100.0)  # exact boundary
+    assert "vm_126" in ds.candidate_set(victim, now_s=100.001)
+
+
+def test_candidate_set_cooldowns_are_per_task(til_setup):
+    """One task's revocation history never shrinks another task's pool."""
+    env, app, cm, placement = til_setup
+    ds = DynamicScheduler(cm, revoked_cooldown_s=100.0)
+    victim, other = app.clients[0].client_id, app.clients[1].client_id
+    ds.select_instance(victim, placement, "vm_126", remove_revoked=True, now_s=0.0)
+    assert "vm_126" not in ds.candidate_set(victim, now_s=0.0)
+    assert "vm_126" in ds.candidate_set(other, now_s=0.0)
+
+
+def test_select_instance_falls_back_when_every_candidate_is_cooling(til_setup):
+    """With every VM type inside its cooldown window the scheduler must
+    not dead-end: it falls back to the full pool minus the VM that just
+    died rather than raising."""
+    env, app, cm, placement = til_setup
+    ds = DynamicScheduler(cm, revoked_cooldown_s=1e9)
+    victim = app.clients[0].client_id
+    for vm_id in env.vm_types:
+        ds.select_instance(victim, placement, vm_id, remove_revoked=True, now_s=0.0)
+    assert ds.candidate_set(victim, now_s=1.0) == set()
+    revoked_vm = placement[victim].vm_id
+    dec = ds.select_instance(victim, placement, revoked_vm,
+                             remove_revoked=True, now_s=1.0)
+    assert dec.new_vm != revoked_vm
+    assert dec.candidates_considered == len(env.vm_types) - 1
