@@ -1,0 +1,196 @@
+"""Control-plane event-bus overhead benchmark.
+
+Acceptance gate for the typed-event control plane: publishing the full
+fold trace (UpdateArrived / UpdateFolded / DeadlineExpired /
+RoundClosed / StragglerEscalated) on a recording ``EventBus`` must add
+**<5%** to the PR-3 deadline-bench round time.
+
+The scenario is exactly ``benchmarks/deadline_bench.py``'s acceptance
+shape — 8 silos, one 5x straggler, ``QuantileDeadline`` partial rounds,
+real ``StreamingAggregator`` folds on 4M/16M-param buffers — run twice
+per round in interleaved A/B fashion: once on a recording ``EventBus``
+(the default every ``AsyncRoundEngine`` now carries) and once on
+``NULL_BUS`` (publish is a no-op).  Wall-clock medians per round give
+``overhead_frac = (bus - null) / null``.
+
+Writes BENCH_control.json (or --out) for PR-over-PR tracking, records
+the matching BENCH_deadline.json round time when present, and prints
+``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
+
+Usage:
+  PYTHONPATH=src python benchmarks/control_plane_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+
+from repro.core.events import NULL_BUS, EventBus
+from repro.federated.agg_engine import AggregationEngine
+from repro.federated.async_server import (
+    AsyncRoundEngine,
+    DeterministicSchedule,
+    QuantileDeadline,
+)
+
+try:  # package context (benchmarks.run) vs standalone script
+    from .deadline_bench import (
+        N_CLIENTS,
+        STRAGGLER_FACTOR,
+        _make_results,
+    )
+except ImportError:  # pragma: no cover - standalone path
+    from deadline_bench import N_CLIENTS, STRAGGLER_FACTOR, _make_results
+
+Row = Tuple[str, float, str]
+
+ROUNDS = 20  # min-of-N A/B: enough reps to sit on the noise floor
+FULL_PARAMS = [4_000_000, 16_000_000]
+QUICK_PARAMS = [4_000_000]
+OVERHEAD_BUDGET = 0.05  # acceptance: bus adds <5% to the round time
+
+
+def _deadline_engine(bus: EventBus) -> AsyncRoundEngine:
+    return AsyncRoundEngine(
+        AggregationEngine(),
+        deadline=QuantileDeadline(q=0.8, slack=1.2, min_clients=4),
+        carry_discount=0.5,
+        escalate_after=10**9,
+        bus=bus,
+    )
+
+
+def bench_shape(n_params: int, rounds: int = ROUNDS) -> Dict[str, Any]:
+    results = _make_results(N_CLIENTS, n_params)
+    straggler = results[-1].client_id
+    delays = {
+        r.client_id: 1.0 * (STRAGGLER_FACTOR if r.client_id == straggler else 1.0)
+        for r in results
+    }
+    schedule = DeterministicSchedule(delays)
+
+    engines = {
+        "bus": _deadline_engine(EventBus()),
+        "null": _deadline_engine(NULL_BUS),
+    }
+    for engine in engines.values():  # warm the jits / first-fold traces
+        engine.fold_round(0, results, schedule)
+
+    times: Dict[str, List[float]] = {"bus": [], "null": []}
+    for r in range(1, rounds + 1):
+        # Interleaved A/B, alternating order so allocator/GC drift hits
+        # both arms symmetrically; the min is the noise-floor estimate.
+        order = ("bus", "null") if r % 2 else ("null", "bus")
+        for name in order:
+            t0 = time.perf_counter()
+            engines[name].fold_round(r, results, schedule)
+            times[name].append(time.perf_counter() - t0)
+
+    bus_s = min(times["bus"])
+    null_s = min(times["null"])
+    median_bus_s = statistics.median(times["bus"])
+    median_null_s = statistics.median(times["null"])
+    n_events = len(engines["bus"].bus.trace)
+    overhead = (bus_s - null_s) / null_s
+    entry = {
+        "n_clients": N_CLIENTS,
+        "n_params": n_params,
+        "rounds": rounds,
+        "bus_round_s": round(bus_s, 6),
+        "null_round_s": round(null_s, 6),
+        "bus_round_median_s": round(median_bus_s, 6),
+        "null_round_median_s": round(median_null_s, 6),
+        "events_recorded": n_events,
+        "overhead_frac": round(overhead, 4),
+        "overhead_ok": overhead < OVERHEAD_BUDGET,
+    }
+    print(
+        f"[control] P={n_params//1000}k x{N_CLIENTS}: "
+        f"null={null_s*1e3:.2f}ms bus={bus_s*1e3:.2f}ms "
+        f"({n_events} events) overhead={overhead*100:+.2f}% "
+        f"-> {'OK' if entry['overhead_ok'] else 'FAIL'}",
+        file=sys.stderr,
+    )
+    return entry
+
+
+def run_grid(quick: bool = False, rounds: int = ROUNDS) -> Dict[str, Any]:
+    params = QUICK_PARAMS if quick else FULL_PARAMS
+    entries = [bench_shape(p, rounds=rounds) for p in params]
+    ok = all(e["overhead_ok"] for e in entries)
+
+    # Cross-reference the PR-3 deadline benchmark when its report exists.
+    deadline_ref = None
+    ref_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_deadline.json")
+    if os.path.exists(ref_path):
+        try:
+            with open(ref_path) as f:
+                report = json.load(f)
+            deadline_ref = {
+                e["n_params"]: e["deadline_round_s"] for e in report["entries"]
+            }
+        except (KeyError, json.JSONDecodeError):  # stale/foreign file
+            deadline_ref = None
+
+    result = {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "overhead_budget_frac": OVERHEAD_BUDGET,
+        "entries": entries,
+        "deadline_bench_round_s": deadline_ref,
+        "acceptance_ok": ok,
+    }
+    print(
+        f"[control] acceptance (event bus adds <{OVERHEAD_BUDGET*100:.0f}% to "
+        f"the deadline-bench round on every shape) -> {'OK' if ok else 'FAIL'}",
+        file=sys.stderr,
+    )
+    return result
+
+
+def bench_control_plane() -> List[Row]:
+    """run.py-compatible rows (quick grid)."""
+    report = run_grid(quick=True, rounds=10)
+    rows: List[Row] = []
+    for e in report["entries"]:
+        rows.append((
+            f"control_bus_{e['n_clients']}x{e['n_params']//1000}k",
+            e["bus_round_s"] * 1e6,
+            f"null_us={e['null_round_s']*1e6:.0f};"
+            f"overhead_frac={e['overhead_frac']};"
+            f"events={e['events_recorded']}",
+        ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--out", default="BENCH_control.json")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[control] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for e in report["entries"]:
+        print(f"control_bus_{e['n_clients']}x{e['n_params']},"
+              f"{e['bus_round_s']*1e6:.1f},"
+              f"null_us={e['null_round_s']*1e6:.1f};"
+              f"overhead_frac={e['overhead_frac']}")
+    if not report["acceptance_ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ and aggregation are real JAX compute.  Both servers see identical client
 results each round, so the printed losses match — only the round
 timeline changes.
 
+The streaming server is built via the fluent `Experiment` builder's
+live target (`.serve(...)`); no environment/application is needed for a
+live-only run.  (examples/failure_simulation.py keeps the legacy
+`SimulationConfig` shim style for the migration docs.)
+
   PYTHONPATH=src python examples/async_straggler_demo.py
 """
 import os
@@ -27,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Experiment
 from repro.data import make_lm_silos
-from repro.federated import AsyncFLServer, FLClient, FLServer, HeavyTailSchedule
+from repro.federated import FLClient, FLServer, HeavyTailSchedule
 from repro.models.fl_models import LSTMConfig, init_shakespeare_lstm, shakespeare_loss
 from repro.optim import make_optimizer
 
@@ -65,9 +71,9 @@ def main():
           f"{N_ROUNDS} rounds ==\n")
 
     barrier = FLServer(make_clients(lc), params).run(N_ROUNDS)
-    streaming_server = AsyncFLServer(
-        make_clients(lc), params, schedule=schedule, fold_cost_s=0.05,
-    )
+    streaming_server = (Experiment().async_rounds()
+                        .serve(make_clients(lc), params,
+                               schedule=schedule, fold_cost_s=0.05))
     streaming = streaming_server.run(N_ROUNDS)
 
     print("round  loss(barrier)  loss(stream)  barrier_span  stream_span  saved")

@@ -20,8 +20,15 @@ Arrival delays run on the engine's virtual clock (HeavyTailSchedule with
 client_7 designated 5x slow); training, folding, and the staleness
 discount are real JAX compute, so the printed losses are real losses.
 
+Both servers are built through the fluent `Experiment` builder — the
+same chain that drives the virtual-clock simulator (`.simulate()`)
+builds the live engine (`.serve(...)`) — and the §4.4 escalation
+arrives via the control-plane bus (a `StragglerEscalated` subscription),
+not an ad-hoc callback loop.
+
   PYTHONPATH=src python examples/deadline_rounds_demo.py
 """
+import collections
 import os
 import sys
 
@@ -34,12 +41,13 @@ from repro.core import (
     Assignment,
     CostModel,
     DynamicScheduler,
+    Experiment,
     InitialMapping,
     cloudlab_environment,
     til_application,
 )
 from repro.data import make_lm_silos
-from repro.federated import AsyncFLServer, FixedDeadline, FLClient, HeavyTailSchedule
+from repro.federated import FixedDeadline, FLClient, HeavyTailSchedule
 from repro.models.fl_models import LSTMConfig, init_shakespeare_lstm, shakespeare_loss
 from repro.optim import make_optimizer
 
@@ -101,23 +109,26 @@ def main():
           f"T_round={T_ROUND}s, {N_ROUNDS} rounds ==\n")
 
     # Lens 1: barrier on the round count (every silo in every round).
-    count_server = AsyncFLServer(
-        make_clients(lc), params, schedule=schedule, fold_cost_s=0.05,
-    )
+    # `Experiment().async_rounds()` with no deadline is exactly the PR-2
+    # streaming engine; `.serve()` builds the live AsyncFLServer.
+    count_server = (Experiment.on(env).app(app).async_rounds()
+                    .serve(make_clients(lc), params,
+                           schedule=schedule, fold_cost_s=0.05))
     count = count_server.run(N_ROUNDS)
 
-    # Lenses 2+3: T_round partial rounds with carry-over + escalation.
-    dl_server = AsyncFLServer(
-        make_clients(lc), params, schedule=HeavyTailSchedule(
-            base_s=1.0, sigma=0.15, straggler_ids=(STRAGGLER,),
-            straggler_factor=5.0, seed=0,
-        ),
-        fold_cost_s=0.05,
-        round_deadline=FixedDeadline(t_round_s=T_ROUND, min_clients=4),
-        carry_discount=0.5,
-        escalate_after=2,
-        on_straggler=on_straggler,
-    )
+    # Lenses 2+3: T_round partial rounds with carry-over + escalation,
+    # from the same builder chain that would configure the simulator.
+    dl_server = (Experiment.on(env).app(app)
+                 .async_rounds(deadline=FixedDeadline(t_round_s=T_ROUND,
+                                                      min_clients=4),
+                               escalate_after=2, carry_discount=0.5)
+                 .serve(make_clients(lc), params,
+                        schedule=HeavyTailSchedule(
+                            base_s=1.0, sigma=0.15, straggler_ids=(STRAGGLER,),
+                            straggler_factor=5.0, seed=0,
+                        ),
+                        fold_cost_s=0.05,
+                        on_straggler=on_straggler))
     deadline = dl_server.run(N_ROUNDS)
 
     print("round  loss(count)  loss(deadline)  count_span  deadline_span  carried_in -> carried_over")
@@ -137,6 +148,10 @@ def main():
     print("every missed update was carried (discounted), none dropped — the "
           "weight-conservation property test in tests/test_async_server.py "
           "proves this for arbitrary schedules and policies.")
+
+    counts = collections.Counter(type(e).__name__ for e in dl_server.bus.trace)
+    print("\ncontrol-plane trace (same event vocabulary as the simulator): "
+          + ", ".join(f"{n}x{name}" for name, n in sorted(counts.items())))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,131 @@
+"""Pretty-print a Multi-FedLS run's control-plane event timeline.
+
+Runs a simulator scenario through the `Experiment` builder and renders
+`SimulationResult.trace` — the typed event stream every driver of the
+control plane emits (`repro.core.events`) — as a human-readable
+timeline, optionally dumping it as JSON for offline replay/diffing.
+Traces are deterministic for a fixed seed (pinned by
+tests/test_control_plane.py), so two dumps of the same scenario diff
+clean.
+
+Usage:
+  PYTHONPATH=src python scripts/trace_dump.py \
+      [--app til|shakespeare|femnist] [--rounds N] [--markets MODE] \
+      [--k-r SECONDS] [--seed N] [--deadline SECONDS] [--async-rounds] \
+      [--checkpoint-every N] [--limit N] [--json PATH]
+
+Examples:
+  # the paper's spot-clients scenario with revocations, 10 rounds
+  PYTHONPATH=src python scripts/trace_dump.py --markets spot --k-r 3600
+
+  # T_round partial rounds: watch DeadlineExpired / carry-over events
+  PYTHONPATH=src python scripts/trace_dump.py --app shakespeare \
+      --async-rounds --deadline 400
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Iterable, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Event  # noqa: E402
+
+
+def format_event(event: Event) -> str:
+    """One timeline row: time, event type, non-empty fields."""
+    fields = dataclasses.asdict(event)
+    time_s = fields.pop("time_s")
+    parts = []
+    for key, value in fields.items():
+        if value in ((), [], None, ""):
+            continue
+        if isinstance(value, float):
+            value = f"{value:.3f}"
+        elif isinstance(value, (tuple, list)):
+            value = ",".join(str(v) for v in value)
+        parts.append(f"{key}={value}")
+    return f"{time_s:>12.2f}s  {type(event).__name__:<19} {' '.join(parts)}"
+
+
+def format_trace(trace: Iterable[Event], limit: Optional[int] = None) -> str:
+    """The full timeline (publication order), optionally truncated."""
+    events: List[Event] = list(trace)
+    shown = events if limit is None else events[:limit]
+    lines = [f"{'time':>13}  {'event':<19} fields", "-" * 78]
+    lines += [format_event(e) for e in shown]
+    if limit is not None and len(events) > limit:
+        lines.append(f"... ({len(events) - limit} more events)")
+    return "\n".join(lines)
+
+
+def trace_to_json(trace: Iterable[Event]) -> List[dict]:
+    return [{"event": type(e).__name__, **dataclasses.asdict(e)} for e in trace]
+
+
+def main() -> None:
+    from repro.core import (
+        Experiment,
+        cloudlab_environment,
+        femnist_application,
+        shakespeare_application,
+        til_application,
+    )
+
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--app", default="til",
+                    choices=["til", "shakespeare", "femnist"])
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--markets", default="on_demand",
+                    choices=["on_demand", "spot", "mixed"],
+                    help="mixed = on-demand server, spot clients")
+    ap.add_argument("--k-r", type=float, default=None,
+                    help="mean seconds between spot revocations (§5.6)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async-rounds", action="store_true")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="fixed T_round in seconds (implies --async-rounds)")
+    ap.add_argument("--checkpoint-every", type=int, default=None)
+    ap.add_argument("--limit", type=int, default=None,
+                    help="show only the first N events")
+    ap.add_argument("--json", default=None, help="also dump the trace as JSON")
+    args = ap.parse_args()
+
+    apps = {"til": til_application, "shakespeare": shakespeare_application,
+            "femnist": femnist_application}
+    env = cloudlab_environment()
+    app = apps[args.app](n_rounds=args.rounds)
+
+    server_market, client_market = {
+        "on_demand": ("on_demand", "on_demand"),
+        "spot": ("spot", "spot"),
+        "mixed": ("on_demand", "spot"),
+    }[args.markets]
+    exp = (Experiment.on(env).app(app)
+           .markets(server=server_market, clients=client_market)
+           .revocations(k_r=args.k_r, seed=args.seed, remove_revoked=False))
+    if args.checkpoint_every:
+        exp = exp.checkpoints(every=args.checkpoint_every)
+    if args.deadline is not None or args.async_rounds:
+        exp = exp.async_rounds(deadline=args.deadline)
+    result = exp.simulate()
+
+    print(format_trace(result.trace, limit=args.limit))
+    print(f"\n{len(result.trace)} events | rounds={result.rounds_completed} "
+          f"revocations={result.n_revocations} "
+          f"deadline_misses={result.n_deadline_misses} "
+          f"escalations={len(result.escalations)} | "
+          f"makespan={result.total_time_s:.1f}s cost=${result.total_cost:.2f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(trace_to_json(result.trace), f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,33 @@
 """Multi-FedLS core: the paper's resource-management contribution.
 
-Modules map 1:1 to the paper's architecture (Fig. 1):
-  - cloud_model / application_model : §3 environment & application models
-  - pre_scheduling                  : §4.1 slowdown metrics
-  - cost_model + initial_mapping    : §4.2 MILP placement
-  - fault_tolerance                 : §4.3 checkpoint & monitoring
-  - dynamic_scheduler               : §4.4 Algorithms 1-3
-  - revocation + simulator          : §5 experiment engine
+Module map (paper Fig. 1, re-architected around a typed control plane):
+
+  environment & application models (§3)
+    cloud_model / application_model : providers, regions, VM types, FL app
+
+  the four framework modules, each behind a `typing.Protocol` surface
+  (control_plane.{PreSchedulerAPI, MapperAPI, FaultToleranceAPI,
+  SchedulerAPI}) so policies plug in without forking the engine:
+    pre_scheduling                  : §4.1 slowdown metrics
+    cost_model + initial_mapping    : §4.2 MILP placement (+ round_plan,
+                                      the unified per-round accounting)
+    fault_tolerance                 : §4.3 checkpoint & recovery plans
+    dynamic_scheduler               : §4.4 Algorithms 1-3
+
+  orchestration
+    events                          : typed event vocabulary + EventBus —
+                                      the trace language shared by the
+                                      simulator and the live async engine
+    control_plane                   : ControlPlane (binds the modules to
+                                      the bus: §4.3 recovery, §4.4
+                                      straggler escalation, checkpoints)
+                                      + the fluent `Experiment` builder
+    revocation + simulator          : §5 experiment engine — one driver
+                                      of the control plane; the live
+                                      driver is repro.federated
+
+Prefer `Experiment.on(env).app(app)...simulate()` over constructing the
+deprecated `SimulationConfig` shim directly; see docs/control_plane.md.
 """
 from .application_model import (
     ClientSpec,
@@ -25,6 +46,16 @@ from .cloud_model import (
     aws_gcp_environment,
     cloudlab_environment,
 )
+from .control_plane import (
+    ControlPlane,
+    Experiment,
+    FaultToleranceAPI,
+    MapperAPI,
+    PreSchedulerAPI,
+    RecoveryOutcome,
+    SchedulerAPI,
+    StragglerTracker,
+)
 from .cost_model import (
     SERVER,
     Assignment,
@@ -32,8 +63,25 @@ from .cost_model import (
     DeadlineRoundPlan,
     Placement,
     PlacementEvaluation,
+    RoundPlan,
 )
 from .dynamic_scheduler import DynamicScheduler, ReplacementDecision
+from .events import (
+    CheckpointSaved,
+    CostAccrued,
+    DeadlineExpired,
+    Event,
+    EventBus,
+    NullBus,
+    RecoveryCompleted,
+    RevocationOccurred,
+    RoundClosed,
+    RoundDispatched,
+    StragglerEscalated,
+    UpdateArrived,
+    UpdateFolded,
+    VMReplaced,
+)
 from .fault_tolerance import CheckpointPolicy, CheckpointRecord, FaultToleranceModule, RecoveryPlan
 from .initial_mapping import InfeasibleMappingError, InitialMapping, MappingSolution
 from .pre_scheduling import (
@@ -61,35 +109,58 @@ __all__ = [
     "CallableProbe",
     "CheckpointPolicy",
     "CheckpointRecord",
+    "CheckpointSaved",
     "ClientSpec",
     "CloudEnvironment",
+    "ControlPlane",
+    "CostAccrued",
     "CostModel",
-    "DynamicScheduler",
+    "DeadlineExpired",
     "DeadlineRoundPlan",
+    "DynamicScheduler",
     "EscalationEvent",
+    "Event",
+    "EventBus",
     "ExecutionProbe",
+    "Experiment",
     "FLApplication",
+    "FaultToleranceAPI",
     "FaultToleranceModule",
     "InfeasibleMappingError",
     "InitialMapping",
+    "MapperAPI",
     "MappingSolution",
     "MessageSizes",
     "MultiCloudSimulator",
+    "NullBus",
     "Placement",
     "PlacementEvaluation",
     "PreScheduling",
+    "PreSchedulerAPI",
     "PreSchedulingResult",
     "ProbeResult",
     "Provider",
+    "RecoveryCompleted",
+    "RecoveryOutcome",
     "RecoveryPlan",
     "Region",
     "ReplacementDecision",
     "RevocationEvent",
     "RevocationModel",
+    "RevocationOccurred",
     "RevocationSampler",
+    "RoundClosed",
+    "RoundDispatched",
+    "RoundPlan",
+    "SchedulerAPI",
     "SimulationConfig",
     "SimulationResult",
+    "StragglerEscalated",
+    "StragglerTracker",
     "TableProbe",
+    "UpdateArrived",
+    "UpdateFolded",
+    "VMReplaced",
     "VMType",
     "aws_gcp_environment",
     "cloudlab_environment",

@@ -1,0 +1,770 @@
+"""Multi-FedLS control plane: module Protocols, shared orchestration, and
+the fluent :class:`Experiment` builder.
+
+The paper (Fig. 1/§4) defines Multi-FedLS as four cooperating modules.
+This module turns that prose architecture into code-level contracts:
+
+* **Protocols** — :class:`PreSchedulerAPI`, :class:`MapperAPI`,
+  :class:`FaultToleranceAPI`, :class:`SchedulerAPI` are the *only*
+  surfaces the orchestration layer is allowed to touch.  The concrete
+  classes (`PreScheduling`, `InitialMapping`, `FaultToleranceModule`,
+  `DynamicScheduler`) implement them structurally; swapping any module
+  for a cost-aware or facility-specific policy (FedCostAware-style) is
+  a constructor argument, not a fork of the engine.
+
+* **ControlPlane** — binds the modules to a typed
+  :class:`~repro.core.events.EventBus` and owns the orchestration
+  decisions that used to be duplicated between the virtual-clock
+  simulator and the live async server: revocation recovery
+  (§4.3), deadline-miss streak tracking and §4.4 straggler escalation
+  (:class:`StragglerTracker`), checkpoint bookkeeping, and the event
+  trace itself.
+
+* **Experiment** — a fluent, validated builder that replaces raw
+  ``SimulationConfig(...)`` construction.  Incoherent combinations
+  (a ``round_deadline`` without ``async_rounds``, a quorum larger than
+  the cohort) are rejected at *build* time instead of rounds-deep into
+  a run, and the same chain drives both the simulator
+  (:meth:`Experiment.simulate`) and the live engine
+  (:meth:`Experiment.serve`).
+
+``SimulationConfig`` remains as a thin deprecated shim — see
+``docs/control_plane.md`` for the kwarg -> builder migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Mapping,
+    Optional,
+    Protocol,
+    Sequence,
+    Set,
+    Tuple,
+    Union,
+    cast,
+    runtime_checkable,
+)
+
+from .cost_model import Assignment, Placement
+from .dynamic_scheduler import ReplacementDecision
+from .events import (
+    CheckpointSaved,
+    CostAccrued,
+    DeadlineExpired,
+    Event,
+    EventBus,
+    RecoveryCompleted,
+    RevocationOccurred,
+    RoundClosed,
+    RoundDispatched,
+    StragglerEscalated,
+    UpdateArrived,
+    UpdateFolded,
+    VMReplaced,
+)
+from .fault_tolerance import CheckpointPolicy, RecoveryPlan
+from .initial_mapping import MappingSolution
+from .pre_scheduling import PreSchedulingResult
+
+if TYPE_CHECKING:  # concrete types only needed for static conformance
+    from .application_model import FLApplication
+    from .cloud_model import CloudEnvironment
+    from .dynamic_scheduler import DynamicScheduler
+    from .fault_tolerance import FaultToleranceModule
+    from .initial_mapping import InitialMapping
+    from .pre_scheduling import PreScheduling
+    from .simulator import SimulationConfig, SimulationResult
+
+__all__ = [
+    "ControlPlane",
+    "Experiment",
+    "FaultToleranceAPI",
+    "MapperAPI",
+    "PreSchedulerAPI",
+    "RecoveryOutcome",
+    "SchedulerAPI",
+    "StragglerTracker",
+]
+
+
+# ---------------------------------------------------------------------------
+# Module protocols (the paper's Fig. 1 boxes as typing.Protocol surfaces)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class PreSchedulerAPI(Protocol):
+    """§4.1 Pre-Scheduling: probe the environment, derive slowdowns."""
+
+    def run(
+        self,
+        baseline_vm: str,
+        baseline_pair: Tuple[str, str],
+        n_repeats: int = ...,
+    ) -> PreSchedulingResult: ...
+
+    def attach_to_environment(self, result: PreSchedulingResult) -> None: ...
+
+
+@runtime_checkable
+class MapperAPI(Protocol):
+    """§4.2 Initial Mapping: place the server and every silo."""
+
+    def solve(self) -> MappingSolution: ...
+
+    def solve_greedy(self) -> MappingSolution: ...
+
+
+@runtime_checkable
+class FaultToleranceAPI(Protocol):
+    """§4.3 Fault Tolerance: monitoring, checkpoints, recovery plans."""
+
+    def register_tasks(self, placement: Mapping[str, Assignment]) -> None: ...
+
+    def on_round_complete(self, round_idx: int, now_s: float) -> float: ...
+
+    def handle_fault(
+        self,
+        faulty_task: str,
+        current_placement: Placement,
+        revoked_vm: str,
+        now_s: float,
+        current_round: int,
+    ) -> RecoveryPlan: ...
+
+    def handle_straggler(
+        self,
+        slow_task: str,
+        current_placement: Placement,
+        slow_vm: str,
+        now_s: float,
+        current_round: int,
+    ) -> RecoveryPlan: ...
+
+    def recovery_delay_s(self, plan: RecoveryPlan) -> float: ...
+
+
+@runtime_checkable
+class SchedulerAPI(Protocol):
+    """§4.4 Dynamic Scheduler: replacement-instance selection."""
+
+    def candidate_set(self, task: str, now_s: float = ...) -> Set[str]: ...
+
+    def select_instance(
+        self,
+        faulty_task: str,
+        current_map: Mapping[str, Assignment],
+        revoked_vm: str,
+        remove_revoked: bool = ...,
+        candidate_override: Optional[Iterable[str]] = ...,
+        now_s: float = ...,
+    ) -> ReplacementDecision: ...
+
+
+def _static_conformance(
+    pre: "PreScheduling",
+    mapper: "InitialMapping",
+    ft: "FaultToleranceModule",
+    sched: "DynamicScheduler",
+) -> Tuple[PreSchedulerAPI, MapperAPI, FaultToleranceAPI, SchedulerAPI]:
+    """mypy-only witness: the concrete modules satisfy their Protocols.
+
+    This function is never called; it exists so `mypy --strict` fails
+    the CI typecheck job the moment a concrete module drifts off its
+    Protocol surface."""
+    return pre, mapper, ft, sched
+
+
+# ---------------------------------------------------------------------------
+# Shared straggler policy (§4.4 soft faults)
+# ---------------------------------------------------------------------------
+
+class StragglerTracker:
+    """Consecutive deadline-miss streaks with an escalation threshold.
+
+    The same policy object serves the simulator's round settlement and
+    the live engine's fold loop: a miss advances the silo's streak; at
+    ``escalate_after`` the tracker reports the streak (the caller
+    escalates to the Dynamic Scheduler) and resets it; an on-time
+    delivery — or a revocation that already replaced the VM, destroying
+    the slow-VM evidence — clears it."""
+
+    def __init__(self, escalate_after: int = 2) -> None:
+        if escalate_after < 1:
+            raise ValueError("escalate_after must be >= 1")
+        self.escalate_after = escalate_after
+        self._streak: Dict[str, int] = {}
+
+    def record_miss(self, task: str) -> Optional[int]:
+        """Advance ``task``'s streak; return it if escalation is due
+        (resetting the streak), else None."""
+        streak = self._streak.get(task, 0) + 1
+        if streak >= self.escalate_after:
+            self._streak[task] = 0
+            return streak
+        self._streak[task] = streak
+        return None
+
+    def clear(self, task: str) -> None:
+        self._streak[task] = 0
+
+    def streak_of(self, task: str) -> int:
+        return self._streak.get(task, 0)
+
+
+# ---------------------------------------------------------------------------
+# Control plane
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecoveryOutcome:
+    """One fault's resolution: the published event, the FT module's plan,
+    and the wall-clock delay before the task runs again."""
+
+    event: Event
+    plan: RecoveryPlan
+    delay_s: float
+
+
+class ControlPlane:
+    """Binds the four Multi-FedLS modules to a typed event bus.
+
+    Drivers (the virtual-clock simulator, the live async server) call
+    the verbs below instead of wiring the modules together themselves;
+    every decision leaves a typed event on :attr:`bus`.  Modules are
+    accepted *only* through their Protocol surfaces — a custom mapper or
+    fault-tolerance policy plugs in without touching the drivers.
+    """
+
+    def __init__(
+        self,
+        *,
+        fault_tolerance: FaultToleranceAPI,
+        scheduler: SchedulerAPI,
+        mapper: Optional[MapperAPI] = None,
+        pre_scheduler: Optional[PreSchedulerAPI] = None,
+        bus: Optional[EventBus] = None,
+        escalate_after: int = 2,
+    ) -> None:
+        if not isinstance(fault_tolerance, FaultToleranceAPI):
+            raise TypeError(
+                "fault_tolerance does not implement FaultToleranceAPI: "
+                f"got {type(fault_tolerance).__name__}"
+            )
+        if not isinstance(scheduler, SchedulerAPI):
+            raise TypeError(
+                "scheduler does not implement SchedulerAPI: "
+                f"got {type(scheduler).__name__}"
+            )
+        if mapper is not None and not isinstance(mapper, MapperAPI):
+            raise TypeError(
+                f"mapper does not implement MapperAPI: got {type(mapper).__name__}"
+            )
+        if pre_scheduler is not None and not isinstance(
+            pre_scheduler, PreSchedulerAPI
+        ):
+            raise TypeError(
+                "pre_scheduler does not implement PreSchedulerAPI: "
+                f"got {type(pre_scheduler).__name__}"
+            )
+        self.ft = fault_tolerance
+        self.scheduler = scheduler
+        self.mapper = mapper
+        self.pre_scheduler = pre_scheduler
+        self.bus = bus if bus is not None else EventBus()
+        self.stragglers = StragglerTracker(escalate_after)
+
+    # -- initial mapping ---------------------------------------------------
+    def solve_mapping(self, use_greedy: bool = False) -> MappingSolution:
+        if self.mapper is None:
+            raise RuntimeError("ControlPlane was built without a mapper")
+        return self.mapper.solve_greedy() if use_greedy else self.mapper.solve()
+
+    def register_tasks(self, placement: Mapping[str, Assignment]) -> None:
+        self.ft.register_tasks(placement)
+
+    # -- round lifecycle ---------------------------------------------------
+    def dispatch_round(
+        self,
+        round_idx: int,
+        n_clients: int,
+        now_s: float,
+        deadline_s: Optional[float] = None,
+    ) -> RoundDispatched:
+        return self.bus.publish(
+            RoundDispatched(now_s, round_idx, n_clients, deadline_s)
+        )
+
+    def update_arrived(
+        self, round_idx: int, task: str, now_s: float, attempt: int = 1
+    ) -> UpdateArrived:
+        return self.bus.publish(UpdateArrived(now_s, round_idx, task, attempt))
+
+    def update_folded(
+        self,
+        round_idx: int,
+        task: str,
+        now_s: float,
+        weight: float = 1.0,
+        folded_weight: Optional[float] = None,
+        origin_round: Optional[int] = None,
+    ) -> UpdateFolded:
+        fw = folded_weight if folded_weight is not None else weight
+        return self.bus.publish(
+            UpdateFolded(now_s, round_idx, task, weight, fw, origin_round)
+        )
+
+    def close_round(
+        self,
+        round_idx: int,
+        now_s: float,
+        span_s: float,
+        carried_over: Sequence[str] = (),
+        carried_in: Sequence[str] = (),
+    ) -> RoundClosed:
+        return self.bus.publish(
+            RoundClosed(now_s, round_idx, span_s,
+                        tuple(carried_over), tuple(carried_in))
+        )
+
+    # -- §4.3 / §4.4 fault recovery ---------------------------------------
+    def _complete_recovery(
+        self,
+        event: Event,
+        plan: RecoveryPlan,
+        task: str,
+        old_vm: str,
+        now_s: float,
+        reason: str,
+    ) -> RecoveryOutcome:
+        """Shared tail of every fault: one VMReplaced + RecoveryCompleted
+        sequence, so hard (revocation) and soft (straggler) faults can
+        never drift apart in the trace vocabulary."""
+        delay = self.ft.recovery_delay_s(plan)
+        self.bus.publish(
+            VMReplaced(now_s, task, old_vm, plan.decision.new_vm,
+                       plan.decision.market, reason)
+        )
+        restored = plan.restore_from.location if plan.restore_from else "none"
+        self.bus.publish(
+            RecoveryCompleted(now_s + delay, task, plan.resume_round,
+                              delay, restored)
+        )
+        return RecoveryOutcome(event=event, plan=plan, delay_s=delay)
+
+    def revocation(
+        self,
+        task: str,
+        placement: Placement,
+        old_vm: str,
+        now_s: float,
+        round_idx: int,
+        interrupted: bool,
+    ) -> RecoveryOutcome:
+        """§4.3 hard fault: ask the FT module for a recovery plan (which
+        routes through the Dynamic Scheduler), publish the trace."""
+        plan = self.ft.handle_fault(task, placement, old_vm, now_s, round_idx)
+        event = self.bus.publish(
+            RevocationOccurred(now_s, task, old_vm, plan.decision.new_vm,
+                               round_idx, interrupted)
+        )
+        return self._complete_recovery(event, plan, task, old_vm, now_s,
+                                       "revocation")
+
+    # -- deadline settlement + §4.4 escalation -----------------------------
+    def deadline_expired(
+        self,
+        round_idx: int,
+        now_s: float,
+        deadline_s: float,
+        policy_deadline_s: float,
+        on_time: Sequence[str],
+        late: Sequence[str],
+    ) -> DeadlineExpired:
+        for task in on_time:
+            self.stragglers.clear(task)
+        return self.bus.publish(
+            DeadlineExpired(now_s, round_idx, float(deadline_s),
+                            float(policy_deadline_s),
+                            tuple(on_time), tuple(late))
+        )
+
+    def record_miss(self, task: str) -> Optional[int]:
+        """Advance the silo's miss streak; a non-None return means the
+        caller must escalate (the streak is already reset)."""
+        return self.stragglers.record_miss(task)
+
+    def clear_streak(self, task: str) -> None:
+        self.stragglers.clear(task)
+
+    def escalate(
+        self,
+        task: str,
+        placement: Placement,
+        old_vm: str,
+        now_s: float,
+        round_idx: int,
+        consecutive_misses: int,
+    ) -> RecoveryOutcome:
+        """§4.4 soft fault: replace a chronically slow silo's VM."""
+        plan = self.ft.handle_straggler(task, placement, old_vm, now_s, round_idx)
+        event = self.bus.publish(
+            StragglerEscalated(now_s, task, old_vm, plan.decision.new_vm,
+                               round_idx, consecutive_misses)
+        )
+        return self._complete_recovery(event, plan, task, old_vm, now_s,
+                                       "straggler")
+
+    # -- checkpoints & costs ----------------------------------------------
+    def checkpoint_round(self, round_idx: int, now_s: float) -> float:
+        """Run the FT module's per-round checkpoint bookkeeping; returns
+        (and publishes) the synchronous overhead charged to the round."""
+        overhead = self.ft.on_round_complete(round_idx, now_s)
+        if overhead > 0.0:
+            self.bus.publish(
+                CheckpointSaved(now_s, round_idx, "policy", overhead)
+            )
+        return overhead
+
+    def accrue_cost(
+        self, kind: str, amount: float, now_s: float, round_idx: int = 0
+    ) -> float:
+        if amount != 0.0:
+            self.bus.publish(CostAccrued(now_s, kind, amount, round_idx))
+        return amount
+
+    # -- trace views -------------------------------------------------------
+    @property
+    def revocation_events(self) -> List[RevocationOccurred]:
+        return cast(
+            List[RevocationOccurred], self.bus.events_of(RevocationOccurred)
+        )
+
+    @property
+    def escalation_events(self) -> List[StragglerEscalated]:
+        return cast(
+            List[StragglerEscalated], self.bus.events_of(StragglerEscalated)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fluent experiment builder
+# ---------------------------------------------------------------------------
+
+DeadlineSpec = Union[float, Callable[[int, Dict[str, float]], float], Any]
+
+
+class Experiment:
+    """Fluent, validated builder for Multi-FedLS runs.
+
+    Example (the paper's on-demand-server / spot-clients scenario with
+    T_round partial rounds)::
+
+        result = (Experiment.on(env).app(app)
+                  .markets(server="on_demand", clients="spot")
+                  .revocations(k_r=7200, seed=3)
+                  .checkpoints(every=10)
+                  .async_rounds(deadline=900.0, min_clients=4,
+                                escalate_after=2)
+                  .simulate())
+
+    Every method returns a *new* builder (chains never alias).
+    Cross-field coherence rules that only the builder can see (a
+    deadline without async rounds, a quorum without a deadline,
+    live-only knobs) are rejected in the setters; field-local
+    validation (markets, alpha, k_r, ...) lives in ONE place —
+    ``SimulationConfig.validate()`` — which :meth:`build` runs via the
+    shim's ``__post_init__`` plus the app-aware ``validate(app)``.
+    ``build()`` produces a plain validated ``SimulationConfig`` — the
+    legacy shim — so the simulator path is byte-identical to a
+    hand-built config.  :meth:`serve` builds the matching live
+    ``AsyncFLServer`` from the same chain.
+    """
+
+    def __init__(
+        self,
+        env: Optional["CloudEnvironment"] = None,
+        app: Optional["FLApplication"] = None,
+    ) -> None:
+        self._env = env
+        self._app = app
+        self._overrides: Dict[str, Any] = {}
+        self._deadline: Optional[DeadlineSpec] = None
+        self._min_clients: Optional[int] = None
+        self._carry_discount: float = 0.5
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def on(cls, env: "CloudEnvironment") -> "Experiment":
+        """Start a chain on a cloud environment (§3 environment model)."""
+        return cls(env=env)
+
+    def _clone(self, **changes: Any) -> "Experiment":
+        exp = Experiment(self._env, self._app)
+        exp._overrides = dict(self._overrides)
+        exp._deadline = self._deadline
+        exp._min_clients = self._min_clients
+        exp._carry_discount = self._carry_discount
+        for key, value in changes.items():
+            setattr(exp, key, value)
+        return exp
+
+    def _set(self, **config_fields: Any) -> "Experiment":
+        exp = self._clone()
+        exp._overrides.update(config_fields)
+        return exp
+
+    # -- fluent setters ----------------------------------------------------
+    def app(self, app: "FLApplication") -> "Experiment":
+        """Bind the FL application (§3 application model)."""
+        return self._clone(_app=app)
+
+    def rounds(self, n: int) -> "Experiment":
+        return self._set(n_rounds=int(n))
+
+    def objective(self, alpha: float) -> "Experiment":
+        """Cost/makespan trade-off weight (Eq. 3's alpha)."""
+        return self._set(alpha=float(alpha))
+
+    def markets(
+        self, server: str = "on_demand", clients: str = "on_demand"
+    ) -> "Experiment":
+        return self._set(server_market=server, client_market=clients)
+
+    def revocations(
+        self,
+        k_r: Optional[float] = None,
+        seed: int = 0,
+        remove_revoked: bool = True,
+    ) -> "Experiment":
+        """Poisson spot-revocation process (§5.6): mean seconds between
+        events; None disables revocations."""
+        return self._set(k_r=k_r, seed=int(seed), remove_revoked=remove_revoked)
+
+    def startup(self, vm_startup_s: float) -> "Experiment":
+        return self._set(vm_startup_s=float(vm_startup_s))
+
+    def checkpoints(
+        self,
+        policy: Optional[CheckpointPolicy] = None,
+        *,
+        every: Optional[int] = None,
+        client_every_round: bool = True,
+    ) -> "Experiment":
+        """§4.3 checkpointing: pass a :class:`CheckpointPolicy`, or the
+        ``every=N`` shorthand for server-checkpoint-every-N-rounds."""
+        if (policy is None) == (every is None):
+            raise ValueError("pass exactly one of policy= or every=")
+        if policy is None:
+            if every is not None and every < 1:
+                raise ValueError("every must be >= 1")
+            policy = CheckpointPolicy(
+                server_interval_rounds=int(every or 0),
+                client_every_round=client_every_round,
+            )
+        return self._set(checkpoint=policy)
+
+    def mapping(
+        self, greedy: bool = False, prices: str = "on_demand"
+    ) -> "Experiment":
+        """§4.2 Initial Mapping solver choice and solve-time prices
+        ("on_demand" | "actual")."""
+        return self._set(use_greedy_mapping=greedy, mapping_prices=prices)
+
+    def aggregation(
+        self, aggreg_time_fn: Optional[Callable[[str], float]]
+    ) -> "Experiment":
+        """Measured-engine hook for the server aggregation time (e.g.
+        ``repro.federated.agg_engine.make_measured_aggreg_fn``)."""
+        return self._set(aggreg_time_fn=aggreg_time_fn)
+
+    def async_rounds(
+        self,
+        enabled: bool = True,
+        *,
+        deadline: Optional[DeadlineSpec] = None,
+        min_clients: Optional[int] = None,
+        escalate_after: int = 2,
+        carry_discount: float = 0.5,
+    ) -> "Experiment":
+        """Streaming-fold rounds; optionally deadline-driven (T_round).
+
+        ``deadline`` accepts a fixed T_round in seconds, a
+        ``(round_idx, {client: arrival_s}) -> seconds`` callable, or a
+        live-engine ``RoundDeadline`` policy — the builder adapts it to
+        whichever target (:meth:`simulate` / :meth:`serve`) runs it.
+
+        Only coherence rules the builder alone can see are checked here
+        (field ranges are validated downstream: the shim's validate()
+        on build(), the engine/tracker constructors on serve()).
+        """
+        if not enabled and deadline is not None:
+            raise ValueError(
+                "a round deadline requires async rounds: partial rounds "
+                "are a mode of the streaming fold engine"
+            )
+        if min_clients is not None and deadline is None:
+            raise ValueError(
+                "min_clients is a deadline quorum: pass deadline= too "
+                "(without one, rounds barrier on the full count and the "
+                "quorum would be silently ignored)"
+            )
+        if not 0.0 <= carry_discount <= 1.0:
+            raise ValueError("carry_discount must be in [0, 1]")
+        exp = self._set(
+            async_rounds=enabled,
+            deadline_escalate_after=int(escalate_after),
+        )
+        exp._deadline = deadline if enabled else None
+        exp._min_clients = min_clients
+        exp._carry_discount = float(carry_discount)
+        return exp
+
+    # -- deadline adaptation ----------------------------------------------
+    def _resolved_min_clients(self) -> int:
+        if self._min_clients is not None:
+            return self._min_clients
+        policy_min = getattr(self._deadline, "min_clients", None)
+        return int(policy_min) if policy_min is not None else 1
+
+    def _sim_deadline(
+        self,
+    ) -> Optional[Union[float, Callable[[int, Dict[str, float]], float]]]:
+        """Adapt the deadline spec to the simulator's float-or-callable."""
+        spec = self._deadline
+        if spec is None:
+            return None
+        if isinstance(spec, (int, float)):
+            return float(spec)
+        from repro.federated.async_server import ClientArrival, RoundDeadline
+
+        if isinstance(spec, RoundDeadline):
+            if spec.min_weight_frac > 0.0:
+                # The virtual-clock simulator does not model per-silo
+                # example weights, so a weight quorum cannot be honored
+                # there — refusing beats silently diverging from serve().
+                raise ValueError(
+                    "the simulator target cannot honor a RoundDeadline "
+                    "min_weight_frac quorum (it has no per-silo example "
+                    "weights); use min_clients, or run this policy on the "
+                    "live target via .serve()"
+                )
+            policy = spec
+
+            def from_policy(round_idx: int, offsets: Dict[str, float]) -> float:
+                arrivals = {
+                    cid: ClientArrival(cid, t) for cid, t in offsets.items()
+                }
+                return float(policy.deadline_s(round_idx, arrivals))
+
+            return from_policy
+        if callable(spec):
+            return cast(Callable[[int, Dict[str, float]], float], spec)
+        raise TypeError(f"unsupported deadline spec: {spec!r}")
+
+    def _live_deadline(self) -> Any:
+        """Adapt the deadline spec to a live-engine RoundDeadline policy."""
+        spec = self._deadline
+        if spec is None:
+            return None
+        from repro.federated.async_server import (
+            CallableDeadline,
+            FixedDeadline,
+            RoundDeadline,
+        )
+
+        if isinstance(spec, RoundDeadline):
+            # An explicit .async_rounds(min_clients=...) override wins over
+            # the policy's own quorum, matching _resolved_min_clients() on
+            # the simulator target — one chain, one quorum, both targets.
+            if (
+                self._min_clients is not None
+                and spec.min_clients != self._min_clients
+            ):
+                spec = dataclasses.replace(spec, min_clients=self._min_clients)
+            return spec
+        min_clients = self._resolved_min_clients()
+        if isinstance(spec, (int, float)):
+            return FixedDeadline(t_round_s=float(spec), min_clients=min_clients)
+        if callable(spec):
+            return CallableDeadline(fn=spec, min_clients=min_clients)
+        raise TypeError(f"unsupported deadline spec: {spec!r}")
+
+    # -- terminal operations -----------------------------------------------
+    def build(self) -> "SimulationConfig":
+        """Validate the chain and produce the (shim) ``SimulationConfig``."""
+        from .simulator import SimulationConfig
+
+        if self._env is None:
+            raise ValueError("Experiment needs an environment: Experiment.on(env)")
+        if self._app is None:
+            raise ValueError("Experiment needs an application: .app(app)")
+        fields = dict(self._overrides)
+        if self._deadline is not None:
+            fields["round_deadline"] = self._sim_deadline()
+            fields["deadline_min_clients"] = self._resolved_min_clients()
+        config = SimulationConfig(**fields)
+        config.validate(self._app)
+        return config
+
+    def simulate(self) -> "SimulationResult":
+        """Build and run the virtual-clock simulator (§5 engine)."""
+        from .simulator import MultiCloudSimulator
+
+        config = self.build()
+        assert self._env is not None and self._app is not None
+        return MultiCloudSimulator(self._env, self._app, config).run()
+
+    # Chain settings that only the simulator target can honor: the live
+    # engine gets its revocations from the ArrivalSchedule, checkpoints
+    # from manager objects, and its round count from run(n).
+    _SIM_ONLY_FIELDS = frozenset({
+        "alpha", "server_market", "client_market", "k_r", "seed",
+        "vm_startup_s", "checkpoint", "remove_revoked", "n_rounds",
+        "use_greedy_mapping", "mapping_prices", "aggreg_time_fn",
+    })
+
+    def serve(
+        self,
+        clients: Sequence[Any],
+        initial_params: Any,
+        *,
+        schedule: Optional[Any] = None,
+        **server_kwargs: Any,
+    ) -> Any:
+        """Build the matching live ``AsyncFLServer`` from the same chain.
+
+        Unlike :meth:`build`, no environment/application is required —
+        the live engine runs real ``FLClient`` objects.  The sync
+        barrier protocol is the degenerate (InstantSchedule) case of the
+        same server.  Chain settings that only the simulator can honor
+        (markets, revocations, checkpoint policies, ...) are rejected
+        here rather than silently dropped — configure the live server
+        via ``serve(...)`` kwargs (checkpoint managers, fault hooks,
+        schedules) instead."""
+        from repro.federated.async_server import AsyncFLServer
+
+        stray = sorted(self._SIM_ONLY_FIELDS & set(self._overrides))
+        if stray:
+            raise ValueError(
+                f"builder settings {stray} apply only to the simulator "
+                "target (.build()/.simulate()); the live engine takes the "
+                "equivalent configuration as serve(...) keyword arguments"
+            )
+        return AsyncFLServer(
+            clients,
+            initial_params,
+            schedule=schedule,
+            round_deadline=self._live_deadline(),
+            carry_discount=self._carry_discount,
+            escalate_after=int(
+                self._overrides.get("deadline_escalate_after", 2)
+            ),
+            **server_kwargs,
+        )

@@ -49,6 +49,22 @@ class DeadlineRoundPlan:
     late: Tuple[str, ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """`CostModel.round_plan` output: one round's accounting under any of
+    the three protocols (barrier / streaming fold / T_round deadline).
+
+    ``client_times`` maps each client to its round-relative completion
+    offset (arrival for the streaming modes, arrival + aggregation for
+    the barrier); ``deadline`` is the partial-round partition when a
+    T_round was given, else None."""
+
+    span_s: float
+    client_times: Dict[str, float]
+    deadline: Optional[DeadlineRoundPlan] = None
+    policy_deadline_s: Optional[float] = None
+
+
 class CostModel:
     """Evaluates placements for one FL application on one environment."""
 
@@ -159,6 +175,47 @@ class CostModel:
             effective_deadline_s=effective,
             on_time=on_time,
             late=late,
+        )
+
+    def round_plan(
+        self,
+        arrival_offsets: Mapping[str, float],
+        server_vm: str,
+        *,
+        async_rounds: bool = False,
+        t_round_s: Optional[float] = None,
+        carry_in: int = 0,
+        min_clients: int = 1,
+    ) -> RoundPlan:
+        """Unified per-round accounting: pick the barrier (Eq. 16 /
+        Algorithm 1), streaming-fold, or T_round-deadline timeline from
+        one call — the control-plane round loop's single planning entry.
+        """
+        if t_round_s is not None and not async_rounds:
+            raise ValueError("a round deadline requires async rounds")
+        if t_round_s is not None:
+            plan = self.deadline_round_time(
+                arrival_offsets,
+                server_vm,
+                t_round_s,
+                carry_in=carry_in,
+                min_clients=min_clients,
+            )
+            return RoundPlan(
+                span_s=plan.span_s,
+                client_times=dict(arrival_offsets),
+                deadline=plan,
+                policy_deadline_s=float(t_round_s),
+            )
+        if async_rounds:
+            return RoundPlan(
+                span_s=self.async_round_time(arrival_offsets, server_vm),
+                client_times=dict(arrival_offsets),
+            )
+        t_aggreg = self.t_aggreg(server_vm)
+        client_times = {cid: t + t_aggreg for cid, t in arrival_offsets.items()}
+        return RoundPlan(
+            span_s=max(client_times.values()), client_times=client_times
         )
 
     def deadline_from_t_max(self, frac: float = 1.0) -> float:

@@ -1,32 +1,61 @@
 """Event-driven simulator of a Multi-FedLS execution (paper §5).
 
-Drives the four framework modules against a simulated multi-cloud clock:
-Initial Mapping places the tasks, spot revocations arrive as a global
-Poisson process (see `revocation`), the Fault Tolerance module reacts via
-the Dynamic Scheduler, and costs accrue per-VM-second plus per-message
-($/GB egress).
+The simulator is one *driver* of the shared control plane
+(`repro.core.control_plane.ControlPlane`): it advances a virtual clock
+and a billing ledger, while every orchestration decision — Initial
+Mapping, §4.3 revocation recovery, §4.4 straggler escalation,
+checkpoint bookkeeping — routes through the control plane's Protocol
+surfaces and leaves a typed event trace on its bus
+(`SimulationResult.trace`).  The live `repro.federated.async_server`
+engine drives the same bus with real training; only the clock differs.
 
 The simulator reproduces the paper's experiment grids (Tables 5-8, §5.7):
 scenarios {all-spot, on-demand-server + spot-clients, all-on-demand} x
 termination rates k_r in {3600, 7200, 14400} x checkpoint policies.
+
+Configuration: prefer the fluent, validated builder ::
+
+    Experiment.on(env).app(app).markets(clients="spot") \
+        .revocations(k_r=7200).async_rounds(deadline=900.0).simulate()
+
+``SimulationConfig`` remains as a thin deprecated shim for existing
+callers; it now validates its fields in ``__post_init__`` instead of
+failing rounds-deep into a run.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 from .application_model import FLApplication
 from .cloud_model import CloudEnvironment
-from .cost_model import SERVER, Assignment, CostModel, Placement
+from .control_plane import ControlPlane, SchedulerAPI
+from .cost_model import SERVER, Assignment, CostModel, DeadlineRoundPlan, Placement
 from .dynamic_scheduler import DynamicScheduler
+from .events import Event, EventBus, RevocationOccurred, StragglerEscalated
 from .fault_tolerance import CheckpointPolicy, FaultToleranceModule
 from .initial_mapping import InitialMapping, MappingSolution
-from .revocation import RevocationModel
+from .revocation import RevocationModel, RevocationSampler
+
+# Legacy names: the simulator's event records are the control plane's bus
+# events (same fields, same construction order), so traces and the
+# result's `events`/`escalations` lists speak one vocabulary.
+RevocationEvent = RevocationOccurred
+EscalationEvent = StragglerEscalated
 
 
 @dataclasses.dataclass
 class SimulationConfig:
+    """Deprecated shim — prefer `repro.core.control_plane.Experiment`.
+
+    Kept so existing callers/tests/benchmarks run unchanged; the fluent
+    builder produces exactly this object (see docs/control_plane.md for
+    the kwarg -> builder-method migration table).  Fields are validated
+    at construction; app-dependent coherence (quorum vs cohort size) is
+    re-checked by `validate(app)` at run start / `Experiment.build()`.
+    """
+
     alpha: float = 0.5
     server_market: str = "on_demand"
     client_market: str = "on_demand"
@@ -66,28 +95,49 @@ class SimulationConfig:
     # treated as a §4.4 soft fault and replaced via the Dynamic Scheduler.
     deadline_escalate_after: int = 2
 
+    def __post_init__(self) -> None:
+        self.validate()
 
-@dataclasses.dataclass
-class RevocationEvent:
-    time_s: float
-    task: str
-    old_vm: str
-    new_vm: str
-    round_idx: int
-    interrupted_round: bool
+    def validate(self, app: Optional[FLApplication] = None) -> None:
+        """Reject incoherent configurations up front.
 
-
-@dataclasses.dataclass
-class EscalationEvent:
-    """A silo's VM replaced for repeatedly missing round deadlines (§4.4
-    soft fault — the VM was alive, just too slow for T_round)."""
-
-    time_s: float
-    task: str
-    old_vm: str
-    new_vm: str
-    round_idx: int
-    consecutive_misses: int
+        Field-local checks run at construction; pass ``app`` (as the
+        simulator and `Experiment.build()` do) for the cohort-dependent
+        quorum check."""
+        if not 0.0 <= self.alpha <= 1.0:
+            raise ValueError("alpha must be in [0, 1]")
+        for market in (self.server_market, self.client_market):
+            if market not in ("on_demand", "spot"):
+                raise ValueError(
+                    f"market must be 'on_demand' or 'spot', got {market!r}"
+                )
+        if self.k_r is not None and self.k_r <= 0:
+            raise ValueError("k_r must be positive (or None to disable)")
+        if self.vm_startup_s < 0:
+            raise ValueError("vm_startup_s must be >= 0")
+        if self.n_rounds is not None and self.n_rounds < 1:
+            raise ValueError("n_rounds must be >= 1")
+        if self.mapping_prices not in ("on_demand", "actual"):
+            raise ValueError("mapping_prices must be 'on_demand' or 'actual'")
+        if self.round_deadline is not None and not self.async_rounds:
+            raise ValueError(
+                "round_deadline requires async_rounds=True (partial rounds "
+                "are a mode of the streaming fold engine)"
+            )
+        if self.deadline_min_clients < 1:
+            raise ValueError("deadline_min_clients must be >= 1")
+        if self.deadline_escalate_after < 1:
+            raise ValueError("deadline_escalate_after must be >= 1")
+        if (
+            app is not None
+            and self.round_deadline is not None
+            and self.deadline_min_clients > app.n_clients
+        ):
+            raise ValueError(
+                f"deadline_min_clients={self.deadline_min_clients} exceeds "
+                f"the cohort ({app.n_clients} silos): the quorum can never "
+                "be met"
+            )
 
 
 @dataclasses.dataclass
@@ -107,6 +157,10 @@ class SimulationResult:
     n_deadline_misses: int = 0           # late c_msg_train messages carried over
     carried_folds: int = 0               # stale folds drained into later rounds
     escalations: List[EscalationEvent] = dataclasses.field(default_factory=list)
+    # Full control-plane event trace (publication order; `events` and
+    # `escalations` are the RevocationOccurred / StragglerEscalated
+    # subsets of it).  scripts/trace_dump.py pretty-prints this.
+    trace: List[Event] = dataclasses.field(default_factory=list)
 
 
 class _Allocation:
@@ -119,8 +173,42 @@ class _Allocation:
         self.end_s: Optional[float] = None
 
 
+@dataclasses.dataclass
+class _RoundWindow:
+    """One round attempt on the virtual clock."""
+
+    round_idx: int
+    start_s: float
+    end_s: float  # extended by background VM replacements
+    client_times: Dict[str, float]     # round-relative completion offsets
+    arrival_offsets: Dict[str, float]  # exec + comm only (no aggregation)
+    deadline: Optional[DeadlineRoundPlan]
+    policy_deadline_s: Optional[float]
+    lost_late: Set[str] = dataclasses.field(default_factory=set)
+    replaced: Set[str] = dataclasses.field(default_factory=set)
+    carried_in: List[str] = dataclasses.field(default_factory=list)
+    carried_over: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _RunState:
+    """Virtual clock, billing ledger, and cross-round carry state."""
+
+    placement: Placement
+    allocations: Dict[str, _Allocation]
+    now: float
+    fl_start: float
+    retired: List[_Allocation] = dataclasses.field(default_factory=list)
+    next_rev: float = math.inf
+    comm_cost: float = 0.0
+    ckpt_overhead: float = 0.0
+    carry: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    n_deadline_misses: int = 0
+    carried_folds: int = 0
+
+
 class MultiCloudSimulator:
-    """Simulates one full Multi-FedLS run."""
+    """Simulates one full Multi-FedLS run by driving the control plane."""
 
     def __init__(
         self,
@@ -134,292 +222,351 @@ class MultiCloudSimulator:
         self.cost_model = CostModel(
             env, app, config.alpha, aggreg_time_fn=config.aggreg_time_fn
         )
-        self.scheduler = DynamicScheduler(self.cost_model)
+        self.scheduler: SchedulerAPI = DynamicScheduler(self.cost_model)
+        self.control: Optional[ControlPlane] = None  # built per run()
 
+    # ------------------------------------------------------------------
+    # The run loop: plan a round, drive revocations through the control
+    # plane, settle deadlines/checkpoints/costs, repeat.  All module
+    # interaction happens via ControlPlane's Protocol-typed verbs.
     # ------------------------------------------------------------------
     def run(self) -> SimulationResult:
         cfg = self.config
-        if cfg.round_deadline is not None and not cfg.async_rounds:
-            raise ValueError(
-                "round_deadline requires async_rounds=True (partial rounds "
-                "are a mode of the streaming fold engine)"
-            )
-        if cfg.deadline_escalate_after < 1:
-            raise ValueError("deadline_escalate_after must be >= 1")
+        cfg.validate(self.app)
         n_rounds = cfg.n_rounds if cfg.n_rounds is not None else self.app.n_rounds
         sampler = RevocationModel(cfg.k_r, cfg.seed).sampler()
+        cp = self.control = self._build_control_plane()
 
-        mapping = self._solve_initial_mapping()
-        placement: Placement = dict(mapping.placement)
-
-        policy = cfg.checkpoint or CheckpointPolicy(
-            server_interval_rounds=0, client_every_round=False
+        mapping = self._solve_initial_mapping(cp)
+        st = _RunState(
+            placement=dict(mapping.placement),
+            allocations={
+                task: _Allocation(a.vm_id, a.market, start_s=0.0)
+                for task, a in mapping.placement.items()
+            },
+            now=cfg.vm_startup_s,
+            fl_start=cfg.vm_startup_s,
         )
-        ckpt_enabled = cfg.checkpoint is not None
-        ft = FaultToleranceModule(
-            scheduler=self.scheduler,
-            policy=policy,
-            checkpoint_bytes=self.app.checkpoint_bytes if ckpt_enabled else 0,
-            vm_startup_s=cfg.vm_startup_s,
-            remove_revoked=cfg.remove_revoked,
-        )
-        ft.register_tasks(placement)
-
-        # Provision all VMs (in parallel): billing starts at t=0, FL work
-        # starts once the slowest VM is up.
-        allocations: Dict[str, _Allocation] = {
-            task: _Allocation(a.vm_id, a.market, start_s=0.0) for task, a in placement.items()
-        }
-        now = cfg.vm_startup_s
-        fl_start = now
-
-        comm_cost_total = 0.0
-        ckpt_overhead_total = 0.0
-        events: List[RevocationEvent] = []
-        retired: List[_Allocation] = []
-        next_rev = sampler.next_event_after(0.0)
-
-        # Deadline-driven partial rounds: stragglers carried between rounds
-        # and per-silo consecutive-miss streaks (§4.4 escalation).
-        carry_tasks: List[str] = []
-        miss_streak: Dict[str, int] = {}
-        escalations: List[EscalationEvent] = []
-        n_deadline_misses = 0
-        carried_folds_total = 0
+        cp.register_tasks(st.placement)
+        st.next_rev = sampler.next_event_after(0.0)
 
         round_idx = 1
         while round_idx <= n_rounds:
-            server_vm = placement[SERVER].vm_id
-            svm = self.env.vm_types[server_vm]
-            t_aggreg = self.cost_model.t_aggreg(server_vm)
-
-            arrival_offsets = {}
-            for c in self.app.clients:
-                cvm = self.env.vm_types[placement[c.client_id].vm_id]
-                arrival_offsets[c.client_id] = self.cost_model.t_exec(
-                    c.client_id, cvm.vm_id
-                ) + self.cost_model.t_comm(cvm.region, svm.region)
-            deadline_plan = None
-            if cfg.async_rounds and cfg.round_deadline is not None:
-                # Partial round: close at the (quorum-extended) T_round
-                # with whatever arrived; last round's stragglers fold
-                # first (carry_in), this round's land in the next one.
-                t_round = (
-                    cfg.round_deadline(round_idx, dict(arrival_offsets))
-                    if callable(cfg.round_deadline)
-                    else float(cfg.round_deadline)
-                )
-                deadline_plan = self.cost_model.deadline_round_time(
-                    arrival_offsets,
-                    server_vm,
-                    t_round,
-                    carry_in=len(carry_tasks),
-                    min_clients=cfg.deadline_min_clients,
-                )
-                client_times = dict(arrival_offsets)
-                round_span = deadline_plan.span_s
-            elif cfg.async_rounds:
-                # Streaming fold: each message is folded as it lands
-                # (t_aggreg/N per fold), so a client "completes" at its
-                # arrival; the round ends when the last fold drains.
-                client_times = dict(arrival_offsets)
-                round_span = self.cost_model.async_round_time(
-                    arrival_offsets, server_vm
-                )
-            else:
-                # Barrier: every client's round time carries the full
-                # aggregation term (paper Eq. 16 / Algorithm 1).
-                client_times = {
-                    cid: t + t_aggreg for cid, t in arrival_offsets.items()
-                }
-                round_span = max(client_times.values())
-            round_start = now
-            round_end = round_start + round_span
-
-            interrupted = False
-            lost_late: set = set()
-            replaced_this_round: set = set()
-            while next_rev <= round_end:
-                t_rev = next_rev
-                next_rev = sampler.next_event_after(t_rev)
-                spot_tasks = sorted(
-                    task for task, a in placement.items() if a.market == "spot"
-                )
-                victim = sampler.pick_victim(spot_tasks)
-                if victim is None:
-                    continue
-                alloc = allocations[victim]
-
-                is_late_client = (
-                    deadline_plan is not None and victim in deadline_plan.late
-                )
-                if victim != SERVER and (
-                    t_rev >= round_start + client_times[victim] or is_late_client
-                ):
-                    # The round is not waiting on this client — either its
-                    # weights already landed, or the deadline closed without
-                    # it (its update would only carry into the NEXT round).
-                    # Replace it in the background; the round result stands
-                    # but the next round cannot start before the new VM is
-                    # ready.  A late client revoked before delivery loses
-                    # its in-flight update: nothing to carry over.
-                    if is_late_client and t_rev < round_start + client_times[victim]:
-                        lost_late.add(victim)
-                    replaced_this_round.add(victim)
-                    plan = ft.handle_fault(victim, placement, alloc.vm_id, t_rev, round_idx)
-                    delay = ft.recovery_delay_s(plan)
-                    self._swap_allocation(allocations, retired, victim, plan.decision.new_vm, placement, t_rev)
-                    events.append(
-                        RevocationEvent(t_rev, victim, alloc.vm_id, plan.decision.new_vm, round_idx, False)
-                    )
-                    round_end = max(round_end, t_rev + delay)
-                    continue
-
-                # Revocation interrupts the round.
-                plan = ft.handle_fault(victim, placement, alloc.vm_id, t_rev, round_idx)
-                delay = ft.recovery_delay_s(plan)
-                self._swap_allocation(allocations, retired, victim, plan.decision.new_vm, placement, t_rev)
-                events.append(
-                    RevocationEvent(t_rev, victim, alloc.vm_id, plan.decision.new_vm, round_idx, True)
-                )
-
-                if victim == SERVER:
-                    # Weights recovered from the freshest checkpoint; rounds
-                    # after the checkpoint are lost and re-executed.
-                    resume = plan.resume_round if ckpt_enabled else 1
-                    round_idx = max(1, resume)
-                else:
-                    # The interrupted client redoes the current round; the
-                    # server re-sends the weights (extra s_msg_train egress).
-                    comm_cost_total += (
-                        self.app.messages.s_msg_train_gb
-                        * self.env.transfer_cost_gb(svm.provider)
-                    )
-                now = t_rev + delay
-                interrupted = True
-                break
-
-            if interrupted:
+            win = self._plan_round(round_idx, st)
+            cp.dispatch_round(
+                round_idx, self.app.n_clients, win.start_s,
+                # absolute-clock T_round, consistent with every other field
+                None if win.policy_deadline_s is None
+                else win.start_s + win.policy_deadline_s,
+            )
+            rewind = self._drive_revocations(win, st, sampler, cp)
+            if rewind is not None:
+                round_idx = rewind
                 continue  # re-enter the (possibly rewound) round
 
-            # Round completed.
-            now = round_end
-            if deadline_plan is not None:
-                # Last round's parked messages were folded this round;
-                # this round's late silos take their place in the buffer —
-                # minus any whose VM was revoked pre-delivery (update lost;
-                # the replacement trains the next round fresh, and the
-                # revocation already replaced the VM, so no miss streak).
-                carried_folds_total += len(carry_tasks)
-                n_deadline_misses += len(deadline_plan.late)
-                carry_tasks = [c for c in deadline_plan.late if c not in lost_late]
-                for cid in deadline_plan.on_time:
-                    miss_streak[cid] = 0
-                for cid in lost_late:
-                    miss_streak[cid] = 0
-                for cid in carry_tasks:
-                    if cid in replaced_this_round:
-                        # A revocation already provisioned this silo a fresh
-                        # VM mid-round; escalating at round end would replace
-                        # the replacement. The delivered-late message still
-                        # carries, but the slow-VM evidence is gone.
-                        miss_streak[cid] = 0
-                        continue
-                    streak = miss_streak.get(cid, 0) + 1
-                    if streak >= cfg.deadline_escalate_after:
-                        # §4.4 soft fault: replace the chronically slow VM
-                        # via the Dynamic Scheduler. The swap runs in the
-                        # background, but the silo cannot train the next
-                        # round before its replacement is up.
-                        old_vm = allocations[cid].vm_id
-                        plan = ft.handle_straggler(
-                            cid, placement, old_vm, round_end, round_idx
-                        )
-                        delay = ft.recovery_delay_s(plan)
-                        self._swap_allocation(
-                            allocations, retired, cid,
-                            plan.decision.new_vm, placement, round_end,
-                        )
-                        escalations.append(
-                            EscalationEvent(round_end, cid, old_vm,
-                                            plan.decision.new_vm, round_idx,
-                                            streak)
-                        )
-                        now = max(now, round_end + delay)
-                        streak = 0
-                    miss_streak[cid] = streak
-            if ckpt_enabled:
-                ov = ft.on_round_complete(round_idx, now)
-                ckpt_overhead_total += ov
-                now += ov
-            comm_cost_total += self.cost_model.comm_costs(placement)
+            st.now = win.end_s
+            self._publish_round_timeline(win, st, cp)
+            if win.deadline is not None:
+                self._settle_deadline(win, st, cp)
+            overhead = cp.checkpoint_round(round_idx, st.now)
+            st.ckpt_overhead += overhead
+            st.now += overhead
+            st.comm_cost += cp.accrue_cost(
+                "comm", self.cost_model.comm_costs(st.placement), st.now, round_idx
+            )
+            cp.close_round(round_idx, st.now, win.end_s - win.start_s,
+                           carried_over=win.carried_over,
+                           carried_in=win.carried_in)
             round_idx += 1
 
-        for alloc in allocations.values():
-            alloc.end_s = now
-            retired.append(alloc)
-
-        vm_cost = 0.0
-        for alloc in retired:
-            vm = self.env.vm_types[alloc.vm_id]
-            end = alloc.end_s if alloc.end_s is not None else now
-            vm_cost += vm.cost_per_second(alloc.market) * max(0.0, end - alloc.start_s)
+        for alloc in st.allocations.values():
+            alloc.end_s = st.now
+            st.retired.append(alloc)
+        vm_cost = self._vm_cost(st)
+        cp.accrue_cost("vm", vm_cost, st.now)
 
         return SimulationResult(
-            total_time_s=now,
-            fl_exec_time_s=now - fl_start,
-            total_cost=vm_cost + comm_cost_total,
+            total_time_s=st.now,
+            fl_exec_time_s=st.now - st.fl_start,
+            total_cost=vm_cost + st.comm_cost,
             vm_cost=vm_cost,
-            comm_cost=comm_cost_total,
-            n_revocations=len(events),
+            comm_cost=st.comm_cost,
+            n_revocations=len(cp.revocation_events),
             rounds_completed=n_rounds,
-            checkpoint_overhead_s=ckpt_overhead_total,
+            checkpoint_overhead_s=st.ckpt_overhead,
             initial_mapping=mapping,
-            events=events,
-            final_placement=placement,
-            n_deadline_misses=n_deadline_misses,
-            carried_folds=carried_folds_total,
-            escalations=escalations,
+            events=cp.revocation_events,
+            final_placement=st.placement,
+            n_deadline_misses=st.n_deadline_misses,
+            carried_folds=st.carried_folds,
+            escalations=cp.escalation_events,
+            trace=cp.bus.trace,
         )
 
     # ------------------------------------------------------------------
-    def _solve_initial_mapping(self) -> MappingSolution:
+    def _build_control_plane(self) -> ControlPlane:
+        cfg = self.config
+        policy = cfg.checkpoint or CheckpointPolicy(
+            server_interval_rounds=0, client_every_round=False
+        )
+        ft = FaultToleranceModule(
+            scheduler=self.scheduler,
+            policy=policy,
+            checkpoint_bytes=(
+                self.app.checkpoint_bytes if cfg.checkpoint is not None else 0
+            ),
+            vm_startup_s=cfg.vm_startup_s,
+            remove_revoked=cfg.remove_revoked,
+        )
+        return ControlPlane(
+            fault_tolerance=ft,
+            scheduler=self.scheduler,
+            mapper=self._build_mapper(),
+            bus=EventBus(),
+            escalate_after=cfg.deadline_escalate_after,
+        )
+
+    def _build_mapper(self) -> InitialMapping:
         if self.config.mapping_prices == "on_demand":
             solve_server, solve_client = "on_demand", "on_demand"
         else:
             solve_server = self.config.server_market
             solve_client = self.config.client_market
-        im = InitialMapping(
+        return InitialMapping(
             self.env,
             self.app,
             alpha=self.config.alpha,
             server_market=solve_server,
             client_market=solve_client,
         )
-        mapping = im.solve_greedy() if self.config.use_greedy_mapping else im.solve()
+
+    def _solve_initial_mapping(self, cp: ControlPlane) -> MappingSolution:
+        mapping = cp.solve_mapping(use_greedy=self.config.use_greedy_mapping)
         # Execution markets may differ from the solve-time prices.
-        placement = {
+        mapping.placement = {
             task: Assignment(
                 a.vm_id,
                 self.config.server_market if task == SERVER else self.config.client_market,
             )
             for task, a in mapping.placement.items()
         }
-        mapping.placement = placement
         return mapping
 
-    def _swap_allocation(
+    # ------------------------------------------------------------------
+    def _plan_round(self, round_idx: int, st: _RunState) -> _RoundWindow:
+        """Per-round accounting via `CostModel.round_plan` (barrier /
+        streaming / deadline timeline, selected by the config)."""
+        cfg = self.config
+        server_vm = st.placement[SERVER].vm_id
+        svm = self.env.vm_types[server_vm]
+        offsets: Dict[str, float] = {}
+        for c in self.app.clients:
+            cvm = self.env.vm_types[st.placement[c.client_id].vm_id]
+            offsets[c.client_id] = self.cost_model.t_exec(
+                c.client_id, cvm.vm_id
+            ) + self.cost_model.t_comm(cvm.region, svm.region)
+
+        t_round: Optional[float] = None
+        if cfg.async_rounds and cfg.round_deadline is not None:
+            t_round = (
+                cfg.round_deadline(round_idx, dict(offsets))
+                if callable(cfg.round_deadline)
+                else float(cfg.round_deadline)
+            )
+        plan = self.cost_model.round_plan(
+            offsets,
+            server_vm,
+            async_rounds=cfg.async_rounds,
+            t_round_s=t_round,
+            carry_in=len(st.carry),
+            min_clients=cfg.deadline_min_clients,
+        )
+        return _RoundWindow(
+            round_idx=round_idx,
+            start_s=st.now,
+            end_s=st.now + plan.span_s,
+            client_times=plan.client_times,
+            arrival_offsets=offsets,
+            deadline=plan.deadline,
+            policy_deadline_s=plan.policy_deadline_s,
+        )
+
+    # ------------------------------------------------------------------
+    def _drive_revocations(
         self,
-        allocations: Dict[str, _Allocation],
-        retired: List[_Allocation],
-        task: str,
-        new_vm: str,
-        placement: Placement,
-        revoke_time_s: float,
+        win: _RoundWindow,
+        st: _RunState,
+        sampler: RevocationSampler,
+        cp: ControlPlane,
+    ) -> Optional[int]:
+        """Process Poisson revocations inside the round window.
+
+        Returns None when the round completes, else the round index to
+        re-enter (the same round for a client fault, the checkpoint's
+        resume round for a server fault)."""
+        while st.next_rev <= win.end_s:
+            t_rev = st.next_rev
+            st.next_rev = sampler.next_event_after(t_rev)
+            spot_tasks = sorted(
+                task for task, a in st.placement.items() if a.market == "spot"
+            )
+            victim = sampler.pick_victim(spot_tasks)
+            if victim is None:
+                continue
+            old_vm = st.allocations[victim].vm_id
+
+            is_late = win.deadline is not None and victim in win.deadline.late
+            delivered = (
+                victim != SERVER
+                and t_rev >= win.start_s + win.client_times[victim]
+            )
+            # The round is not waiting on an already-delivered or
+            # deadline-cut client: replace it in the background; the
+            # round result stands but the next round cannot start before
+            # the new VM is ready.  A late client revoked before
+            # delivery loses its in-flight update: nothing to carry.
+            background = victim != SERVER and (delivered or is_late)
+            outcome = cp.revocation(
+                victim, st.placement, old_vm, t_rev, win.round_idx,
+                interrupted=not background,
+            )
+            self._swap_allocation(st, victim, outcome.plan.decision.new_vm, t_rev)
+            if background:
+                if is_late and not delivered:
+                    win.lost_late.add(victim)
+                win.replaced.add(victim)
+                win.end_s = max(win.end_s, t_rev + outcome.delay_s)
+                continue
+
+            if victim == SERVER:
+                # Weights recovered from the freshest checkpoint; rounds
+                # after the checkpoint are lost and re-executed.
+                next_round = max(1, outcome.plan.resume_round)
+            else:
+                # The interrupted client redoes the current round; the
+                # server re-sends the weights (extra s_msg_train egress).
+                next_round = win.round_idx
+                svm = self.env.vm_types[st.placement[SERVER].vm_id]
+                st.comm_cost += cp.accrue_cost(
+                    "resend",
+                    self.app.messages.s_msg_train_gb
+                    * self.env.transfer_cost_gb(svm.provider),
+                    t_rev,
+                    win.round_idx,
+                )
+            st.now = t_rev + outcome.delay_s
+            return next_round
+        return None
+
+    # ------------------------------------------------------------------
+    def _publish_round_timeline(
+        self, win: _RoundWindow, st: _RunState, cp: ControlPlane
     ) -> None:
-        old = allocations[task]
-        old.end_s = revoke_time_s
-        retired.append(old)
-        market = placement[task].market
-        placement[task] = Assignment(new_vm, market)
-        allocations[task] = _Allocation(new_vm, market, start_s=revoke_time_s)
+        """Emit the completed round's arrival/fold events.
+
+        Interrupted round attempts publish no timeline (they re-run);
+        per completed round the trace satisfies: every UpdateArrived is
+        matched by exactly one fresh UpdateFolded *or* an entry in the
+        round's carried_over set, and last round's carry drains first as
+        stale folds — the invariant tests/test_control_plane.py pins.
+
+        The simulator models unit example weights and no staleness
+        discount (its round accounting treats a carried fold as a full
+        fold), so every UpdateFolded here carries weight ==
+        folded_weight == 1.0; staleness is marked by origin_round.  Only
+        the live engine's trace carries real weights and the
+        carry_discount."""
+        late = set(win.deadline.late) if win.deadline is not None else set()
+        for task, origin in st.carry:
+            # Parked messages already sit on the server at dispatch.
+            cp.update_folded(win.round_idx, task, win.start_s,
+                             origin_round=origin)
+        order = sorted(win.arrival_offsets.items(), key=lambda kv: (kv[1], kv[0]))
+        for task, offset in order:
+            if task in win.lost_late:
+                continue  # revoked before delivery: the message never landed
+            cp.update_arrived(win.round_idx, task, win.start_s + offset)
+            if task not in late:
+                cp.update_folded(win.round_idx, task, win.start_s + offset)
+
+    # ------------------------------------------------------------------
+    def _settle_deadline(
+        self, win: _RoundWindow, st: _RunState, cp: ControlPlane
+    ) -> None:
+        """End-of-round carry-over bookkeeping and §4.4 escalation.
+
+        Last round's parked messages were folded this round; this
+        round's late silos take their place in the buffer — minus any
+        whose VM was revoked pre-delivery (update lost; the revocation
+        already replaced the VM, so no miss streak either)."""
+        deadline = win.deadline
+        assert deadline is not None
+        st.carried_folds += len(st.carry)
+        st.n_deadline_misses += len(deadline.late)
+        win.carried_in = [task for task, _ in st.carry]
+        policy_t = (
+            win.policy_deadline_s
+            if win.policy_deadline_s is not None
+            else deadline.effective_deadline_s
+        )
+        # deadline_s fields are published on the publisher's clock (the
+        # simulator's absolute virtual clock), like every other event
+        # field — DeadlineRoundPlan's times are dispatch-relative, so
+        # rebase onto the round start.
+        cp.deadline_expired(  # clears on-time miss streaks
+            win.round_idx, st.now,
+            win.start_s + deadline.effective_deadline_s,
+            win.start_s + policy_t,
+            deadline.on_time, deadline.late,
+        )
+        for task in win.lost_late:
+            cp.clear_streak(task)
+
+        new_carry = [
+            (task, win.round_idx)
+            for task in deadline.late
+            if task not in win.lost_late
+        ]
+        for task, _ in new_carry:
+            if task in win.replaced:
+                # A revocation already provisioned this silo a fresh VM
+                # mid-round; escalating at round end would replace the
+                # replacement.  The delivered-late message still carries,
+                # but the slow-VM evidence is gone.
+                cp.clear_streak(task)
+                continue
+            streak = cp.record_miss(task)
+            if streak is not None:
+                # §4.4 soft fault: replace the chronically slow VM via
+                # the Dynamic Scheduler.  The swap runs in the
+                # background, but the silo cannot train the next round
+                # before its replacement is up.
+                old_vm = st.allocations[task].vm_id
+                outcome = cp.escalate(
+                    task, st.placement, old_vm, win.end_s, win.round_idx, streak
+                )
+                self._swap_allocation(
+                    st, task, outcome.plan.decision.new_vm, win.end_s
+                )
+                st.now = max(st.now, win.end_s + outcome.delay_s)
+        st.carry = new_carry
+        win.carried_over = [task for task, _ in new_carry]
+
+    # ------------------------------------------------------------------
+    def _swap_allocation(
+        self, st: _RunState, task: str, new_vm: str, swap_time_s: float
+    ) -> None:
+        old = st.allocations[task]
+        old.end_s = swap_time_s
+        st.retired.append(old)
+        market = st.placement[task].market
+        st.placement[task] = Assignment(new_vm, market)
+        st.allocations[task] = _Allocation(new_vm, market, start_s=swap_time_s)
+
+    def _vm_cost(self, st: _RunState) -> float:
+        total = 0.0
+        for alloc in st.retired:
+            vm = self.env.vm_types[alloc.vm_id]
+            end = alloc.end_s if alloc.end_s is not None else st.now
+            total += vm.cost_per_second(alloc.market) * max(0.0, end - alloc.start_s)
+        return total

@@ -84,6 +84,16 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
 
 import jax
 
+from repro.core.control_plane import StragglerTracker
+from repro.core.events import (
+    DeadlineExpired,
+    EventBus,
+    RevocationOccurred,
+    RoundClosed,
+    StragglerEscalated,
+    UpdateArrived,
+    UpdateFolded,
+)
 from repro.core.revocation import RevocationModel, RevocationSampler
 from .agg_engine import AggregationEngine, CarryEntry, CarryOverBuffer
 from .client import ClientResult
@@ -92,6 +102,7 @@ __all__ = [
     "ArrivalSchedule",
     "AsyncFLServer",
     "AsyncRoundEngine",
+    "CallableDeadline",
     "ClientArrival",
     "CostModelDeadline",
     "DeterministicSchedule",
@@ -345,6 +356,22 @@ class QuantileDeadline(RoundDeadline):
 
 
 @dataclasses.dataclass(frozen=True)
+class CallableDeadline(RoundDeadline):
+    """Adapts a simulator-style ``(round_idx, {client: delay_s}) ->
+    seconds`` callable to the live engine's :class:`RoundDeadline`
+    surface — the ``Experiment`` builder uses this so one deadline spec
+    drives both the virtual-clock and the live target."""
+
+    fn: Any = None
+
+    def deadline_s(self, round_idx, arrivals):
+        if self.fn is None:
+            raise ValueError("CallableDeadline needs a callable fn")
+        offsets = {cid: a.delay_s for cid, a in arrivals.items()}
+        return float(self.fn(round_idx, offsets))
+
+
+@dataclasses.dataclass(frozen=True)
 class CostModelDeadline(RoundDeadline):
     """T_round derived from the cost model's worst-case round bound.
 
@@ -446,9 +473,18 @@ class AsyncRoundEngine:
     carry_discount : staleness discount applied to a carried-over update's
         example weight per round of lateness (``weight * discount**age``).
     escalate_after : consecutive deadline misses by the same silo before
-        it is reported in ``FoldReport.escalations`` (§4.4 soft-fault
-        escalation to the Dynamic Scheduler); the streak resets on an
-        on-time delivery or an escalation.
+        it is reported in ``FoldReport.escalations`` and published as a
+        :class:`~repro.core.events.StragglerEscalated` bus event (§4.4
+        soft-fault escalation to the Dynamic Scheduler); the streak is
+        tracked by the control plane's shared
+        :class:`~repro.core.control_plane.StragglerTracker` and resets
+        on an on-time delivery or an escalation.
+    bus : control-plane :class:`~repro.core.events.EventBus` the engine
+        publishes its typed fold trace on (UpdateArrived, UpdateFolded,
+        RevocationOccurred, DeadlineExpired, StragglerEscalated,
+        RoundClosed — all on the round's virtual clock).  None creates a
+        private recording bus; pass ``repro.core.events.NULL_BUS`` to
+        disable tracing entirely.
     """
 
     def __init__(
@@ -461,13 +497,12 @@ class AsyncRoundEngine:
         deadline: Optional[RoundDeadline] = None,
         carry_discount: float = 0.5,
         escalate_after: int = 2,
+        bus: Optional[EventBus] = None,
     ) -> None:
         if on_revocation not in ("rerequest", "exclude"):
             raise ValueError("on_revocation must be 'rerequest' or 'exclude'")
         if not 0.0 <= carry_discount <= 1.0:
             raise ValueError("carry_discount must be in [0, 1]")
-        if escalate_after < 1:
-            raise ValueError("escalate_after must be >= 1")
         self.agg_engine = agg_engine if agg_engine is not None else AggregationEngine()
         self.on_revocation = on_revocation
         self.recovery_delay_s = recovery_delay_s
@@ -476,10 +511,13 @@ class AsyncRoundEngine:
         self.deadline = deadline
         self.carry_discount = carry_discount
         self.escalate_after = escalate_after
+        self.bus = bus if bus is not None else EventBus()
         # Cross-round state: late updates awaiting their discounted fold,
-        # and per-silo consecutive deadline-miss streaks.
+        # and per-silo consecutive deadline-miss streaks (the same §4.4
+        # policy object the simulator's control plane uses — validates
+        # escalate_after >= 1).
         self.carry = CarryOverBuffer()
-        self._miss_streak: Dict[str, int] = {}
+        self.stragglers = StragglerTracker(escalate_after)
 
     # ------------------------------------------------------------------
     def fold_round(
@@ -512,7 +550,7 @@ class AsyncRoundEngine:
                 for a in arrivals.values()
             )
         ):
-            return self._fold_degenerate(results)
+            return self._fold_degenerate(round_idx, results)
 
         # Final delivery times after §4.3 re-request resolution, so the
         # deadline's quorum extension can see through a revocation: a
@@ -564,6 +602,11 @@ class AsyncRoundEngine:
                           weight=entry.weight, folded_weight=w_eff,
                           origin_round=entry.origin_round)
             )
+            self.bus.publish(
+                UpdateFolded(server_free, round_idx, entry.client_id,
+                             entry.weight, w_eff,
+                             origin_round=entry.origin_round)
+            )
 
         # Event heap: (effective arrival, seq, client_id, attempt, revoke_at).
         heap: List[Any] = []
@@ -575,6 +618,9 @@ class AsyncRoundEngine:
             arrival, _, cid, attempt, revoke_at = heapq.heappop(heap)
             if revoke_at is not None and revoke_at <= arrival:
                 # The silo died before its message landed: §4.3 recovery.
+                self.bus.publish(
+                    RevocationOccurred(revoke_at, cid, round_idx=round_idx)
+                )
                 if self.on_revocation == "rerequest" and attempt <= self.max_rerequests:
                     retrain = arrivals[cid].delay_s
                     re_arrival = revoke_at + self.recovery_delay_s + retrain
@@ -585,6 +631,7 @@ class AsyncRoundEngine:
                     excluded.append(cid)
                 continue
 
+            self.bus.publish(UpdateArrived(arrival, round_idx, cid, attempt))
             res = by_id[cid]
             if t_close is not None and arrival > t_close:
                 # Missed the (quorum-extended) deadline: park the update
@@ -596,11 +643,13 @@ class AsyncRoundEngine:
                                late_by_s=arrival - t_close)
                 )
                 carried_over.append(cid)
-                streak = self._miss_streak.get(cid, 0) + 1
-                if streak >= self.escalate_after:
+                streak = self.stragglers.record_miss(cid)
+                if streak is not None:
                     escalations.append(cid)
-                    streak = 0
-                self._miss_streak[cid] = streak
+                    self.bus.publish(
+                        StragglerEscalated(arrival, cid, round_idx=round_idx,
+                                           consecutive_misses=streak)
+                    )
                 continue
 
             t0 = time.monotonic()
@@ -612,12 +661,16 @@ class AsyncRoundEngine:
             server_free = end
             busy += cost
             if t_close is not None:
-                self._miss_streak[cid] = 0
+                self.stragglers.clear(cid)
             events.append(
                 FoldEvent(cid, arrival, start, end, attempt=attempt,
                           revoked_at_s=revoke_at,
                           weight=float(res.n_samples),
                           folded_weight=float(res.n_samples))
+            )
+            self.bus.publish(
+                UpdateFolded(end, round_idx, cid,
+                             float(res.n_samples), float(res.n_samples))
             )
 
         if not events:
@@ -657,6 +710,17 @@ class AsyncRoundEngine:
             # A barrier server waits for the last arrival, then does the
             # same total aggregation work in one go.
             barrier_span = last_arrival + busy
+        if t_close is not None:
+            on_time = tuple(e.client_id for e in events if not e.is_stale)
+            self.bus.publish(
+                DeadlineExpired(t_close, round_idx, t_close,
+                                policy_t if policy_t is not None else t_close,
+                                on_time, tuple(carried_over))
+            )
+        self.bus.publish(
+            RoundClosed(span, round_idx, span,
+                        tuple(carried_over), tuple(carried_in))
+        )
         return FoldReport(
             params=params,
             events=events,
@@ -675,7 +739,9 @@ class AsyncRoundEngine:
         )
 
     # ------------------------------------------------------------------
-    def _fold_degenerate(self, results: Sequence[ClientResult]) -> FoldReport:
+    def _fold_degenerate(
+        self, round_idx: int, results: Sequence[ClientResult]
+    ) -> FoldReport:
         """All messages present at dispatch: one fused batch reduce.
 
         This is the sync ``FLServer`` path — the barrier protocol is the
@@ -694,6 +760,13 @@ class AsyncRoundEngine:
                       folded_weight=float(r.n_samples))
             for r in results
         ]
+        for r in results:
+            self.bus.publish(UpdateArrived(0.0, round_idx, r.client_id))
+            self.bus.publish(
+                UpdateFolded(agg_s, round_idx, r.client_id,
+                             float(r.n_samples), float(r.n_samples))
+            )
+        self.bus.publish(RoundClosed(agg_s, round_idx, agg_s))
         return FoldReport(
             params=params,
             events=events,
@@ -730,9 +803,13 @@ class AsyncFLServer(FLServer):
     ``round_deadline`` turns on deadline-driven partial rounds: rounds
     close at the policy's (quorum-extended) T_round, late silos carry
     into the next round's discounted average, and each §4.4 escalation
-    (a silo with ``escalate_after`` consecutive misses) invokes
-    ``on_straggler(client_id, round_idx)`` — wire it to
-    ``DynamicScheduler.select_instance`` to reassign the slow silo's VM.
+    (a silo with ``escalate_after`` consecutive misses) is published as
+    a :class:`~repro.core.events.StragglerEscalated` event on the
+    server's control-plane bus.  ``on_straggler(client_id, round_idx)``
+    is a convenience hook invoked after each fold with *this server's*
+    escalations — wire it to ``DynamicScheduler.select_instance`` to
+    reassign the slow silo's VM; subscribe to the bus directly for the
+    full typed trace (the same vocabulary the simulator emits).
     """
 
     def __init__(
@@ -761,6 +838,7 @@ class AsyncFLServer(FLServer):
             deadline=round_deadline,
             carry_discount=carry_discount,
             escalate_after=escalate_after,
+            bus=self.bus,
         )
         self.on_straggler = on_straggler
         self.fold_reports: List[FoldReport] = []
@@ -773,6 +851,15 @@ class AsyncFLServer(FLServer):
     def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]) -> FoldReport:
         report = self._round_engine.fold_round(round_idx, results, self.schedule)
         self.fold_reports.append(report)
+        # §4.4 escalation decisions are made by the control plane's
+        # shared StragglerTracker and published as StragglerEscalated on
+        # the bus (subscribe there for the typed trace).  The
+        # on_straggler convenience hook is delivered from THIS server's
+        # report — no bus subscription, so servers sharing a bus never
+        # cross-dispatch each other's escalations, nothing pins the
+        # server to a long-lived bus, a NULL_BUS (tracing off) still
+        # recovers, and the hook fires after the round's FoldReport is
+        # visible in fold_reports (the PR-3 contract).
         if self.on_straggler is not None:
             for cid in report.escalations:
                 self.on_straggler(cid, round_idx)

@@ -30,6 +30,12 @@ from repro.checkpoint import (
     ServerCheckpointManager,
     resolve_freshest,
 )
+from repro.core.events import (
+    CheckpointSaved,
+    EventBus,
+    RecoveryCompleted,
+    RoundDispatched,
+)
 from .agg_engine import AggregationEngine
 from .aggregation import aggregate_metrics
 from .client import ClientResult, EvalResult, FLClient
@@ -83,6 +89,7 @@ class FLServer:
         fault_hook: Optional[Callable[[int], Optional[str]]] = None,
         measure_round_messages: bool = False,
         agg_engine: Optional[AggregationEngine] = None,
+        bus: Optional[EventBus] = None,
     ) -> None:
         self.clients = list(clients)
         self.params = initial_params
@@ -93,10 +100,21 @@ class FLServer:
         self.measure_round_messages = measure_round_messages
         self.start_round = 1
         self._round_engine = None  # lazily built (see _fold_phase)
+        # Control-plane bus: the round engine publishes fold-level events
+        # on the round's virtual clock; the server publishes lifecycle
+        # events (dispatch, checkpoints, recovery) on the wall clock
+        # relative to run() start.  One bus, one trace vocabulary —
+        # shared with the simulator (repro.core.events).
+        self.bus = bus if bus is not None else EventBus()
+        self._wall_t0 = time.monotonic()
+
+    def _wall(self) -> float:
+        return time.monotonic() - self._wall_t0
 
     # ------------------------------------------------------------------
     def run(self, n_rounds: int) -> FLRunResult:
         t_start = time.monotonic()
+        self._wall_t0 = t_start
         records: List[RoundRecord] = []
         r = self.start_round
         while r <= n_rounds:
@@ -105,8 +123,9 @@ class FLServer:
             if self.fault_hook is not None:
                 victim = self.fault_hook(r)
                 if victim == "s":
-                    restarted_from = self._recover_server()
+                    restarted_from = self._recover_server(resume_round=r)
 
+            self.bus.publish(RoundDispatched(self._wall(), r, len(self.clients)))
             rec = self._run_round(r, restarted_from)
             records.append(rec)
             r += 1
@@ -139,15 +158,36 @@ class FLServer:
         )
         eval_time = time.monotonic() - t1
 
-        # Checkpointing (§4.3).
+        # Checkpointing (§4.3).  Client and server saves are timed
+        # separately so each CheckpointSaved event carries only its own
+        # location's overhead (trace consumers sum overhead_s).
         t2 = time.monotonic()
+        saved_client = False
         for c in self.clients:
             mgr = self.client_ckpts.get(c.client_id)
             if mgr is not None:
                 mgr.save(round_idx, self.params)
-        if self.server_ckpt is not None and self.server_ckpt.should_checkpoint(round_idx):
+                saved_client = True
+        client_ckpt_time = time.monotonic() - t2
+        t3 = time.monotonic()
+        saved_server = (
+            self.server_ckpt is not None
+            and self.server_ckpt.should_checkpoint(round_idx)
+        )
+        if saved_server:
             self.server_ckpt.save(round_idx, self.params)
-        ckpt_time = time.monotonic() - t2
+        server_ckpt_time = time.monotonic() - t3
+        ckpt_time = client_ckpt_time + server_ckpt_time
+        if saved_client:
+            self.bus.publish(
+                CheckpointSaved(self._wall(), round_idx, "client_local",
+                                client_ckpt_time)
+            )
+        if saved_server:
+            self.bus.publish(
+                CheckpointSaved(self._wall(), round_idx, "server_remote",
+                                server_ckpt_time)
+            )
 
         log = measure_messages(self.params, metrics) if self.measure_round_messages else None
         return RoundRecord(
@@ -179,18 +219,23 @@ class FLServer:
         from .async_server import AsyncRoundEngine, InstantSchedule
 
         if self._round_engine is None:
-            self._round_engine = AsyncRoundEngine(self.agg_engine)
+            self._round_engine = AsyncRoundEngine(self.agg_engine, bus=self.bus)
         return self._round_engine.fold_round(round_idx, results, InstantSchedule())
 
     # ------------------------------------------------------------------
-    def _recover_server(self) -> str:
+    def _recover_server(self, resume_round: Optional[int] = None) -> str:
         """Server VM died: restore weights from the freshest checkpoint
         (paper §4.3 rule) and rewind the round counter accordingly.
 
         The freshest-wins resolution runs whenever *any* checkpoint source
         exists: client checkpoints alone can restore the server (the paper's
         "the FL server ... waits for any client to send its weights"), so a
-        missing ServerCheckpointManager must not skip resolution."""
+        missing ServerCheckpointManager must not skip resolution.
+
+        ``resume_round`` is the round the run loop (re-)executes after the
+        restore (the current round on the live path); it only feeds the
+        RecoveryCompleted trace event."""
+        resume = resume_round if resume_round is not None else self.start_round
         if self.server_ckpt is None and not self.client_ckpts:
             source, info = "none", None
         else:
@@ -198,10 +243,22 @@ class FLServer:
         if source == "none" or info is None:
             # No checkpoint anywhere: restart from scratch semantics is the
             # caller's job; here we just keep current in-memory weights.
+            self.bus.publish(
+                RecoveryCompleted(self._wall(), "s", resume, 0.0, "none")
+            )
             return "none"
         if source == "server":
             _, self.params = self.server_ckpt.restore(self.params, info)
         else:
             cid = source.split(":", 1)[1]
             _, self.params = self.client_ckpts[cid].restore(self.params)
+        # The documented trace vocabulary (events.py / the simulator's
+        # CheckpointRecord.location): server_remote | client_local:<cid>.
+        restored = (
+            "server_remote" if source == "server"
+            else f"client_local:{source.split(':', 1)[1]}"
+        )
+        self.bus.publish(
+            RecoveryCompleted(self._wall(), "s", resume, 0.0, restored)
+        )
         return source

@@ -272,12 +272,24 @@ def test_huge_deadline_degenerates_to_async_accounting(cloudlab_env):
 
 
 def test_round_deadline_requires_async_rounds(cloudlab_env):
-    app = til_application(n_rounds=2)
-    sim = MultiCloudSimulator(
-        cloudlab_env, app, SimulationConfig(k_r=None, round_deadline=10.0)
-    )
+    """The shim's __post_init__ rejects the silent misconfiguration at
+    construction (it used to surface only deep inside run())."""
     with pytest.raises(ValueError):
-        sim.run()
+        SimulationConfig(k_r=None, round_deadline=10.0)
+    # mutating a built config past validation is still caught at run()
+    cfg = SimulationConfig(k_r=None, async_rounds=True, round_deadline=10.0)
+    cfg.async_rounds = False
+    with pytest.raises(ValueError):
+        MultiCloudSimulator(cloudlab_env, til_application(n_rounds=2), cfg).run()
+
+
+def test_deadline_quorum_larger_than_cohort_rejected(cloudlab_env):
+    """deadline_min_clients > n_silos can never meet quorum; the run
+    rejects it up front (TIL has 4 clients)."""
+    cfg = SimulationConfig(k_r=None, async_rounds=True, round_deadline=10.0,
+                           deadline_min_clients=5)
+    with pytest.raises(ValueError):
+        MultiCloudSimulator(cloudlab_env, til_application(n_rounds=2), cfg).run()
 
 
 def test_late_silo_revocation_does_not_interrupt_partial_round(cloudlab_env):
