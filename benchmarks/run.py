@@ -21,6 +21,7 @@ def main() -> None:
         bench_pre_scheduling,
     )
     from .roofline_bench import bench_roofline_table
+    from .transport_bench import bench_transport
 
     benches = [
         bench_pre_scheduling,       # Tables 3, 4
@@ -34,6 +35,7 @@ def main() -> None:
         bench_async_round,          # streaming fold vs barrier under stragglers
         bench_deadline_round,       # T_round partial rounds vs barrier-on-count
         bench_control_plane,        # event-bus overhead vs NULL_BUS (<5%)
+        bench_transport,            # loopback socket rounds vs in-process
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,181 @@
+"""Socket-transport overhead benchmark.
+
+What does moving a §3 round onto real sockets cost over the in-process
+engine?  Same cohort, same fold engine, same bus vocabulary — the only
+difference is that ``LiveRoundDriver`` serializes every weight message
+(msgpack + raw buffers) and moves it through loopback TCP to thread
+workers, while ``AsyncFLServer`` hands pytrees over in memory.
+
+Measures, per param count:
+
+* ``live_round_s``  — median wall-clock round of a loopback
+  ``LiveRoundDriver`` over N instant stub workers (serialize + 2x wire
+  transfer per silo per phase + deserialize + fold);
+* ``inproc_round_s`` — median round of the in-process ``AsyncFLServer``
+  on the same stub cohort (InstantSchedule);
+* the derived per-round transport overhead and effective wire
+  throughput (payload bytes moved / extra time paid).
+
+Writes BENCH_transport.json (or --out) and prints
+``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
+
+Usage:
+  PYTHONPATH=src python benchmarks/transport_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated.async_server import AsyncFLServer, InstantSchedule
+from repro.federated.client import ClientResult, EvalResult
+from repro.federated.transport import LiveRoundDriver, ThreadWorkerPool
+
+Row = Tuple[str, float, str]
+
+N_CLIENTS = 4
+ROUNDS = 8
+FULL_PARAMS = [250_000, 1_000_000]
+QUICK_PARAMS = [250_000]
+
+
+class StubClient:
+    """Instant duck-typed FLClient: fixed params, no training compute —
+    isolates the transport/serialization cost from the learning cost."""
+
+    def __init__(self, client_id: str, params: Any, n_samples: int) -> None:
+        self.client_id = client_id
+        self._params = params
+        self._n = n_samples
+
+    def train(self, global_params: Any) -> ClientResult:
+        return ClientResult(self.client_id, self._params, self._n, 0.0)
+
+    def evaluate(self, aggregated_params: Any) -> EvalResult:
+        return EvalResult(self.client_id, {"loss": 1.0}, self._n, 0.0)
+
+
+def _make_cohort(n_clients: int, n_params: int) -> Tuple[List[StubClient], Any]:
+    rng = np.random.default_rng(0)
+    template = {
+        "w": jnp.zeros((n_params,), jnp.float32),
+    }
+    clients = [
+        StubClient(
+            f"c{i}",
+            {"w": jnp.asarray(rng.standard_normal(n_params), jnp.float32)},
+            10 * (i + 1),
+        )
+        for i in range(n_clients)
+    ]
+    return clients, template
+
+
+def bench_shape(n_params: int, rounds: int = ROUNDS) -> Dict[str, Any]:
+    clients, template = _make_cohort(N_CLIENTS, n_params)
+
+    driver = LiveRoundDriver(
+        ThreadWorkerPool(clients, template), template, reply_timeout_s=120.0
+    )
+    with driver:
+        driver.run(1)  # warm: jit traces, worker jit-through, TCP windows
+        live_times: List[float] = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            driver.run(1)
+            live_times.append(time.perf_counter() - t0)
+        log = driver.message_logs[-1]
+
+    server = AsyncFLServer(clients, template, schedule=InstantSchedule())
+    server.run(1)  # warm
+    inproc_times: List[float] = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        server.run(1)
+        inproc_times.append(time.perf_counter() - t0)
+
+    live_s = statistics.median(live_times)
+    inproc_s = statistics.median(inproc_times)
+    overhead_s = max(live_s - inproc_s, 0.0)
+    # Payload actually moved per round: train weights out+back and the
+    # aggregate out, per silo, plus the metric replies.
+    wire_bytes = log.total_bytes(N_CLIENTS)
+    throughput = wire_bytes / overhead_s if overhead_s > 0 else float("inf")
+    entry = {
+        "n_clients": N_CLIENTS,
+        "n_params": n_params,
+        "rounds": rounds,
+        "live_round_s": round(live_s, 6),
+        "inproc_round_s": round(inproc_s, 6),
+        "transport_overhead_s": round(overhead_s, 6),
+        "wire_bytes_per_round": wire_bytes,
+        "effective_throughput_mb_s": (
+            round(throughput / 1e6, 1) if overhead_s > 0 else None
+        ),
+    }
+    print(
+        f"[transport] P={n_params//1000}k x{N_CLIENTS}: "
+        f"inproc={inproc_s*1e3:.1f}ms live={live_s*1e3:.1f}ms "
+        f"(+{overhead_s*1e3:.1f}ms for {wire_bytes/1e6:.1f}MB on the wire"
+        + (f", {throughput/1e6:.0f}MB/s)" if overhead_s > 0 else ")"),
+        file=sys.stderr,
+    )
+    return entry
+
+
+def run_grid(quick: bool = False, rounds: int = ROUNDS) -> Dict[str, Any]:
+    params = QUICK_PARAMS if quick else FULL_PARAMS
+    return {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "entries": [bench_shape(p, rounds=rounds) for p in params],
+    }
+
+
+def bench_transport() -> List[Row]:
+    """run.py-compatible rows (quick grid)."""
+    report = run_grid(quick=True, rounds=4)
+    rows: List[Row] = []
+    for e in report["entries"]:
+        rows.append((
+            f"transport_live_{e['n_clients']}x{e['n_params']//1000}k",
+            e["live_round_s"] * 1e6,
+            f"inproc_us={e['inproc_round_s']*1e6:.0f};"
+            f"wire_mb={e['wire_bytes_per_round']/1e6:.1f};"
+            f"throughput_mb_s={e['effective_throughput_mb_s']}",
+        ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--out", default="BENCH_transport.json")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[transport] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for e in report["entries"]:
+        print(
+            f"transport_live_{e['n_clients']}x{e['n_params']},"
+            f"{e['live_round_s']*1e6:.1f},"
+            f"inproc_us={e['inproc_round_s']*1e6:.1f};"
+            f"wire_mb={e['wire_bytes_per_round']/1e6:.1f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

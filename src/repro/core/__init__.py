@@ -23,8 +23,12 @@ Module map (paper Fig. 1, re-architected around a typed control plane):
                                       straggler escalation, checkpoints)
                                       + the fluent `Experiment` builder
     revocation + simulator          : §5 experiment engine — one driver
-                                      of the control plane; the live
-                                      driver is repro.federated
+                                      of the control plane; the others
+                                      live in repro.federated: the
+                                      in-process async engine and the
+                                      wall-clock socket transport
+                                      (federated.transport, built via
+                                      Experiment.transport().serve())
 
 Prefer `Experiment.on(env).app(app)...simulate()` over constructing the
 deprecated `SimulationConfig` shim directly; see docs/control_plane.md.

@@ -498,6 +498,7 @@ class Experiment:
         self._deadline: Optional[DeadlineSpec] = None
         self._min_clients: Optional[int] = None
         self._carry_discount: float = 0.5
+        self._transport: Optional[Dict[str, Any]] = None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -511,6 +512,7 @@ class Experiment:
         exp._deadline = self._deadline
         exp._min_clients = self._min_clients
         exp._carry_discount = self._carry_discount
+        exp._transport = None if self._transport is None else dict(self._transport)
         for key, value in changes.items():
             setattr(exp, key, value)
         return exp
@@ -626,6 +628,56 @@ class Experiment:
         exp._carry_discount = float(carry_discount)
         return exp
 
+    def transport(
+        self,
+        kind: str = "thread",
+        *,
+        reply_timeout_s: Optional[float] = None,
+        on_revocation: str = "rerequest",
+        max_rerequests: int = 1,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        startup_timeout_s: float = 30.0,
+    ) -> "Experiment":
+        """Run :meth:`serve` over the wall-clock socket transport.
+
+        With a transport configured, :meth:`serve` returns a
+        ``repro.federated.transport.LiveRoundDriver`` whose silos are
+        real ``FLClient`` workers behind length-prefixed TCP sockets —
+        ``kind="thread"`` (CI-friendly loopback threads; ``serve`` takes
+        the client objects) or ``kind="process"`` (``multiprocessing``
+        spawn; ``serve`` takes a ``{client_id: factory}`` mapping of
+        picklable constructors).  The chain's deadline / carry /
+        escalation settings apply unchanged: the driver replays measured
+        arrivals through the same fold engine, so simulated, in-process,
+        and socket-backed runs share one configuration surface and one
+        trace vocabulary.
+
+        ``reply_timeout_s`` bounds each phase's physical wait before a
+        silent silo becomes a §4.3 suspected fault (None waits
+        indefinitely); ``on_revocation`` / ``max_rerequests`` pick the
+        §4.3 recovery rule for crashed workers.
+        """
+        if kind not in ("thread", "process"):
+            raise ValueError("transport kind must be 'thread' or 'process'")
+        if on_revocation not in ("rerequest", "exclude"):
+            raise ValueError("on_revocation must be 'rerequest' or 'exclude'")
+        if reply_timeout_s is not None and reply_timeout_s <= 0.0:
+            raise ValueError("reply_timeout_s must be positive (or None)")
+        if max_rerequests < 0:
+            raise ValueError("max_rerequests must be >= 0")
+        exp = self._clone()
+        exp._transport = {
+            "kind": kind,
+            "reply_timeout_s": reply_timeout_s,
+            "on_revocation": on_revocation,
+            "max_rerequests": max_rerequests,
+            "host": host,
+            "port": port,
+            "startup_timeout_s": startup_timeout_s,
+        }
+        return exp
+
     # -- deadline adaptation ----------------------------------------------
     def _resolved_min_clients(self) -> int:
         if self._min_clients is not None:
@@ -732,24 +784,25 @@ class Experiment:
 
     def serve(
         self,
-        clients: Sequence[Any],
+        clients: Union[Sequence[Any], Mapping[str, Any]],
         initial_params: Any,
         *,
         schedule: Optional[Any] = None,
         **server_kwargs: Any,
     ) -> Any:
-        """Build the matching live ``AsyncFLServer`` from the same chain.
+        """Build the matching live target from the same chain.
 
-        Unlike :meth:`build`, no environment/application is required —
-        the live engine runs real ``FLClient`` objects.  The sync
-        barrier protocol is the degenerate (InstantSchedule) case of the
-        same server.  Chain settings that only the simulator can honor
-        (markets, revocations, checkpoint policies, ...) are rejected
-        here rather than silently dropped — configure the live server
-        via ``serve(...)`` kwargs (checkpoint managers, fault hooks,
-        schedules) instead."""
-        from repro.federated.async_server import AsyncFLServer
-
+        Without a :meth:`transport` in the chain this is the in-process
+        ``AsyncFLServer`` (real ``FLClient`` objects, arrivals modeled by
+        an ``ArrivalSchedule``); with one it is the wall-clock
+        ``LiveRoundDriver`` (real workers behind sockets, arrivals
+        measured).  Unlike :meth:`build`, no environment/application is
+        required.  The sync barrier protocol is the degenerate
+        (InstantSchedule) case of the same server.  Chain settings that
+        only the simulator can honor (markets, revocations, checkpoint
+        policies, ...) are rejected here rather than silently dropped —
+        configure the live target via ``serve(...)`` kwargs (checkpoint
+        managers, fault hooks, schedules, cost models) instead."""
         stray = sorted(self._SIM_ONLY_FIELDS & set(self._overrides))
         if stray:
             raise ValueError(
@@ -757,14 +810,66 @@ class Experiment:
                 "target (.build()/.simulate()); the live engine takes the "
                 "equivalent configuration as serve(...) keyword arguments"
             )
+        # Chain-derived engine settings; an explicit serve(...) kwarg wins.
+        server_kwargs.setdefault("round_deadline", self._live_deadline())
+        server_kwargs.setdefault("carry_discount", self._carry_discount)
+        server_kwargs.setdefault(
+            "escalate_after",
+            int(self._overrides.get("deadline_escalate_after", 2)),
+        )
+        spec = self._transport
+        if spec is not None:
+            if schedule is not None:
+                raise ValueError(
+                    "an ArrivalSchedule is a virtual-clock concept; the "
+                    "socket transport measures real arrivals — drop "
+                    "schedule= or drop .transport()"
+                )
+            from repro.federated.transport import (
+                LiveRoundDriver,
+                ProcessWorkerPool,
+                SocketTransport,
+                ThreadWorkerPool,
+            )
+
+            if spec["kind"] == "process":
+                if not isinstance(clients, Mapping):
+                    raise TypeError(
+                        "transport kind='process' takes a {client_id: "
+                        "picklable factory} mapping, not client objects "
+                        "(they must be constructible in the child process)"
+                    )
+                workers: Any = ProcessWorkerPool(clients, initial_params)
+            else:
+                if isinstance(clients, Mapping):
+                    raise TypeError(
+                        "transport kind='thread' takes a sequence of "
+                        "FLClient objects (factories are for process mode)"
+                    )
+                workers = ThreadWorkerPool(clients, initial_params)
+            return LiveRoundDriver(
+                workers,
+                initial_params,
+                transport=SocketTransport(
+                    host=str(spec["host"]), port=int(spec["port"])
+                ),
+                on_revocation=str(spec["on_revocation"]),
+                max_rerequests=int(spec["max_rerequests"]),
+                reply_timeout_s=spec["reply_timeout_s"],
+                startup_timeout_s=float(spec["startup_timeout_s"]),
+                **server_kwargs,
+            )
+        if isinstance(clients, Mapping):
+            raise TypeError(
+                "client factories require the socket transport: add "
+                ".transport(kind='process') to the chain, or pass "
+                "FLClient objects"
+            )
+        from repro.federated.async_server import AsyncFLServer
+
         return AsyncFLServer(
             clients,
             initial_params,
             schedule=schedule,
-            round_deadline=self._live_deadline(),
-            carry_discount=self._carry_discount,
-            escalate_after=int(
-                self._overrides.get("deadline_escalate_after", 2)
-            ),
             **server_kwargs,
         )

@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
-from .application_model import FLApplication
+from .application_model import FLApplication, MessageSizes
 from .cloud_model import CloudEnvironment, VMType
 
 SERVER = "s"
@@ -225,6 +225,19 @@ class CostModel:
         if frac <= 0.0:
             raise ValueError("frac must be positive")
         return frac * self.t_max()
+
+    def update_message_sizes(self, sizes: MessageSizes) -> None:
+        """Replace the app's estimated message sizes with *measured* ones.
+
+        The live socket transport measures each round's serialized
+        payloads (`repro.federated.messages.measure_messages` semantics
+        on real wire bytes) and feeds them back here through
+        `to_cost_model_sizes`, so Eq.-6 communication costs track what
+        the run actually moved.  The cached Eq.-7 cost bound depends on
+        message volume and is invalidated; t_max does not (it has no
+        per-GB term)."""
+        self.app = dataclasses.replace(self.app, messages=sizes)
+        self._cost_max = None
 
     def comm_cost(self, client_provider: str, server_provider: str) -> float:
         """Eq. 6: comm_{jm} with j = client's provider, m = server's."""

@@ -123,14 +123,31 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ClientArrival:
-    """One client's ``c_msg_train`` arrival event on the round's virtual clock."""
+    """One client's ``c_msg_train`` arrival event on the round's virtual clock.
+
+    ``re_arrival_s`` is the *recorded* §4.3 re-request arrival: the live
+    socket transport physically restarts a crashed worker and measures
+    when its retrained update lands, so the engine replays that measured
+    time instead of computing ``revoke_at + recovery_delay + delay``.
+    ``math.inf`` means the re-request never landed inside the round's
+    horizon — the silo is excluded; None keeps the virtual-clock model.
+    """
 
     client_id: str
     delay_s: float                      # dispatch -> message-on-server
     revoke_at_s: Optional[float] = None  # spot VM revoked at this time (None = survives)
+    re_arrival_s: Optional[float] = None  # measured re-request arrival (live transport)
 
     def delivered_before_revocation(self) -> bool:
         return self.revoke_at_s is None or self.revoke_at_s > self.delay_s
+
+    def rerequest_arrival(self, recovery_delay_s: float) -> float:
+        """When the re-requested update lands: the recorded time if the
+        transport measured one, else the virtual-clock model."""
+        if self.re_arrival_s is not None:
+            return self.re_arrival_s
+        assert self.revoke_at_s is not None
+        return self.revoke_at_s + recovery_delay_s + self.delay_s
 
 
 class ArrivalSchedule:
@@ -563,9 +580,9 @@ class AsyncRoundEngine:
                 if a.delivered_before_revocation():
                     deliveries[cid] = a.delay_s
                 elif self.on_revocation == "rerequest" and self.max_rerequests >= 1:
-                    deliveries[cid] = (
-                        a.revoke_at_s + self.recovery_delay_s + a.delay_s
-                    )
+                    re_t = a.rerequest_arrival(self.recovery_delay_s)
+                    if math.isfinite(re_t):
+                        deliveries[cid] = re_t
             weights = {cid: float(by_id[cid].n_samples) for cid in deliveries}
             policy_t = float(deadline.deadline_s(round_idx, arrivals))
             t_close = deadline.effective_deadline(
@@ -622,8 +639,14 @@ class AsyncRoundEngine:
                     RevocationOccurred(revoke_at, cid, round_idx=round_idx)
                 )
                 if self.on_revocation == "rerequest" and attempt <= self.max_rerequests:
-                    retrain = arrivals[cid].delay_s
-                    re_arrival = revoke_at + self.recovery_delay_s + retrain
+                    re_arrival = arrivals[cid].rerequest_arrival(
+                        self.recovery_delay_s
+                    )
+                    if math.isinf(re_arrival):
+                        # Recorded recovery (live transport): the
+                        # re-request never landed inside the horizon.
+                        excluded.append(cid)
+                        continue
                     heapq.heappush(heap, (re_arrival, seq, cid, attempt + 1, None))
                     seq += 1
                     rerequested.append(cid)

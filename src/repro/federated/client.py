@@ -39,7 +39,10 @@ class FLClient:
 
     loss_fn(params, batch) -> scalar; batch is whatever the silo yields
     (tuple converted via `batch_fn`). eval_fn(params, batch) -> dict of
-    sums (e.g. {"n_correct": ..., "nll_sum": ...}) reduced over batches.
+    per-batch values reduced over batches: keys with a ``_sum`` suffix
+    (e.g. ``{"nll_sum": ...}``) are example-weighted sums that `evaluate`
+    averages (dividing by the split size, suffix stripped); any other key
+    is reported as its plain total across batches, untouched.
     """
 
     def __init__(
@@ -79,18 +82,26 @@ class FLClient:
         # Fresh optimizer state per round (clients are stateless across
         # rounds w.r.t. the optimizer; only weights flow through the server).
         opt_state = self.optimizer.init(params)
-        n = 0
+        # n_samples is the silo's per-epoch example count — the FedAvg
+        # weight (§3).  Count one epoch's pass exactly rather than
+        # dividing the multi-epoch total: with ragged last batches the
+        # per-epoch counts are equal, but integer-dividing the sum would
+        # under-count whenever an epoch's total isn't a multiple of
+        # local_epochs, skewing weights across silos with different
+        # batch remainders.
+        n_first_epoch = 0
         last_loss = None
-        for _ in range(self.local_epochs):
+        for epoch in range(self.local_epochs):
             for raw in self.silo.batches(self.batch_size, split="train"):
                 batch = self.batch_fn(raw)
                 params, opt_state, last_loss = self._train_step(params, opt_state, batch)
-                n += _batch_count(raw)
+                if epoch == 0:
+                    n_first_epoch += _batch_count(raw)
         jax.block_until_ready(last_loss)
         return ClientResult(
             client_id=self.client_id,
             params=params,
-            n_samples=n // self.local_epochs if self.local_epochs else n,
+            n_samples=n_first_epoch,
             train_time_s=time.monotonic() - t0,
         )
 
@@ -108,7 +119,16 @@ class FLClient:
             for k, v in out.items():
                 sums[k] = sums.get(k, 0.0) + float(v)
             n += _batch_count(raw)
-        metrics = {k.replace("_sum", ""): v / max(n, 1) for k, v in sums.items()}
+        # Average only the keys that declare themselves example-weighted
+        # sums via a "_sum" suffix, stripping exactly that suffix.  A
+        # blanket k.replace("_sum", "")/n would mangle keys merely
+        # *containing* the substring (loss_summary -> losmary) and turn
+        # already-normalized metrics into nonsense rates.
+        metrics = {
+            (k[: -len("_sum")] if k.endswith("_sum") else k):
+                (v / max(n, 1) if k.endswith("_sum") else v)
+            for k, v in sums.items()
+        }
         return EvalResult(
             client_id=self.client_id,
             metrics=metrics,

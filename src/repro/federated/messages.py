@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict
 
+import msgpack
+
 from repro.checkpoint.serializer import pytree_num_bytes, serialize_pytree
 from repro.core.application_model import MessageSizes
 
@@ -32,10 +34,21 @@ class RoundMessageLog:
         )
 
 
+def serialize_metrics(metrics: Dict[str, float]) -> bytes:
+    """The wire form of a ``c_msg_test`` payload (msgpack, like weights)."""
+    return msgpack.packb(
+        {str(k): float(v) for k, v in metrics.items()}, use_bin_type=True
+    )
+
+
 def measure_messages(params: Any, metrics_example: Dict[str, float]) -> RoundMessageLog:
-    """Measure real serialized sizes for one round's message set."""
+    """Measure real serialized sizes for one round's message set.
+
+    All four messages are measured from their actual serialized payloads
+    — the metrics dict included, so Eq.-6 communication costs never mix
+    measured weight transfers with a guessed per-key constant."""
     weight_bytes = len(serialize_pytree(params))
-    metric_bytes = 64 * max(len(metrics_example), 1)
+    metric_bytes = len(serialize_metrics(metrics_example))
     return RoundMessageLog(
         s_msg_train_bytes=weight_bytes,
         c_msg_train_bytes=weight_bytes,

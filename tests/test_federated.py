@@ -120,6 +120,93 @@ def test_message_sizes_reflect_model():
     assert log.total_bytes(4) == 4 * (3 * log.s_msg_train_bytes + log.c_msg_test_bytes)
 
 
+def test_c_msg_test_measured_from_serialized_metrics():
+    """c_msg_test is measured from the actual serialized metrics dict,
+    like the three weight messages — not guessed at 64 bytes per key."""
+    from repro.federated.messages import serialize_metrics
+
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    small = measure_messages(params, {"a": 1.0})
+    big_metrics = {
+        f"metric_with_a_long_descriptive_name_{i}": float(i) for i in range(12)
+    }
+    big = measure_messages(params, big_metrics)
+    assert small.c_msg_test_bytes == len(serialize_metrics({"a": 1.0}))
+    assert big.c_msg_test_bytes == len(serialize_metrics(big_metrics))
+    assert big.c_msg_test_bytes > small.c_msg_test_bytes
+    assert big.c_msg_test_bytes != 64 * len(big_metrics)
+
+
+# ---------------------------------------------------------------------------
+# Client accounting (n_samples / metric reduction)
+# ---------------------------------------------------------------------------
+
+def test_evaluate_averages_only_sum_suffixed_keys():
+    """Keys ending in _sum are averaged with the suffix stripped; other
+    keys pass through as plain totals — no substring mangling
+    (loss_summary must not become 'losmary'), no spurious division."""
+    from repro.optim import make_optimizer
+
+    class Silo:
+        client_id = "c0"
+
+        def batches(self, batch_size, split="train"):
+            yield (np.zeros((3, 2), np.float32),)
+            yield (np.zeros((2, 2), np.float32),)
+
+    def eval_fn(params, batch):
+        n = batch[0].shape[0]
+        return {
+            "nll_sum": jnp.asarray(2.0 * n),     # example-weighted sum
+            "loss_summary": jnp.asarray(1.0),    # per-batch scalar, totaled
+            "n_correct": jnp.asarray(float(n)),  # plain count, totaled
+        }
+
+    client = FLClient(
+        "c0", Silo(), lambda p, b: jnp.sum(p["w"]),
+        make_optimizer("sgdm", 0.1), batch_size=3, eval_fn=eval_fn,
+    )
+    res = client.evaluate({"w": jnp.zeros((2,), jnp.float32)})
+    assert res.n_samples == 5
+    assert set(res.metrics) == {"nll", "loss_summary", "n_correct"}
+    assert res.metrics["nll"] == pytest.approx(2.0)           # (6+4)/5
+    assert res.metrics["loss_summary"] == pytest.approx(2.0)  # 2 batches
+    assert res.metrics["n_correct"] == pytest.approx(5.0)     # not divided
+
+
+def test_train_counts_one_epoch_exactly():
+    """n_samples is one epoch's exact example count — not the multi-epoch
+    total integer-divided by local_epochs, which under-counts whenever
+    epochs see ragged/unequal batch totals (streaming silos)."""
+    from repro.optim import make_optimizer
+
+    class StreamingSilo:
+        """Each epoch's pass sees a different number of examples."""
+
+        client_id = "c0"
+
+        def __init__(self):
+            self.calls = 0
+
+        def batches(self, batch_size, split="train"):
+            self.calls += 1
+            n = 5 if self.calls == 1 else 8
+            x = np.zeros((n, 2), np.float32)
+            for i in range(0, n, batch_size):
+                yield (x[i:i + batch_size],)
+
+    def loss_fn(p, batch):
+        return jnp.sum(p["w"] ** 2) + 0.0 * jnp.sum(batch[0])
+
+    client = FLClient(
+        "c0", StreamingSilo(), loss_fn, make_optimizer("sgdm", 0.1),
+        batch_size=4, local_epochs=2,
+    )
+    res = client.train({"w": jnp.ones((2,), jnp.float32)})
+    # First epoch saw exactly 5 examples; the old (5+8)//2 gave 6.
+    assert res.n_samples == 5
+
+
 # ---------------------------------------------------------------------------
 # Server orchestration + fault recovery
 # ---------------------------------------------------------------------------
