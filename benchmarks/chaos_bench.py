@@ -1,0 +1,307 @@
+"""Chaos recovery-cost benchmark (MTTR + rounds lost).
+
+What does a seeded fault plan *cost*?  Runs the same paced stub cohort
+through the wall-clock ``LiveRoundDriver`` twice:
+
+* **fault-free** — no chaos, the baseline round cadence;
+* **chaos** — a 6-fault seeded :class:`FaultPlan` (crash, slow,
+  corrupt_frame, hang, a §4.4 cross-host revocation, and §4.3
+  checkpoint sabotage) with heartbeats, reconnect/backoff, a
+  ``DynamicScheduler`` for replacement VMs, and verified checkpoint
+  managers — i.e. every hardening layer is live and paying its way.
+
+Measures:
+
+* ``fault_free_round_s`` / ``chaos_round_s`` — median round wall time;
+* ``recovery_overhead_s`` — total extra wall paid for the whole plan;
+* ``mttr_s`` — recovery overhead / faults injected (mean time to
+  repair, §5.6's "time to recover" in miniature);
+* ``rounds_lost`` — rounds whose fold lost cohort weight despite the
+  recovery machinery (the framework's target is 0: every fault is
+  re-requested, restarted, or restored within its round).
+
+Writes BENCH_chaos.json (or --out), optionally the full chaos event
+trace (--trace-out), and prints ``name,us_per_call,derived`` CSV rows
+like benchmarks/run.py.
+
+Usage:
+  PYTHONPATH=src python benchmarks/chaos_bench.py [--quick] [--out PATH]
+      [--trace-out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Assignment,
+    ClientSpec,
+    CloudEnvironment,
+    CostModel,
+    DynamicScheduler,
+    Experiment,
+    FLApplication,
+    MessageSizes,
+    Provider,
+    Region,
+    VMType,
+)
+from repro.core.events import UpdateFolded, VMReplaced
+from repro.checkpoint import ClientCheckpointManager, ServerCheckpointManager
+from repro.federated.chaos import FaultPlan, FaultSpec, verify_fault_pairing
+from repro.federated.client import ClientResult, EvalResult
+
+Row = Tuple[str, float, str]
+
+ROUNDS_FULL = 8
+ROUNDS_QUICK = 5
+N_PARAMS = 50_000
+DELAYS = {"c0": 0.0, "c1": 0.02, "c2": 0.04}
+N_EXAMPLES = {"c0": 12, "c1": 20, "c2": 16}
+
+
+class PacedStub:
+    """Duck-typed FLClient: fixed params, a deterministic per-round pace
+    — isolates the *recovery* cost from any learning cost."""
+
+    def __init__(self, client_id: str, params: Any, delay_s: float, n: int) -> None:
+        self.client_id = client_id
+        self._params = params
+        self._delay_s = delay_s
+        self._n = n
+
+    def train(self, global_params: Any) -> ClientResult:
+        time.sleep(self._delay_s)
+        return ClientResult(self.client_id, self._params, self._n, self._delay_s)
+
+    def evaluate(self, aggregated_params: Any) -> EvalResult:
+        return EvalResult(self.client_id, {"loss": 1.0}, self._n, 0.0)
+
+
+def _make_cohort() -> Tuple[List[PacedStub], Any]:
+    rng = np.random.default_rng(0)
+    template = {"w": jnp.zeros((N_PARAMS,), jnp.float32)}
+    clients = [
+        PacedStub(
+            cid,
+            {"w": jnp.asarray(rng.standard_normal(N_PARAMS), jnp.float32)},
+            DELAYS[cid],
+            N_EXAMPLES[cid],
+        )
+        for cid in sorted(DELAYS)
+    ]
+    return clients, template
+
+
+def _chaos_plan() -> FaultPlan:
+    """Five fault kinds plus checkpoint sabotage across rounds 1-4."""
+    return FaultPlan(
+        [
+            FaultSpec("crash", "c0", 1),
+            FaultSpec("slow", "c1", 2, delay_s=0.15),
+            FaultSpec("corrupt_frame", "c2", 2),
+            FaultSpec("hang", "c1", 3, delay_s=0.2),
+            FaultSpec("revocation", "c0", 4),
+            FaultSpec("corrupt_checkpoint", "s", 4),
+        ],
+        seed=7,
+    )
+
+
+def _toy_scheduler(n_clients: int = 3, n_vms: int = 3) -> DynamicScheduler:
+    providers = [Provider("p0", 0.01), Provider("p1", 0.02)]
+    regions = [Region("r0", "p0"), Region("r1", "p1")]
+    vms = [
+        VMType(
+            vm_id=f"vm{i}",
+            name=f"t{i}",
+            provider="p0" if i % 2 == 0 else "p1",
+            region="r0" if i % 2 == 0 else "r1",
+            vcpus=4,
+            gpus=0,
+            ram_gb=16,
+            cost_on_demand_hour=1.0 + i,
+            cost_spot_hour=(1.0 + i) * 0.3,
+        )
+        for i in range(n_vms)
+    ]
+    env = CloudEnvironment(providers, regions, vms)
+    env.sl_inst = {v.vm_id: 1.0 for v in vms}
+    env.sl_comm = {("r0", "r0"): 1.0, ("r0", "r1"): 2.0, ("r1", "r1"): 1.0}
+    app = FLApplication(
+        name="chaos-bench",
+        clients=[ClientSpec(f"c{i}", train_bl=100.0, test_bl=10.0) for i in range(n_clients)],
+        messages=MessageSizes(0.1, 0.1, 0.1, 1e-6),
+        n_rounds=5,
+        train_comm_bl=5.0,
+        test_comm_bl=1.0,
+        aggreg_bl=1.0,
+    )
+    return DynamicScheduler(CostModel(env, app, 0.5))
+
+
+def _timed_rounds(driver: Any, rounds: int) -> List[float]:
+    """Per-round wall times from ONE ``run(rounds)`` call — the driver
+    numbers rounds 1..n per call, and the fault plan targets absolute
+    round indices, so the whole horizon must be a single run."""
+    with driver:
+        result = driver.run(rounds)
+    return [
+        r.train_time_s + r.eval_time_s + r.agg_time_s + r.checkpoint_time_s
+        for r in result.rounds
+    ]
+
+
+def _rounds_lost(trace: List[Any], rounds: int) -> int:
+    """Rounds whose fold lost cohort weight despite recovery."""
+    expected = float(sum(N_EXAMPLES.values()))
+    sums: Dict[int, float] = {}
+    for e in trace:
+        if isinstance(e, UpdateFolded):
+            sums[e.round_idx] = sums.get(e.round_idx, 0.0) + e.weight
+    return sum(1 for r in range(1, rounds + 1) if sums.get(r, 0.0) < expected)
+
+
+def run_soak(
+    rounds: int, tmp_root: str, trace_out: Optional[str] = None
+) -> Dict[str, Any]:
+    import os
+
+    # --- fault-free baseline ---
+    clients, template = _make_cohort()
+    base = Experiment().transport(reply_timeout_s=60.0).serve(clients, template)
+    base_times = _timed_rounds(base, rounds)
+
+    # --- chaos run: every hardening layer live ---
+    plan = _chaos_plan()
+    clients, template = _make_cohort()
+    server_ckpt = ServerCheckpointManager(
+        os.path.join(tmp_root, "server_local"),
+        os.path.join(tmp_root, "server_remote"),
+        interval_rounds=1,
+        keep_last=3,
+    )
+    client_ckpts = {
+        cid: ClientCheckpointManager(os.path.join(tmp_root, f"ckpt_{cid}"))
+        for cid in DELAYS
+    }
+    placement = {t: Assignment("vm0", "spot") for t in ["s", *DELAYS]}
+    driver = Experiment().chaos(plan).transport(
+        reply_timeout_s=60.0, heartbeat_interval_s=0.05
+    ).serve(
+        clients,
+        template,
+        max_rerequests=2,
+        scheduler=_toy_scheduler(),
+        placement=placement,
+        server_ckpt=server_ckpt,
+        client_ckpts=client_ckpts,
+    )
+    chaos_times = _timed_rounds(driver, rounds)
+
+    pairing = verify_fault_pairing(plan, driver.trace)
+    unpaired = [k for k, v in pairing.items() if v == "unpaired"]
+    replaced = [e for e in driver.trace if isinstance(e, VMReplaced)]
+
+    n_faults = len(plan.faults)
+    overhead_s = max(sum(chaos_times) - sum(base_times), 0.0)
+    entry = {
+        "n_clients": len(DELAYS),
+        "n_params": N_PARAMS,
+        "rounds": rounds,
+        "n_faults": n_faults,
+        "fault_kinds": sorted(plan.kinds),
+        "fault_free_round_s": round(statistics.median(base_times), 6),
+        "chaos_round_s": round(statistics.median(chaos_times), 6),
+        "recovery_overhead_s": round(overhead_s, 6),
+        "mttr_s": round(overhead_s / n_faults, 6),
+        "rounds_lost": _rounds_lost(driver.trace, rounds),
+        "vm_replacements": len(replaced),
+        "fault_pairing": {" ".join(map(str, k)): v for k, v in pairing.items()},
+        "unpaired_faults": len(unpaired),
+    }
+    print(
+        f"[chaos] {rounds} rounds x{len(DELAYS)}: "
+        f"fault_free={statistics.median(base_times)*1e3:.1f}ms/round "
+        f"chaos={statistics.median(chaos_times)*1e3:.1f}ms/round "
+        f"mttr={entry['mttr_s']*1e3:.0f}ms over {n_faults} faults, "
+        f"rounds_lost={entry['rounds_lost']}, "
+        f"replacements={len(replaced)}, unpaired={len(unpaired)}",
+        file=sys.stderr,
+    )
+
+    if trace_out:
+        events = [
+            {"type": type(e).__name__, **dataclasses.asdict(e)}
+            for e in driver.trace
+        ]
+        with open(trace_out, "w") as f:
+            json.dump(events, f, indent=2, default=str)
+        print(f"[chaos] wrote {trace_out} ({len(events)} events)", file=sys.stderr)
+    return entry
+
+
+def run_grid(quick: bool = False, trace_out: Optional[str] = None) -> Dict[str, Any]:
+    import tempfile
+
+    rounds = ROUNDS_QUICK if quick else ROUNDS_FULL
+    with tempfile.TemporaryDirectory() as tmp:
+        entry = run_soak(rounds, tmp, trace_out=trace_out)
+    return {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "entries": [entry],
+    }
+
+
+def bench_chaos() -> List[Row]:
+    """run.py-compatible rows (quick grid)."""
+    report = run_grid(quick=True)
+    rows: List[Row] = []
+    for e in report["entries"]:
+        rows.append((
+            f"chaos_soak_{e['n_clients']}x{e['rounds']}r",
+            e["chaos_round_s"] * 1e6,
+            f"fault_free_us={e['fault_free_round_s']*1e6:.0f};"
+            f"mttr_ms={e['mttr_s']*1e3:.0f};"
+            f"rounds_lost={e['rounds_lost']};"
+            f"unpaired={e['unpaired_faults']}",
+        ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="also dump the chaos run's event trace as JSON")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, trace_out=args.trace_out)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[chaos] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for e in report["entries"]:
+        print(
+            f"chaos_soak_{e['n_clients']}x{e['rounds']}r,"
+            f"{e['chaos_round_s']*1e6:.1f},"
+            f"mttr_ms={e['mttr_s']*1e3:.0f};"
+            f"rounds_lost={e['rounds_lost']};"
+            f"unpaired={e['unpaired_faults']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,15 @@ _EXTENSION_DTYPES = {
 }
 
 
+class DeserializationError(ValueError):
+    """The blob itself is unreadable — truncated, bit-flipped, or not a
+    checkpoint at all.  Distinct from a *valid* blob that mismatches the
+    ``like`` template (missing leaf -> KeyError, shape drift ->
+    ValueError): those mean the wrong checkpoint for this model, this
+    means corruption — §4.3 restore paths and the live driver's
+    corrupt-frame handling catch it and fall back / re-request."""
+
+
 def _dtype_name(dtype: np.dtype) -> str:
     return dtype.name
 
@@ -65,12 +74,22 @@ def serialize_pytree(tree: Any) -> bytes:
 
 
 def deserialize_pytree(blob: bytes, like: Any) -> Any:
-    """Restore into the structure of `like` (paths must match)."""
-    payload = msgpack.unpackb(blob, raw=False)
-    by_path: Dict[str, np.ndarray] = {}
-    for e in payload["entries"]:
-        arr = np.frombuffer(e["data"], dtype=_dtype_from_name(e["dtype"])).reshape(e["shape"])
-        by_path[e["path"]] = arr
+    """Restore into the structure of `like` (paths must match).
+
+    Raises :class:`DeserializationError` when the blob is malformed
+    (truncated msgpack, garbled entries, buffer/shape size mismatch) —
+    template mismatches against `like` keep their KeyError/ValueError.
+    """
+    try:
+        payload = msgpack.unpackb(blob, raw=False)
+        by_path: Dict[str, np.ndarray] = {}
+        for e in payload["entries"]:
+            arr = np.frombuffer(
+                e["data"], dtype=_dtype_from_name(e["dtype"])
+            ).reshape(e["shape"])
+            by_path[e["path"]] = arr
+    except Exception as exc:  # noqa: BLE001 — any parse failure is corruption
+        raise DeserializationError(f"malformed checkpoint blob: {exc}") from exc
 
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []

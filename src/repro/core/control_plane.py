@@ -499,6 +499,7 @@ class Experiment:
         self._min_clients: Optional[int] = None
         self._carry_discount: float = 0.5
         self._transport: Optional[Dict[str, Any]] = None
+        self._chaos: Optional[Any] = None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -513,6 +514,7 @@ class Experiment:
         exp._min_clients = self._min_clients
         exp._carry_discount = self._carry_discount
         exp._transport = None if self._transport is None else dict(self._transport)
+        exp._chaos = self._chaos
         for key, value in changes.items():
             setattr(exp, key, value)
         return exp
@@ -628,6 +630,28 @@ class Experiment:
         exp._carry_discount = float(carry_discount)
         return exp
 
+    def chaos(self, plan: Any) -> "Experiment":
+        """Attach a :class:`~repro.federated.chaos.FaultPlan` to the
+        chain's *serve* targets.
+
+        One seeded plan, both drivers: on the in-process engine the plan
+        decorates the arrival schedule (``ChaosSchedule``); on the
+        socket transport the driver executes its driver-level kinds and
+        the silos' ``ChaosClient`` wrappers execute the client-level
+        kinds physically.  Every injected fault appears as a
+        ``FaultInjected`` event on the run's bus.  The virtual-clock
+        *simulator* target models revocations with its own Poisson
+        process (:meth:`revocations`) — chaos plans are a serve-target
+        concept, so :meth:`build`/:meth:`simulate` reject them."""
+        from repro.federated.chaos import FaultPlan
+
+        if not isinstance(plan, FaultPlan):
+            raise TypeError(
+                f"chaos() takes a repro.federated.chaos.FaultPlan, "
+                f"got {type(plan).__name__}"
+            )
+        return self._clone(_chaos=plan)
+
     def transport(
         self,
         kind: str = "thread",
@@ -638,6 +662,9 @@ class Experiment:
         host: str = "127.0.0.1",
         port: int = 0,
         startup_timeout_s: float = 30.0,
+        heartbeat_interval_s: Optional[float] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+        reconnect: Optional[Any] = None,
     ) -> "Experiment":
         """Run :meth:`serve` over the wall-clock socket transport.
 
@@ -657,6 +684,14 @@ class Experiment:
         silent silo becomes a §4.3 suspected fault (None waits
         indefinitely); ``on_revocation`` / ``max_rerequests`` pick the
         §4.3 recovery rule for crashed workers.
+
+        Hardening knobs (see ``LiveRoundDriver``):
+        ``heartbeat_interval_s`` enables liveness probing at that
+        cadence, with ``heartbeat_timeout_s`` (default 3x the interval)
+        the no-PONG bound past which a silo is declared hung — not
+        merely slow — and crashed; ``reconnect`` is a
+        ``repro.federated.transport.ReconnectPolicy`` giving workers
+        bounded exponential-backoff connect retries.
         """
         if kind not in ("thread", "process"):
             raise ValueError("transport kind must be 'thread' or 'process'")
@@ -666,6 +701,26 @@ class Experiment:
             raise ValueError("reply_timeout_s must be positive (or None)")
         if max_rerequests < 0:
             raise ValueError("max_rerequests must be >= 0")
+        if heartbeat_interval_s is not None and heartbeat_interval_s <= 0.0:
+            raise ValueError("heartbeat_interval_s must be positive (or None)")
+        if heartbeat_timeout_s is not None:
+            if heartbeat_timeout_s <= 0.0:
+                raise ValueError(
+                    "heartbeat_timeout_s must be positive (or None)"
+                )
+            if heartbeat_interval_s is None:
+                raise ValueError(
+                    "heartbeat_timeout_s requires heartbeat_interval_s "
+                    "(a timeout without probes can never be hit)"
+                )
+        if reconnect is not None:
+            from repro.federated.transport import ReconnectPolicy
+
+            if not isinstance(reconnect, ReconnectPolicy):
+                raise TypeError(
+                    f"reconnect= takes a repro.federated.transport."
+                    f"ReconnectPolicy, got {type(reconnect).__name__}"
+                )
         exp = self._clone()
         exp._transport = {
             "kind": kind,
@@ -675,6 +730,9 @@ class Experiment:
             "host": host,
             "port": port,
             "startup_timeout_s": startup_timeout_s,
+            "heartbeat_interval_s": heartbeat_interval_s,
+            "heartbeat_timeout_s": heartbeat_timeout_s,
+            "reconnect": reconnect,
         }
         return exp
 
@@ -757,6 +815,12 @@ class Experiment:
             raise ValueError("Experiment needs an environment: Experiment.on(env)")
         if self._app is None:
             raise ValueError("Experiment needs an application: .app(app)")
+        if self._chaos is not None:
+            raise ValueError(
+                "a chaos FaultPlan applies to the serve() targets (the "
+                "in-process engine and the socket transport); the "
+                "simulator target models faults with .revocations(k_r=...)"
+            )
         fields = dict(self._overrides)
         if self._deadline is not None:
             fields["round_deadline"] = self._sim_deadline()
@@ -839,24 +903,58 @@ class Experiment:
                         "picklable factory} mapping, not client objects "
                         "(they must be constructible in the child process)"
                     )
-                workers: Any = ProcessWorkerPool(clients, initial_params)
+                if self._chaos is not None:
+                    raise ValueError(
+                        "chaos plans need ChaosClient wrappers around "
+                        "live client objects; process-mode factories "
+                        "build clients in the child — use "
+                        "transport(kind='thread') for chaos runs"
+                    )
+                workers: Any = ProcessWorkerPool(
+                    clients, initial_params, reconnect=spec["reconnect"]
+                )
             else:
                 if isinstance(clients, Mapping):
                     raise TypeError(
                         "transport kind='thread' takes a sequence of "
                         "FLClient objects (factories are for process mode)"
                     )
-                workers = ThreadWorkerPool(clients, initial_params)
+                live_clients: Sequence[Any] = clients
+                if self._chaos is not None:
+                    # Client-level fault kinds execute physically inside
+                    # the workers; driver-level kinds are the driver's
+                    # (chaos= below).
+                    live_clients = self._chaos.wrap_clients(clients)
+                workers = ThreadWorkerPool(
+                    live_clients, initial_params, reconnect=spec["reconnect"]
+                )
+            if self._chaos is not None:
+                server_kwargs.setdefault("chaos", self._chaos)
+            # Spec-derived driver knobs follow the same kwargs-win rule
+            # as the simulator fields: an explicit serve() kwarg beats
+            # the builder chain.
+            server_kwargs.setdefault(
+                "on_revocation", str(spec["on_revocation"])
+            )
+            server_kwargs.setdefault(
+                "max_rerequests", int(spec["max_rerequests"])
+            )
+            server_kwargs.setdefault("reply_timeout_s", spec["reply_timeout_s"])
+            server_kwargs.setdefault(
+                "startup_timeout_s", float(spec["startup_timeout_s"])
+            )
+            server_kwargs.setdefault(
+                "heartbeat_interval_s", spec["heartbeat_interval_s"]
+            )
+            server_kwargs.setdefault(
+                "heartbeat_timeout_s", spec["heartbeat_timeout_s"]
+            )
             return LiveRoundDriver(
                 workers,
                 initial_params,
                 transport=SocketTransport(
                     host=str(spec["host"]), port=int(spec["port"])
                 ),
-                on_revocation=str(spec["on_revocation"]),
-                max_rerequests=int(spec["max_rerequests"]),
-                reply_timeout_s=spec["reply_timeout_s"],
-                startup_timeout_s=float(spec["startup_timeout_s"]),
                 **server_kwargs,
             )
         if isinstance(clients, Mapping):
@@ -867,6 +965,20 @@ class Experiment:
             )
         from repro.federated.async_server import AsyncFLServer
 
+        if self._chaos is not None:
+            # One plan, the virtual-clock driver: decorate the arrival
+            # schedule so the plan rewrites this engine's arrivals, and
+            # share the server's bus so FaultInjected markers land in
+            # the same trace the engine writes.
+            from repro.federated.async_server import InstantSchedule
+            from repro.federated.chaos import ChaosSchedule
+
+            bus = server_kwargs.setdefault("bus", EventBus())
+            schedule = ChaosSchedule(
+                schedule if schedule is not None else InstantSchedule(),
+                self._chaos,
+                bus=bus,
+            )
         return AsyncFLServer(
             clients,
             initial_params,

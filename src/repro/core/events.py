@@ -36,6 +36,7 @@ __all__ = [
     "DeadlineExpired",
     "Event",
     "EventBus",
+    "FaultInjected",
     "NULL_BUS",
     "NullBus",
     "RecoveryCompleted",
@@ -174,6 +175,25 @@ class VMReplaced(Event):
     new_vm: str
     market: str
     reason: str  # "revocation" | "straggler"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjected(Event):
+    """A chaos-engineering fault was deliberately injected (not observed).
+
+    Published by the :mod:`repro.federated.chaos` harness on whichever
+    driver executes the :class:`~repro.federated.chaos.FaultPlan`, right
+    where the fault enters the system — so a trace always shows the
+    *cause* next to the §4.3/§4.4 recovery events it provokes, and the
+    soak invariant "every injected fault is paired with a recovery or
+    exclusion" is checkable from the trace alone.  ``kind`` is one of
+    ``repro.federated.chaos.FAULT_KINDS``; ``phase`` is ``"train"`` or
+    ``"eval"``."""
+
+    kind: str
+    task: str
+    round_idx: int = 0
+    phase: str = "train"
 
 
 @dataclasses.dataclass(frozen=True)

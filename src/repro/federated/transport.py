@@ -58,6 +58,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import multiprocessing
+import queue
+import random
 import selectors
 import socket
 import struct
@@ -69,6 +71,7 @@ from typing import (
     Dict,
     List,
     Mapping,
+    MutableMapping,
     Optional,
     Protocol,
     Sequence,
@@ -81,8 +84,22 @@ import jax
 import msgpack
 import numpy as np
 
-from repro.checkpoint.serializer import deserialize_pytree, serialize_pytree
-from repro.core.events import EventBus, RoundDispatched, StragglerEscalated
+from repro.checkpoint import resolve_freshest
+from repro.checkpoint.serializer import (
+    DeserializationError,
+    deserialize_pytree,
+    serialize_pytree,
+)
+from repro.core.cost_model import Assignment
+from repro.core.events import (
+    CheckpointSaved,
+    EventBus,
+    FaultInjected,
+    RecoveryCompleted,
+    RoundDispatched,
+    StragglerEscalated,
+    VMReplaced,
+)
 from .agg_engine import AggregationEngine
 from .aggregation import aggregate_metrics
 from .async_server import (
@@ -92,6 +109,7 @@ from .async_server import (
     FoldReport,
     RoundDeadline,
 )
+from .chaos import DRIVER_KINDS, FaultPlan, corrupt_latest_checkpoint
 from .client import ClientResult
 from .messages import RoundMessageLog, serialize_metrics, to_cost_model_sizes
 from .server import FLRunResult, RoundRecord
@@ -99,6 +117,7 @@ from .server import FLRunResult, RoundRecord
 __all__ = [
     "LiveRoundDriver",
     "ProcessWorkerPool",
+    "ReconnectPolicy",
     "RecordedSchedule",
     "SocketTransport",
     "ThreadWorkerPool",
@@ -119,6 +138,11 @@ MSG_C_TRAIN = "c_msg_train"
 MSG_S_AGGREG = "s_msg_aggreg"
 MSG_C_TEST = "c_msg_test"
 MSG_SHUTDOWN = "shutdown"
+# Liveness probes (server -> worker -> server).  A worker answers PING
+# from its receive loop even while a train/evaluate is computing, so a
+# missing PONG means the *silo* is dead or wedged — not merely slow.
+MSG_PING = "ping"
+MSG_PONG = "pong"
 
 # Frame = 8-byte prefix (header length, payload length, both u32 BE)
 # + msgpack header + raw payload (serialized pytree / metrics blob).
@@ -286,6 +310,20 @@ class SocketTransport:
     def is_live(self, client_id: str) -> bool:
         return client_id in self._conns
 
+    def disconnect(self, client_id: str) -> bool:
+        """Force-sever a silo's connection (the chaos ``disconnect`` /
+        ``revocation`` faults, and the liveness detector's hang verdict).
+
+        The worker observes EOF and dies — exactly the §4.3 crash signal
+        a real revocation produces.  Returns False when the silo was not
+        connected.  No ``disconnect`` TransportEvent is emitted (the
+        caller initiated the drop, so it already knows)."""
+        state = self._conns.get(client_id)
+        if state is None:
+            return False
+        self._drop(state)
+        return True
+
     def _drop(self, state: _ConnState) -> None:
         try:
             self._selector.unregister(state.sock)
@@ -415,11 +453,78 @@ class SocketTransport:
 # Worker side
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class ReconnectPolicy:
+    """Exponential backoff + jitter for worker connects (bounded retries).
+
+    A replacement VM coming up while the server is mid-restart (or a
+    transient network partition) should not kill the worker on its first
+    refused connect: :func:`run_client_worker` retries up to
+    ``max_attempts`` times, sleeping ``base_delay_s * multiplier**k``
+    (capped at ``max_delay_s``) between attempts, each delay scaled by a
+    uniform ±``jitter_frac`` factor.  The jitter is drawn from
+    ``random.Random(f"{seed}:{salt}")`` — per-silo deterministic, so a
+    chaos run replays the exact same backoff timeline."""
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    multiplier: float = 2.0
+    jitter_frac: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_delay_s <= 0.0 or self.max_delay_s <= 0.0:
+            raise ValueError("backoff delays must be > 0")
+        if self.multiplier < 1.0:
+            raise ValueError("multiplier must be >= 1.0")
+        if not 0.0 <= self.jitter_frac < 1.0:
+            raise ValueError("jitter_frac must be in [0, 1)")
+
+    def delays(self, salt: str = "") -> List[float]:
+        """The ``max_attempts - 1`` sleep durations between attempts."""
+        rng = random.Random(f"{self.seed}:{salt}")
+        out: List[float] = []
+        delay = self.base_delay_s
+        for _ in range(self.max_attempts - 1):
+            jitter = 1.0 + self.jitter_frac * (2.0 * rng.random() - 1.0)
+            out.append(min(delay, self.max_delay_s) * jitter)
+            delay *= self.multiplier
+        return out
+
+
+def _connect_with_backoff(
+    address: Tuple[str, int],
+    connect_timeout_s: float,
+    reconnect: Optional[ReconnectPolicy],
+    salt: str,
+) -> Optional[socket.socket]:
+    """Connect, retrying per ``reconnect``; None when every attempt fails
+    (the server never learns of this worker — the driver's rejoin /
+    startup timeout is what notices)."""
+    policy = reconnect if reconnect is not None else ReconnectPolicy(max_attempts=1)
+    delays = policy.delays(salt)
+    for attempt in range(policy.max_attempts):
+        try:
+            sock = socket.create_connection(
+                tuple(address), timeout=connect_timeout_s
+            )
+            sock.settimeout(None)
+            return sock
+        except OSError:
+            if attempt < len(delays):
+                time.sleep(delays[attempt])
+    return None
+
+
 def run_client_worker(
     client: Any,
     template_params: Any,
     address: Tuple[str, int],
     connect_timeout_s: float = 10.0,
+    reconnect: Optional[ReconnectPolicy] = None,
 ) -> None:
     """Blocking worker loop: one real ``FLClient`` behind a socket.
 
@@ -429,22 +534,95 @@ def run_client_worker(
     evaluates, replies ``c_msg_test`` with the serialized metrics dict.
     Any exception out of the client (or the socket) drops the connection
     — the server observes EOF, which *is* the §4.3 crash signal.
+
+    Compute runs on a dedicated thread so the receive loop stays
+    responsive: ``MSG_PING`` probes are answered immediately even while a
+    slow ``train`` is running — which is exactly what lets the driver's
+    liveness detector tell a *slow* silo (heartbeats flow) from a *hung*
+    one (no PONG past the heartbeat timeout).  Three optional client
+    hooks are honoured when present (the chaos harness's
+    ``ChaosClient`` provides all three): ``on_round(round_idx, phase)``
+    before each compute, ``heartbeat_ok() -> bool`` gating PONG replies,
+    and ``mangle_payload(body) -> bytes`` over the serialized reply.
+    ``reconnect`` bounds connect retries with backoff + jitter (a single
+    attempt when None).
     """
-    try:
-        sock = socket.create_connection(
-            tuple(address), timeout=connect_timeout_s
-        )
-    except OSError:
-        # Connect refused/timed out: the server never learns of this
-        # worker; the driver's rejoin/startup timeout is what notices.
+    sock = _connect_with_backoff(
+        address, connect_timeout_s, reconnect, str(client.client_id)
+    )
+    if sock is None:
         return
-    sock.settimeout(None)
+    send_lock = threading.Lock()
+    jobs: "queue.Queue[Optional[Tuple[Dict[str, Any], bytes]]]" = queue.Queue()
+
+    def _send(header: Mapping[str, Any], payload: bytes = b"") -> None:
+        with send_lock:
+            send_frame(sock, header, payload)
+
+    def _mangle(body: bytes) -> bytes:
+        hook = getattr(client, "mangle_payload", None)
+        return bytes(hook(body)) if callable(hook) else body
+
+    def _compute_loop() -> None:
+        # A raising client IS the crash model: shut the socket down so
+        # the server sees EOF, and exit quietly — the §4.3 recovery
+        # story is the server's to tell, not a thread traceback's.
+        try:
+            while True:
+                job = jobs.get()
+                if job is None:
+                    return
+                header, payload = job
+                kind = header.get("kind")
+                round_idx = int(header.get("round_idx", 0))
+                on_round = getattr(client, "on_round", None)
+                if callable(on_round):
+                    on_round(
+                        round_idx, "train" if kind == MSG_S_TRAIN else "eval"
+                    )
+                params = deserialize_pytree(payload, template_params)
+                if kind == MSG_S_TRAIN:
+                    result = client.train(params)
+                    _send(
+                        {
+                            "kind": MSG_C_TRAIN,
+                            "round_idx": round_idx,
+                            "client_id": str(client.client_id),
+                            "n_samples": int(result.n_samples),
+                            "train_time_s": float(result.train_time_s),
+                        },
+                        _mangle(serialize_pytree(result.params)),
+                    )
+                else:
+                    ev = client.evaluate(params)
+                    _send(
+                        {
+                            "kind": MSG_C_TEST,
+                            "round_idx": round_idx,
+                            "client_id": str(client.client_id),
+                            "n_samples": int(ev.n_samples),
+                            "eval_time_s": float(ev.eval_time_s),
+                        },
+                        _mangle(serialize_metrics(ev.metrics)),
+                    )
+        except Exception:  # noqa: BLE001 — crash-to-EOF is the §4.3 contract
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    compute = threading.Thread(
+        target=_compute_loop,
+        name=f"fl-compute-{client.client_id}",
+        daemon=True,
+    )
+    compute.start()
     try:
-        send_frame(sock, {"kind": MSG_HELLO, "client_id": str(client.client_id)})
-        # A raising client IS the crash model: close the socket (the
-        # finally below) so the server sees EOF, and exit quietly — the
-        # §4.3 recovery story is the server's to tell, not a thread
-        # traceback's.
+        _send({"kind": MSG_HELLO, "client_id": str(client.client_id)})
         while True:
             frame = recv_frame(sock)
             if frame is None:
@@ -453,38 +631,23 @@ def run_client_worker(
             kind = header.get("kind")
             if kind == MSG_SHUTDOWN:
                 return
-            round_idx = int(header.get("round_idx", 0))
-            if kind == MSG_S_TRAIN:
-                params = deserialize_pytree(payload, template_params)
-                result = client.train(params)
-                send_frame(
-                    sock,
-                    {
-                        "kind": MSG_C_TRAIN,
-                        "round_idx": round_idx,
-                        "client_id": str(client.client_id),
-                        "n_samples": int(result.n_samples),
-                        "train_time_s": float(result.train_time_s),
-                    },
-                    serialize_pytree(result.params),
-                )
-            elif kind == MSG_S_AGGREG:
-                params = deserialize_pytree(payload, template_params)
-                ev = client.evaluate(params)
-                send_frame(
-                    sock,
-                    {
-                        "kind": MSG_C_TEST,
-                        "round_idx": round_idx,
-                        "client_id": str(client.client_id),
-                        "n_samples": int(ev.n_samples),
-                        "eval_time_s": float(ev.eval_time_s),
-                    },
-                    serialize_metrics(ev.metrics),
-                )
+            if kind == MSG_PING:
+                hb = getattr(client, "heartbeat_ok", None)
+                if hb is None or hb():
+                    _send(
+                        {
+                            "kind": MSG_PONG,
+                            "client_id": str(client.client_id),
+                            "seq": int(header.get("seq", 0)),
+                        }
+                    )
+                continue
+            if kind in (MSG_S_TRAIN, MSG_S_AGGREG):
+                jobs.put((header, payload))
     except Exception:  # noqa: BLE001 — crash-to-EOF is the §4.3 contract
         pass
     finally:
+        jobs.put(None)
         try:
             sock.close()
         except OSError:
@@ -500,7 +663,14 @@ class WorkerPool(Protocol):
 
     def launch(self, address: Tuple[str, int]) -> None: ...
 
-    def restart(self, client_id: str, address: Tuple[str, int]) -> bool: ...
+    def restart(
+        self,
+        client_id: str,
+        address: Tuple[str, int],
+        host: Optional[str] = None,
+    ) -> bool: ...
+
+    def host_of(self, client_id: str) -> Optional[str]: ...
 
     def shutdown(self) -> None: ...
 
@@ -514,26 +684,46 @@ class ThreadWorkerPool:
     worker is restarted by spawning a fresh thread over the *same*
     client object: ``FLClient`` is stateless across rounds (weights flow
     through the server), mirroring a replacement VM restoring from the
-    silo's data."""
+    silo's data.
 
-    def __init__(self, clients: Sequence[Any], template_params: Any) -> None:
+    ``restart(..., host=...)`` records which VM the replacement landed on
+    (§4.4: the driver passes ``DynamicScheduler.select_instance``'s
+    pick); threads have no real placement, so the host is bookkeeping —
+    visible through :meth:`host_of` and the respawned thread's name —
+    but it is the same restart-capacity contract process pools honour.
+    """
+
+    def __init__(
+        self,
+        clients: Sequence[Any],
+        template_params: Any,
+        reconnect: Optional[ReconnectPolicy] = None,
+    ) -> None:
         self._clients: Dict[str, Any] = {
             str(c.client_id): c for c in clients
         }
         if len(self._clients) != len(clients):
             raise ValueError("duplicate client_id in worker pool")
         self._template = template_params
+        self._reconnect = reconnect
         self._threads: Dict[str, threading.Thread] = {}
+        self._hosts: Dict[str, str] = {}
 
     @property
     def client_ids(self) -> Sequence[str]:
         return list(self._clients)
 
+    def host_of(self, client_id: str) -> Optional[str]:
+        return self._hosts.get(client_id)
+
     def _spawn(self, client_id: str, address: Tuple[str, int]) -> None:
+        host = self._hosts.get(client_id)
+        name = f"fl-worker-{client_id}" + (f"@{host}" if host else "")
         thread = threading.Thread(
             target=run_client_worker,
             args=(self._clients[client_id], self._template, address),
-            name=f"fl-worker-{client_id}",
+            kwargs={"reconnect": self._reconnect},
+            name=name,
             daemon=True,
         )
         self._threads[client_id] = thread
@@ -543,13 +733,27 @@ class ThreadWorkerPool:
         for cid in self._clients:
             self._spawn(cid, address)
 
-    def restart(self, client_id: str, address: Tuple[str, int]) -> bool:
+    def restart(
+        self,
+        client_id: str,
+        address: Tuple[str, int],
+        host: Optional[str] = None,
+    ) -> bool:
         if client_id not in self._clients:
             return False
+        if host is not None:
+            self._hosts[client_id] = host
         self._spawn(client_id, address)
         return True
 
     def shutdown(self) -> None:
+        # Wake compute threads parked in a chaos hang fault first —
+        # otherwise the join below waits out the hang bound and the
+        # orphan can outlive the interpreter (aborting at exit).
+        for client in self._clients.values():
+            release = getattr(client, "release", None)
+            if callable(release):
+                release()
         for thread in self._threads.values():
             thread.join(timeout=5.0)
         self._threads.clear()
@@ -559,9 +763,10 @@ def _process_worker_entry(
     factory: Callable[[], Any],
     template_np: Any,
     address: Tuple[str, int],
+    reconnect: Optional[ReconnectPolicy] = None,
 ) -> None:
     """Spawn entry: build the client in the child, then serve."""
-    run_client_worker(factory(), template_np, address)
+    run_client_worker(factory(), template_np, address, reconnect=reconnect)
 
 
 class ProcessWorkerPool:
@@ -570,28 +775,43 @@ class ProcessWorkerPool:
     Clients are built *in the child* from picklable factories, so each
     worker imports jax fresh — true crash isolation at the cost of the
     spawn/import latency (seconds per worker; the slow-tier test covers
-    it, CI smoke runs on threads)."""
+    it, CI smoke runs on threads).  Like :class:`ThreadWorkerPool`, a
+    §4.4 cross-host ``restart(..., host=...)`` is tracked per silo (the
+    replacement process *is* the replacement VM in this model)."""
 
     def __init__(
         self,
         client_factories: Mapping[str, Callable[[], Any]],
         template_params: Any,
+        reconnect: Optional[ReconnectPolicy] = None,
     ) -> None:
         self._factories: Dict[str, Callable[[], Any]] = dict(client_factories)
         # Numpy-ify so the template pickles without device buffers.
         self._template_np = jax.tree.map(np.asarray, template_params)
+        self._reconnect = reconnect
         self._ctx = multiprocessing.get_context("spawn")
         self._procs: Dict[str, Any] = {}
+        self._hosts: Dict[str, str] = {}
 
     @property
     def client_ids(self) -> Sequence[str]:
         return list(self._factories)
 
+    def host_of(self, client_id: str) -> Optional[str]:
+        return self._hosts.get(client_id)
+
     def _spawn(self, client_id: str, address: Tuple[str, int]) -> None:
+        host = self._hosts.get(client_id)
+        name = f"fl-worker-{client_id}" + (f"@{host}" if host else "")
         proc = self._ctx.Process(
             target=_process_worker_entry,
-            args=(self._factories[client_id], self._template_np, address),
-            name=f"fl-worker-{client_id}",
+            args=(
+                self._factories[client_id],
+                self._template_np,
+                address,
+                self._reconnect,
+            ),
+            name=name,
             daemon=True,
         )
         self._procs[client_id] = proc
@@ -601,13 +821,20 @@ class ProcessWorkerPool:
         for cid in self._factories:
             self._spawn(cid, address)
 
-    def restart(self, client_id: str, address: Tuple[str, int]) -> bool:
+    def restart(
+        self,
+        client_id: str,
+        address: Tuple[str, int],
+        host: Optional[str] = None,
+    ) -> bool:
         if client_id not in self._factories:
             return False
         old = self._procs.get(client_id)
         if old is not None and old.is_alive():
             old.terminate()
             old.join(timeout=5.0)
+        if host is not None:
+            self._hosts[client_id] = host
         self._spawn(client_id, address)
         return True
 
@@ -701,6 +928,33 @@ class LiveRoundDriver:
     ``startup_timeout_s`` (worker hello barrier).  ``cost_model`` is
     updated with each round's *measured* message sizes via
     ``to_cost_model_sizes`` (Eq. 6 on real payloads).
+
+    Hardening knobs (this is the live §4.3/§4.4 surface):
+
+    * ``heartbeat_interval_s`` — PING every pending training silo at
+      this cadence; a silo with no PONG for ``heartbeat_timeout_s``
+      (default 3x the interval) is declared *hung* — distinguishable
+      from slow, whose heartbeats keep flowing — its connection is
+      severed and the ordinary §4.3 crash/re-request path takes over.
+      None (the default) disables liveness probing.
+    * ``scheduler`` + ``placement`` — §4.4 true replacement: every
+      worker restart first asks ``scheduler.select_instance`` (the
+      ``DynamicScheduler`` heuristic; the revoked VM is excluded from
+      candidates) for a *different* host, records it in the mutable
+      ``placement`` map, and publishes :class:`~repro.core.events.
+      VMReplaced`.  Without a scheduler, restarts rejoin in place.
+    * ``server_ckpt`` / ``client_ckpts`` — the §4.3 checkpoint story on
+      the live path, mirroring ``FLServer``: clients store each round's
+      aggregate, the server checkpoints per its interval (async off-VM
+      copy), both published as ``CheckpointSaved``;
+      :meth:`recover_server` restores from the freshest *verified*
+      source (``RecoveryCompleted`` records which one won).
+    * ``chaos`` — a :class:`~repro.federated.chaos.FaultPlan` whose
+      driver-level kinds (``disconnect``/``revocation`` severs,
+      ``corrupt_checkpoint`` sabotage-then-restore) this driver
+      executes, publishing a ``FaultInjected`` marker per fault.
+      Client-level kinds are executed by ``ChaosClient`` wrappers in
+      the worker pool (``FaultPlan.wrap_clients``).
     """
 
     def __init__(
@@ -716,18 +970,49 @@ class LiveRoundDriver:
         max_rerequests: int = 1,
         reply_timeout_s: Optional[float] = None,
         startup_timeout_s: float = 30.0,
+        heartbeat_interval_s: Optional[float] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+        scheduler: Optional[Any] = None,
+        placement: Optional[MutableMapping[str, Any]] = None,
+        server_ckpt: Optional[Any] = None,
+        client_ckpts: Optional[Mapping[str, Any]] = None,
+        chaos: Optional[FaultPlan] = None,
         agg_engine: Optional[AggregationEngine] = None,
         bus: Optional[EventBus] = None,
         on_straggler: Optional[Callable[[str, int], None]] = None,
         cost_model: Optional[Any] = None,
         measure_round_messages: bool = True,
     ) -> None:
+        if heartbeat_interval_s is not None and heartbeat_interval_s <= 0.0:
+            raise ValueError("heartbeat_interval_s must be > 0 (or None)")
+        if heartbeat_timeout_s is not None:
+            if heartbeat_timeout_s <= 0.0:
+                raise ValueError("heartbeat_timeout_s must be > 0 (or None)")
+            if heartbeat_interval_s is None:
+                raise ValueError(
+                    "heartbeat_timeout_s requires heartbeat_interval_s"
+                )
         self.workers = workers
         self.params = initial_params
         self.bus = bus if bus is not None else EventBus()
         self.transport = transport if transport is not None else SocketTransport()
         self.reply_timeout_s = reply_timeout_s
         self.startup_timeout_s = startup_timeout_s
+        self.heartbeat_interval_s = heartbeat_interval_s
+        self.heartbeat_timeout_s = (
+            heartbeat_timeout_s
+            if heartbeat_timeout_s is not None
+            else (
+                3.0 * heartbeat_interval_s
+                if heartbeat_interval_s is not None
+                else None
+            )
+        )
+        self.scheduler = scheduler
+        self.placement = placement
+        self.server_ckpt = server_ckpt
+        self.client_ckpts: Dict[str, Any] = dict(client_ckpts or {})
+        self.chaos = chaos
         self.on_straggler = on_straggler
         self.cost_model = cost_model
         self.measure_round_messages = measure_round_messages
@@ -801,6 +1086,8 @@ class LiveRoundDriver:
         records: List[RoundRecord] = []
         for round_idx in range(1, n_rounds + 1):
             records.append(self._run_round(round_idx))
+        if self.server_ckpt is not None:
+            self.server_ckpt.wait_for_transfers()
         return FLRunResult(
             rounds=records,
             final_params=self.params,
@@ -810,6 +1097,21 @@ class LiveRoundDriver:
     # -- one round ---------------------------------------------------------
     def _run_round(self, round_idx: int) -> RoundRecord:
         self._settle_rejoins()
+        # Chaos: checkpoint sabotage strikes *between* rounds (mirroring
+        # FLServer's fault_hook position — marker, corruption, then the
+        # §4.3 restore — all before this round's dispatch).
+        restarted_from: Optional[str] = None
+        if self.chaos is not None:
+            for f in self.chaos.faults_for(round_idx):
+                if f.kind != "corrupt_checkpoint":
+                    continue
+                self.bus.publish(
+                    FaultInjected(
+                        self._wall(), f.kind, f.task, round_idx, f.phase
+                    )
+                )
+                corrupt_latest_checkpoint(self.server_ckpt)
+                restarted_from = self.recover_server(round_idx)
         expected = [
             cid for cid in self._cohort if self.transport.is_live(cid)
         ]
@@ -819,6 +1121,22 @@ class LiveRoundDriver:
         self.bus.publish(
             RoundDispatched(self._wall(), round_idx, len(expected))
         )
+        # Chaos markers for every other kind of the round (client-side
+        # kinds execute inside the workers, which have no bus — the
+        # driver records the cause at the same trace position as the
+        # virtual-clock ChaosSchedule).
+        forced: Dict[str, str] = {}
+        if self.chaos is not None:
+            for f in self.chaos.faults_for(round_idx):
+                if f.kind == "corrupt_checkpoint":
+                    continue
+                self.bus.publish(
+                    FaultInjected(
+                        self._wall(), f.kind, f.task, round_idx, f.phase
+                    )
+                )
+                if f.phase == "train" and f.kind in DRIVER_KINDS:
+                    forced[f.task] = f.kind
 
         # Training phase: s_msg_train out, c_msg_train back (measured).
         s_train_payload = serialize_pytree(self.params)
@@ -836,7 +1154,9 @@ class LiveRoundDriver:
         if not dispatched:
             raise RuntimeError("every silo disconnected at dispatch")
 
-        outcomes = self._collect_train(round_idx, dispatched, t0, s_train_payload)
+        outcomes = self._collect_train(
+            round_idx, dispatched, t0, s_train_payload, forced
+        )
 
         t_agg = time.monotonic()
         results = [
@@ -901,6 +1221,19 @@ class LiveRoundDriver:
                 eval_targets.append(cid)
             except ConnectionError:
                 self._drop_from_cohort(cid)
+        # Chaos: driver-level eval-phase faults sever now — the silo
+        # skips this round's metrics only; the stray-disconnect path
+        # restarts it (cross-host when a scheduler is attached) so it
+        # rejoins for the next round.
+        if self.chaos is not None:
+            for f in self.chaos.faults_for(round_idx, phase="eval"):
+                if (
+                    f.kind in DRIVER_KINDS
+                    and f.task in eval_targets
+                    and self.transport.disconnect(f.task)
+                ):
+                    eval_targets.remove(f.task)
+                    self._handle_stray_disconnect(f.task)
         metrics_by_cid, eval_n, c_test_bytes = self._collect_eval(
             round_idx, eval_targets, t1
         )
@@ -913,6 +1246,37 @@ class LiveRoundDriver:
         else:
             metrics = {}
         eval_time = time.monotonic() - t1
+
+        # Checkpointing (§4.3), mirroring FLServer: every surviving silo
+        # stores the aggregate each round, the server per its interval,
+        # each location's overhead published separately.
+        t2 = time.monotonic()
+        saved_client = False
+        for cid in self._cohort:
+            mgr = self.client_ckpts.get(cid)
+            if mgr is not None:
+                mgr.save(round_idx, self.params)
+                saved_client = True
+        client_ckpt_time = time.monotonic() - t2
+        t3 = time.monotonic()
+        saved_server = (
+            self.server_ckpt is not None
+            and self.server_ckpt.should_checkpoint(round_idx)
+        )
+        if saved_server and self.server_ckpt is not None:
+            self.server_ckpt.save(round_idx, self.params)
+        server_ckpt_time = time.monotonic() - t3
+        ckpt_time = client_ckpt_time + server_ckpt_time
+        if saved_client:
+            self.bus.publish(
+                CheckpointSaved(self._wall(), round_idx, "client_local",
+                                client_ckpt_time)
+            )
+        if saved_server:
+            self.bus.publish(
+                CheckpointSaved(self._wall(), round_idx, "server_remote",
+                                server_ckpt_time)
+            )
 
         log: Optional[RoundMessageLog] = None
         if self.measure_round_messages:
@@ -939,9 +1303,10 @@ class LiveRoundDriver:
             round_idx=round_idx,
             train_time_s=train_time,
             eval_time_s=eval_time,
-            checkpoint_time_s=0.0,
+            checkpoint_time_s=ckpt_time,
             metrics=metrics,
             message_log=log,
+            restarted_from=restarted_from,
             agg_time_s=agg_time,
             fold_times_s=dict(fold.fold_times),
             round_span_s=fold.round_span_s,
@@ -950,6 +1315,79 @@ class LiveRoundDriver:
             carried_over=list(fold.carried_over),
             carried_in=list(fold.carried_in),
         )
+
+    # -- §4.3 / §4.4 recovery ----------------------------------------------
+    def _restart_worker(self, client_id: str) -> bool:
+        """Respawn a dead silo's worker — on a *different* host when a
+        scheduler is attached (§4.4 true replacement).
+
+        ``DynamicScheduler.select_instance`` excludes the revoked VM
+        from its candidate set, so the pick is a genuine move; the
+        mutable ``placement`` map is updated and ``VMReplaced`` is
+        published only once the pool actually spawned the replacement.
+        Without a scheduler (or for silos outside the placement map) the
+        restart rejoins in place, exactly as before."""
+        decision: Optional[Any] = None
+        old_vm = ""
+        if (
+            self.scheduler is not None
+            and self.placement is not None
+            and client_id in self.placement
+        ):
+            old_vm = str(self.placement[client_id].vm_id)
+            decision = self.scheduler.select_instance(
+                client_id, dict(self.placement), old_vm, now_s=self._wall()
+            )
+            if decision is not None and not getattr(decision, "new_vm", None):
+                decision = None
+        host = None if decision is None else str(decision.new_vm)
+        ok = self.workers.restart(client_id, self.transport.address, host=host)
+        if ok and decision is not None and self.placement is not None:
+            market = str(getattr(decision, "market", "on_demand"))
+            self.placement[client_id] = Assignment(
+                str(decision.new_vm), market
+            )
+            self.bus.publish(
+                VMReplaced(
+                    self._wall(),
+                    client_id,
+                    old_vm,
+                    str(decision.new_vm),
+                    market,
+                    "revocation",
+                )
+            )
+        return ok
+
+    def recover_server(self, resume_round: int) -> str:
+        """Restore the aggregate from the freshest *verified* checkpoint
+        (§4.3), mirroring ``FLServer._recover_server``: corrupt or
+        truncated files are skipped by the managers' verified-restore
+        path, so sabotage falls back to the newest intact source.
+        Publishes ``RecoveryCompleted`` recording which source won."""
+        if self.server_ckpt is None and not self.client_ckpts:
+            source, info = "none", None
+        else:
+            source, info = resolve_freshest(self.server_ckpt, self.client_ckpts)
+        if source == "none" or info is None:
+            self.bus.publish(
+                RecoveryCompleted(self._wall(), "s", resume_round, 0.0, "none")
+            )
+            return "none"
+        if source == "server":
+            assert self.server_ckpt is not None
+            _, self.params = self.server_ckpt.restore(self.params, info)
+        else:
+            cid = source.split(":", 1)[1]
+            _, self.params = self.client_ckpts[cid].restore(self.params)
+        restored = (
+            "server_remote" if source == "server"
+            else f"client_local:{source.split(':', 1)[1]}"
+        )
+        self.bus.publish(
+            RecoveryCompleted(self._wall(), "s", resume_round, 0.0, restored)
+        )
+        return source
 
     # -- collection loops --------------------------------------------------
     def _drop_from_cohort(self, client_id: str) -> None:
@@ -963,8 +1401,8 @@ class LiveRoundDriver:
         replacement: restart the worker so it rejoins for the next
         round (it merely skips this round's metrics); only when no
         replacement can be spawned does the silo leave the run."""
-        if self._on_revocation == "rerequest" and self.workers.restart(
-            client_id, self.transport.address
+        if self._on_revocation == "rerequest" and self._restart_worker(
+            client_id
         ):
             self._awaiting_rejoin.add(client_id)
             return
@@ -997,6 +1435,7 @@ class LiveRoundDriver:
         expected: Sequence[str],
         t0: float,
         s_train_payload: bytes,
+        forced: Optional[Mapping[str, str]] = None,
     ) -> Dict[str, _TrainOutcome]:
         outcomes: Dict[str, _TrainOutcome] = {
             cid: _TrainOutcome() for cid in expected
@@ -1008,17 +1447,60 @@ class LiveRoundDriver:
             None if self.reply_timeout_s is None
             else t0 + self.reply_timeout_s
         )
+        # Liveness probing state (heartbeat_interval_s only).
+        hb = self.heartbeat_interval_s
+        hb_timeout = self.heartbeat_timeout_s
+        last_seen: Dict[str, float] = {cid: t0 for cid in expected}
+        next_ping = None if hb is None else t0 + hb
+        ping_seq = 0
+
+        def crash(cid: str, now_off: float) -> None:
+            """The §4.3 hard-fault path: re-request via a (possibly
+            cross-host) worker restart, or exclude + drop."""
+            o = outcomes[cid]
+            o.crashed = True
+            if o.revoke_at_s is None:
+                o.revoke_at_s = now_off
+            if (
+                self._on_revocation == "rerequest"
+                and o.attempt <= self._max_rerequests
+                and self._restart_worker(cid)
+            ):
+                rejoining.add(cid)
+                rejoin_by[cid] = time.monotonic() + self.startup_timeout_s
+            else:
+                o.failed = True
+                pending.discard(cid)
+                self._drop_from_cohort(cid)
+
+        # Chaos: driver-level train-phase faults sever right after
+        # dispatch — the worker dies on EOF (a mid-compute silo fails on
+        # its reply send), and recovery runs the ordinary crash path.
+        for cid in sorted(forced or ()):
+            if cid in pending and self.transport.disconnect(cid):
+                crash(cid, time.monotonic() - t0)
+
         while pending:
             now = time.monotonic()
-            timeout: Optional[float] = None
+            waits: List[float] = []
             if deadline is not None:
-                timeout = max(0.0, deadline - now)
+                waits.append(deadline - now)
             if rejoin_by:
                 # A restarted worker that never says hello (child died
                 # before connecting, connect refused) must not hang an
                 # unbounded round: bound the wait on its rejoin too.
-                rejoin_t = max(0.0, min(rejoin_by.values()) - now)
-                timeout = rejoin_t if timeout is None else min(timeout, rejoin_t)
+                waits.append(min(rejoin_by.values()) - now)
+            if next_ping is not None:
+                waits.append(next_ping - now)
+                if hb_timeout is not None:
+                    expiries = [
+                        last_seen[c] + hb_timeout - now
+                        for c in pending
+                        if c not in rejoining
+                    ]
+                    if expiries:
+                        waits.append(min(expiries))
+            timeout = max(0.0, min(waits)) if waits else None
             events = self.transport.poll(timeout)
             now = time.monotonic()
             now_off = now - t0
@@ -1030,6 +1512,28 @@ class LiveRoundDriver:
                 outcomes[cid].failed = True
                 pending.discard(cid)
                 self._drop_from_cohort(cid)
+            if next_ping is not None and hb is not None and now >= next_ping:
+                next_ping = now + hb
+                ping_seq += 1
+                for cid in sorted(pending - rejoining):
+                    if not self.transport.is_live(cid):
+                        continue
+                    try:
+                        self.transport.send(
+                            cid, {"kind": MSG_PING, "seq": ping_seq}
+                        )
+                    except ConnectionError:
+                        crash(cid, now_off)
+                if hb_timeout is not None:
+                    # No PONG within the timeout = *hung*, not slow (a
+                    # slow silo's receive loop still answers probes):
+                    # sever and run the §4.3 crash path.  A silo with
+                    # traffic in this very poll batch is alive — skip it.
+                    seen_now = {ev.client_id for ev in events}
+                    for cid in sorted(pending - rejoining - seen_now):
+                        if now - last_seen.get(cid, t0) > hb_timeout:
+                            self.transport.disconnect(cid)
+                            crash(cid, now_off)
             if not events:
                 if deadline is not None and now >= deadline:
                     # Reply timeout.  A silent-but-alive silo is a §4.4
@@ -1049,27 +1553,13 @@ class LiveRoundDriver:
                 continue
             for ev in events:
                 cid = ev.client_id
+                if cid in last_seen:
+                    last_seen[cid] = now
                 if ev.kind == "disconnect":
                     if cid not in pending:
                         self._handle_stray_disconnect(cid)
                         continue
-                    o = outcomes[cid]
-                    o.crashed = True
-                    if o.revoke_at_s is None:
-                        o.revoke_at_s = now_off
-                    if (
-                        self._on_revocation == "rerequest"
-                        and o.attempt <= self._max_rerequests
-                        and self.workers.restart(cid, self.transport.address)
-                    ):
-                        rejoining.add(cid)
-                        rejoin_by[cid] = (
-                            time.monotonic() + self.startup_timeout_s
-                        )
-                    else:
-                        o.failed = True
-                        pending.discard(cid)
-                        self._drop_from_cohort(cid)
+                    crash(cid, now_off)
                 elif ev.kind == "joined":
                     if cid in rejoining:
                         rejoining.discard(cid)
@@ -1096,8 +1586,40 @@ class LiveRoundDriver:
                     ):
                         continue  # stale reply from a previous round
                     o = outcomes[cid]
+                    try:
+                        params = deserialize_pytree(ev.payload, self.params)
+                    except DeserializationError:
+                        # Corrupt frame: the reply arrived but is
+                        # unusable — a §4.3 suspected fault.  The worker
+                        # is alive, so re-request over the *same*
+                        # connection (attempt bump mirrors the crash
+                        # path); past the budget the silo is excluded
+                        # from the round but stays in the cohort.
+                        if o.revoke_at_s is None:
+                            o.revoke_at_s = now_off
+                        if (
+                            self._on_revocation == "rerequest"
+                            and o.attempt <= self._max_rerequests
+                            and self.transport.is_live(cid)
+                        ):
+                            o.attempt += 1
+                            try:
+                                self.transport.send(
+                                    cid,
+                                    {
+                                        "kind": MSG_S_TRAIN,
+                                        "round_idx": round_idx,
+                                    },
+                                    s_train_payload,
+                                )
+                            except ConnectionError:
+                                crash(cid, now_off)
+                        else:
+                            o.failed = True
+                            pending.discard(cid)
+                        continue
                     o.arrival_s = now_off
-                    o.params = deserialize_pytree(ev.payload, self.params)
+                    o.params = params
                     o.n_samples = int(ev.header.get("n_samples", 0))
                     o.train_time_s = float(ev.header.get("train_time_s", 0.0))
                     o.payload_bytes = len(ev.payload)

@@ -1,0 +1,682 @@
+"""Chaos-hardened fault tolerance: the seeded FaultPlan DSL, its two
+execution surfaces (ChaosSchedule on the virtual clock, ChaosClient +
+LiveRoundDriver chaos hooks on the wall clock), heartbeat liveness
+(hang != slow), reconnect backoff, §4.4 cross-host VM replacement, and
+the capstone soak — one plan, >=5 rounds, >=4 fault kinds, replayed on
+both drivers with identical per-round signatures and conserved folded
+weight."""
+import os
+import socket
+import threading
+import time
+
+import pytest
+
+from conftest import make_toy_app, make_toy_env
+from repro.checkpoint import (
+    ClientCheckpointManager,
+    ServerCheckpointManager,
+)
+from repro.core import Assignment, CostModel, DynamicScheduler, Experiment
+from repro.core.events import (
+    EventBus,
+    FaultInjected,
+    RecoveryCompleted,
+    RevocationOccurred,
+    RoundClosed,
+    RoundDispatched,
+    StragglerEscalated,
+    UpdateArrived,
+    UpdateFolded,
+    VMReplaced,
+)
+from repro.federated import (
+    AsyncFLServer,
+    ChaosSchedule,
+    DeterministicSchedule,
+    FaultPlan,
+    FaultSpec,
+    LiveRoundDriver,
+    ReconnectPolicy,
+    SocketTransport,
+    chaos_signature,
+    checkpoint_saboteur,
+    corrupt_latest_checkpoint,
+    run_client_worker,
+    verify_fault_pairing,
+)
+from repro.federated.chaos import CLIENT_KINDS, DRIVER_KINDS
+from repro.federated.transport import _connect_with_backoff
+from test_transport import (
+    assert_params_close,
+    init_params,
+    make_paced_clients,
+)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan DSL
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor", "c0", 1)
+    with pytest.raises(ValueError, match="phase"):
+        FaultSpec("crash", "c0", 1, phase="warmup")
+    with pytest.raises(ValueError, match="1-indexed"):
+        FaultSpec("crash", "c0", 0)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultSpec("slow", "c0", 1, delay_s=-0.1)
+
+
+def test_fault_plan_canonical_order_and_duplicate_rejection():
+    plan = FaultPlan(
+        [
+            FaultSpec("slow", "c1", 3, delay_s=0.1),
+            FaultSpec("crash", "c0", 1),
+            FaultSpec("hang", "c0", 3, delay_s=0.1),
+        ],
+        seed=5,
+    )
+    assert [f.key for f in plan] == [
+        ("crash", "c0", 1, "train"),
+        ("hang", "c0", 3, "train"),
+        ("slow", "c1", 3, "train"),
+    ]
+    assert len(plan) == 3
+    assert plan.kinds == {"crash", "hang", "slow"}
+    assert plan.max_round == 3
+    assert [f.kind for f in plan.faults_for(3)] == ["hang", "slow"]
+    assert [f.kind for f in plan.faults_for(3, task="c1")] == ["slow"]
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan([FaultSpec("crash", "c0", 1), FaultSpec("crash", "c0", 1)])
+
+
+def test_seeded_plan_is_deterministic():
+    kw = dict(n_rounds=5, tasks=["c0", "c1", "c2"], n_faults=6)
+    a = FaultPlan.seeded(7, **kw)
+    b = FaultPlan.seeded(7, **kw)
+    assert a == b and len(a) == 6
+    assert all(1 <= f.round_idx <= 5 for f in a)
+    assert all(f.task in kw["tasks"] for f in a)
+    assert all(f.kind in CLIENT_KINDS + DRIVER_KINDS for f in a)
+    assert FaultPlan.seeded(8, **kw) != a
+    with pytest.raises(ValueError, match="exceeds"):
+        FaultPlan.seeded(0, n_rounds=1, tasks=["c0"], n_faults=99)
+
+
+# ---------------------------------------------------------------------------
+# Virtual-clock execution: ChaosSchedule
+# ---------------------------------------------------------------------------
+
+def test_chaos_schedule_rewrites_arrivals_and_publishes_markers():
+    plan = FaultPlan(
+        [
+            FaultSpec("slow", "c0", 1, delay_s=0.5),
+            FaultSpec("crash", "c1", 1, at_s=0.05),
+            FaultSpec("corrupt_frame", "c2", 1),
+            FaultSpec("disconnect", "c0", 1, phase="eval"),
+            FaultSpec("corrupt_checkpoint", "s", 1),
+        ]
+    )
+    bus = EventBus()
+    sched = ChaosSchedule(
+        DeterministicSchedule({"c0": 0.1, "c1": 0.2, "c2": 0.3}), plan, bus=bus
+    )
+    arrivals = sched.round_arrivals(1, ["c0", "c1", "c2"])
+    assert arrivals["c0"].delay_s == pytest.approx(0.6)  # slow adds latency
+    assert arrivals["c0"].revoke_at_s is None  # eval fault: arrivals untouched
+    assert arrivals["c1"].revoke_at_s == pytest.approx(0.05)  # crash before
+    assert arrivals["c2"].revoke_at_s == pytest.approx(0.3)  # at delivery
+    # Markers for everything except corrupt_checkpoint (saboteur's job),
+    # including the eval-phase fault.
+    markers = [e for e in bus.trace if isinstance(e, FaultInjected)]
+    assert {(m.kind, m.task, m.phase) for m in markers} == {
+        ("slow", "c0", "train"),
+        ("crash", "c1", "train"),
+        ("corrupt_frame", "c2", "train"),
+        ("disconnect", "c0", "eval"),
+    }
+    # A fault-free round passes the inner schedule through unchanged.
+    clean = sched.round_arrivals(2, ["c0", "c1", "c2"])
+    assert clean["c0"].delay_s == pytest.approx(0.1)
+    assert all(a.revoke_at_s is None for a in clean.values())
+
+
+def test_checkpoint_saboteur_corrupts_every_replica_once(tmp_path):
+    mgr = ServerCheckpointManager(
+        str(tmp_path / "local"), str(tmp_path / "remote"), interval_rounds=1
+    )
+    state = init_params()
+    mgr.save(1, state, blocking_transfer=True)
+    sizes = {
+        d: os.path.getsize(os.path.join(d, "round_1.ckpt"))
+        for d in (mgr.local_dir, mgr.remote_dir)
+    }
+    plan = FaultPlan([FaultSpec("corrupt_checkpoint", "s", 2)])
+    bus = EventBus()
+    hook = checkpoint_saboteur(plan, mgr, bus)
+    assert hook(1) is None  # not this round
+    assert hook(2) == "s"
+    for d, before in sizes.items():
+        assert os.path.getsize(os.path.join(d, "round_1.ckpt")) < before
+    markers = [e for e in bus.trace if isinstance(e, FaultInjected)]
+    assert [(m.kind, m.round_idx) for m in markers] == [
+        ("corrupt_checkpoint", 2)
+    ]
+    assert hook(2) is None  # one-shot
+
+
+def test_corrupt_latest_checkpoint_with_no_saves_is_a_noop(tmp_path):
+    mgr = ServerCheckpointManager(str(tmp_path / "l"), str(tmp_path / "r"))
+    assert corrupt_latest_checkpoint(mgr) == []
+
+
+def test_verify_fault_pairing_outcomes():
+    plan = FaultPlan(
+        [
+            FaultSpec("crash", "c0", 1),
+            FaultSpec("slow", "c1", 1, delay_s=0.1),
+            FaultSpec("disconnect", "c2", 1),
+            FaultSpec("revocation", "c0", 2, phase="eval"),
+            FaultSpec("corrupt_checkpoint", "s", 2),
+            FaultSpec("hang", "c1", 2, delay_s=0.1),
+        ]
+    )
+    trace = [
+        FaultInjected(0.0, "crash", "c0", 1),
+        FaultInjected(0.0, "slow", "c1", 1),
+        FaultInjected(0.0, "disconnect", "c2", 1),
+        RevocationOccurred(0.1, "c0", round_idx=1),
+        UpdateArrived(0.2, 1, "c0", attempt=2),  # c0 recovered
+        UpdateFolded(0.2, 1, "c0", 10.0, 10.0),
+        RevocationOccurred(0.1, "c2", round_idx=1),  # c2 never came back
+        UpdateFolded(0.3, 1, "c1", 10.0, 20.0),  # c1 merely slow
+        RoundClosed(0.4, 1, 0.4),
+        FaultInjected(1.0, "corrupt_checkpoint", "s", 2),
+        RecoveryCompleted(1.0, "s", 2, 0.0, "client_local:c1"),
+        FaultInjected(1.0, "revocation", "c0", 2, phase="eval"),
+        # hang marker missing entirely -> unpaired
+        RoundClosed(1.5, 2, 0.5),
+    ]
+    out = verify_fault_pairing(plan, trace)
+    assert out[("crash", "c0", 1, "train")] == "recovered"
+    assert out[("slow", "c1", 1, "train")] == "delivered"
+    assert out[("disconnect", "c2", 1, "train")] == "excluded"
+    assert out[("revocation", "c0", 2, "eval")] == "metrics-only"
+    assert out[("corrupt_checkpoint", "s", 2, "train")] == "restored"
+    assert out[("hang", "c1", 2, "train")] == "unpaired"
+
+
+def test_chaos_signature_sorts_within_round_segments():
+    a = [
+        RoundDispatched(0.0, 1, 2),
+        UpdateArrived(0.1, 1, "c0", attempt=1),
+        UpdateArrived(0.2, 1, "c1", attempt=1),
+        RoundClosed(0.3, 1, 0.3),
+    ]
+    b = [a[0], a[2], a[1], a[3]]  # arrival order swapped within the round
+    assert chaos_signature(a) == chaos_signature(b)
+    # ...but not across rounds.
+    c = a + [RoundDispatched(0.4, 2, 2), RoundClosed(0.5, 2, 0.1)]
+    d = a[:3] + [RoundDispatched(0.4, 2, 2), a[3], RoundClosed(0.5, 2, 0.1)]
+    assert chaos_signature(c) != chaos_signature(d)
+    # VMReplaced is live-driver state and excluded by default.
+    e = a + [VMReplaced(0.3, "c0", "vm0", "vm1", "spot", "revocation")]
+    assert chaos_signature(e) == chaos_signature(a)
+
+
+# ---------------------------------------------------------------------------
+# Reconnect / backoff
+# ---------------------------------------------------------------------------
+
+def test_reconnect_policy_validation_and_deterministic_delays():
+    with pytest.raises(ValueError, match="max_attempts"):
+        ReconnectPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="delays"):
+        ReconnectPolicy(base_delay_s=0.0)
+    with pytest.raises(ValueError, match="multiplier"):
+        ReconnectPolicy(multiplier=0.5)
+    with pytest.raises(ValueError, match="jitter_frac"):
+        ReconnectPolicy(jitter_frac=1.0)
+    p = ReconnectPolicy(max_attempts=5, base_delay_s=0.1, max_delay_s=0.3,
+                        jitter_frac=0.25, seed=3)
+    d = p.delays("c0")
+    assert d == p.delays("c0")  # per-silo deterministic
+    assert d != p.delays("c1")
+    assert len(d) == 4
+    for i, delay in enumerate(d):
+        nominal = min(0.1 * 2.0 ** i, 0.3)
+        assert nominal * 0.75 <= delay <= nominal * 1.25
+
+
+def test_connect_without_policy_gives_up_after_one_attempt():
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    t0 = time.monotonic()
+    assert _connect_with_backoff(("127.0.0.1", port), 1.0, None, "x") is None
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_worker_reconnect_backoff_survives_late_server():
+    """A worker launched before the server binds retries with backoff and
+    joins once the listener is up (replacement-VM-vs-restarting-server)."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    client = make_paced_clients({"c0": 0.0})[0]
+    policy = ReconnectPolicy(max_attempts=50, base_delay_s=0.05,
+                             max_delay_s=0.1, seed=1)
+    worker = threading.Thread(
+        target=run_client_worker,
+        args=(client, init_params(), ("127.0.0.1", port)),
+        kwargs={"reconnect": policy},
+        daemon=True,
+    )
+    worker.start()
+    time.sleep(0.2)  # guarantee at least one refused connect
+    transport = SocketTransport(port=port)
+    try:
+        transport.start()
+        transport.wait_for_clients(["c0"], timeout_s=10.0)
+        assert transport.is_live("c0")
+        transport.send("c0", {"kind": "shutdown"})
+    finally:
+        transport.close()
+    worker.join(timeout=5.0)
+    assert not worker.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat liveness: hang != slow
+# ---------------------------------------------------------------------------
+
+def test_hang_is_detected_by_heartbeats_and_recovered():
+    plan = FaultPlan([FaultSpec("hang", "c1", 1)])
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.0})
+    driver = Experiment().chaos(plan).transport(
+        reply_timeout_s=30.0, heartbeat_interval_s=0.05
+    ).serve(clients, init_params())
+    t0 = time.monotonic()
+    with driver:
+        live = driver.run(2)
+    # Detection ran off the 3x-interval heartbeat timeout, not the 30s
+    # reply timeout.
+    assert time.monotonic() - t0 < 20.0
+    assert driver.cohort == ["c0", "c1"]
+    revs = [e for e in driver.trace
+            if isinstance(e, RevocationOccurred) and e.round_idx == 1]
+    assert [e.task for e in revs] == ["c1"]
+    arrivals = [e for e in driver.trace
+                if isinstance(e, UpdateArrived) and e.task == "c1"]
+    assert arrivals[0].attempt == 2  # re-requested after the sever
+    pairing = verify_fault_pairing(plan, driver.trace)
+    assert pairing[("hang", "c1", 1, "train")] == "recovered"
+    assert len(live.rounds) == 2
+
+
+def test_slow_silo_with_flowing_heartbeats_is_not_killed():
+    """The liveness detector must not confuse slow with hung: a silo
+    whose compute is slow but whose receive loop answers PONGs stays
+    connected far past the heartbeat timeout."""
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.5})
+    driver = Experiment().transport(
+        reply_timeout_s=30.0, heartbeat_interval_s=0.05,
+        heartbeat_timeout_s=0.15,
+    ).serve(clients, init_params())
+    with driver:
+        live = driver.run(1)
+    assert [e for e in driver.trace if isinstance(e, RevocationOccurred)] == []
+    folded = {e.task for e in driver.trace if isinstance(e, UpdateFolded)}
+    assert folded == {"c0", "c1"}
+    assert driver.cohort == ["c0", "c1"]
+    assert len(live.rounds) == 1
+
+
+# ---------------------------------------------------------------------------
+# Boundary matrix on the live driver
+# ---------------------------------------------------------------------------
+
+def test_eval_phase_revocation_skips_metrics_and_rejoins():
+    plan = FaultPlan([FaultSpec("revocation", "c1", 1, phase="eval")])
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.05})
+    driver = Experiment().chaos(plan).transport(reply_timeout_s=30.0).serve(
+        clients, init_params()
+    )
+    with driver:
+        live = driver.run(2)
+    # Round 1 trained both silos; the eval sever cost only c1's metrics.
+    assert set(live.rounds[0].fold_times_s) == {"c0", "c1"}
+    assert live.rounds[0].metrics  # survivor's metrics still aggregated
+    # The silo rejoined and trained round 2.
+    assert driver.cohort == ["c0", "c1"]
+    assert set(live.rounds[1].fold_times_s) == {"c0", "c1"}
+    assert [e for e in driver.trace if isinstance(e, RevocationOccurred)] == []
+    pairing = verify_fault_pairing(plan, driver.trace)
+    assert pairing[("revocation", "c1", 1, "eval")] == "metrics-only"
+
+
+def test_double_crash_same_silo_same_round_recovers_on_third_attempt():
+    clients = make_paced_clients(
+        {"c0": 0.0, "c1": 0.05}, crash_on={"c1": (1, 2)}
+    )
+    driver = Experiment().transport(
+        reply_timeout_s=30.0, max_rerequests=2
+    ).serve(clients, init_params())
+    with driver:
+        live = driver.run(1)
+    assert driver.fold_reports[0].rerequested == ["c1"]
+    assert not driver.fold_reports[0].excluded
+    assert driver.cohort == ["c0", "c1"]
+    # Three physical train attempts (two crashes, one success) — the
+    # replayed trace models the round's recovery as a single
+    # revocation + re-arrival (ClientArrival carries one revoke_at_s),
+    # so the arrival is tagged attempt 2.
+    assert clients[1]._attempts == 3
+    arrivals = [e for e in driver.trace
+                if isinstance(e, UpdateArrived) and e.task == "c1"]
+    assert [e.attempt for e in arrivals] == [2]
+    folded = [e.task for e in driver.trace if isinstance(e, UpdateFolded)]
+    assert sorted(folded) == ["c0", "c1"]
+    assert len(live.rounds) == 1
+
+
+def test_crash_recovery_racing_reply_timeout_is_consistent():
+    """A crash whose recovery lands right at the reply-timeout tick must
+    resolve either way (recovered-and-folded or excluded) without
+    double-folding, wedging the round, or charging a straggler strike."""
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.0},
+                                 crash_on={"c1": (1,)})
+    clients[1].delay_s = [0.0, 0.35, 0.0]  # retrain finishes ~ at the tick
+    driver = Experiment().transport(reply_timeout_s=0.35).serve(
+        clients, init_params(), escalate_after=1
+    )
+    with driver:
+        live = driver.run(2)
+    r1_folds = [e for e in driver.trace
+                if isinstance(e, UpdateFolded) and e.task == "c1"
+                and e.round_idx == 1]
+    assert len(r1_folds) <= 1
+    report = driver.fold_reports[0]
+    if report.excluded:
+        assert report.excluded == ["c1"]
+    else:
+        assert report.rerequested == ["c1"]
+    # Crashed recoveries never count as §4.4 strikes, whichever way the
+    # race resolved.
+    assert [e for e in driver.trace if isinstance(e, StragglerEscalated)] == []
+    assert len(live.rounds) == 2
+
+
+def test_corrupt_frame_rerequests_over_live_connection():
+    plan = FaultPlan([FaultSpec("corrupt_frame", "c1", 1)])
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.05})
+    driver = Experiment().chaos(plan).transport(reply_timeout_s=30.0).serve(
+        clients, init_params()
+    )
+    with driver:
+        live = driver.run(2)
+    arrivals = [e for e in driver.trace
+                if isinstance(e, UpdateArrived) and e.task == "c1"
+                and e.round_idx == 1]
+    assert [e.attempt for e in arrivals] == [2]
+    assert driver.cohort == ["c0", "c1"]
+    pairing = verify_fault_pairing(plan, driver.trace)
+    assert pairing[("corrupt_frame", "c1", 1, "train")] == "recovered"
+    assert len(live.rounds) == 2
+
+
+# ---------------------------------------------------------------------------
+# Builder surface
+# ---------------------------------------------------------------------------
+
+def test_builder_validates_hardening_knobs():
+    with pytest.raises(ValueError, match="heartbeat_interval_s"):
+        Experiment().transport(heartbeat_interval_s=0.0)
+    with pytest.raises(ValueError, match="heartbeat_interval_s"):
+        Experiment().transport(heartbeat_interval_s=-1.0)
+    with pytest.raises(ValueError, match="heartbeat_timeout_s"):
+        Experiment().transport(heartbeat_interval_s=0.1,
+                               heartbeat_timeout_s=0.0)
+    with pytest.raises(ValueError, match="heartbeat_interval_s"):
+        Experiment().transport(heartbeat_timeout_s=0.5)
+    with pytest.raises(TypeError, match="ReconnectPolicy"):
+        Experiment().transport(reconnect=0.5)
+    with pytest.raises(TypeError, match="FaultPlan"):
+        Experiment().chaos("crash c0")
+
+
+def test_builder_rejects_chaos_outside_serve_targets():
+    plan = FaultPlan([FaultSpec("crash", "c0", 1)])
+    env = make_toy_env()
+    app = make_toy_app()
+    with pytest.raises(ValueError, match="serve"):
+        Experiment.on(env).app(app).chaos(plan).build()
+    clients = make_paced_clients({"c0": 0.0})
+    with pytest.raises(ValueError, match="thread"):
+        Experiment().chaos(plan).transport(kind="process").serve(
+            {"c0": lambda: clients[0]}, init_params()
+        )
+
+
+def test_builder_wires_chaos_onto_both_serve_targets():
+    plan = FaultPlan([FaultSpec("slow", "c0", 1, delay_s=0.01)])
+    clients = make_paced_clients({"c0": 0.0})
+    # Virtual-clock target: the schedule is decorated and shares the bus.
+    server = Experiment().chaos(plan).serve(clients, init_params())
+    assert isinstance(server, AsyncFLServer)
+    assert isinstance(server.schedule, ChaosSchedule)
+    assert server.schedule.bus is server.bus
+    sim = server.run(1)
+    markers = [e for e in server.bus.trace if isinstance(e, FaultInjected)]
+    assert [(m.kind, m.task) for m in markers] == [("slow", "c0")]
+    assert len(sim.rounds) == 1
+    # Live target: the plan lands on the driver and the clients are
+    # wrapped; serve-time kwargs still win over the builder chain.
+    driver = Experiment().chaos(plan).transport().serve(
+        clients, init_params()
+    )
+    assert isinstance(driver, LiveRoundDriver)
+    assert driver.chaos is plan
+    assert type(driver.workers._clients["c0"]).__name__ == "ChaosClient"
+    driver.close()
+    override = FaultPlan([FaultSpec("slow", "c0", 2, delay_s=0.01)])
+    driver2 = Experiment().chaos(plan).transport().serve(
+        clients, init_params(), chaos=override
+    )
+    assert driver2.chaos is override
+    driver2.close()
+
+
+def test_builder_passes_heartbeat_and_reconnect_through():
+    clients = make_paced_clients({"c0": 0.0})
+    policy = ReconnectPolicy(max_attempts=4)
+    driver = Experiment().transport(
+        heartbeat_interval_s=0.2, reconnect=policy
+    ).serve(clients, init_params())
+    assert driver.heartbeat_interval_s == pytest.approx(0.2)
+    assert driver.heartbeat_timeout_s == pytest.approx(0.6)  # 3x default
+    assert driver.workers._reconnect is policy
+    driver.close()
+
+
+# ---------------------------------------------------------------------------
+# §4.4 cross-host replacement
+# ---------------------------------------------------------------------------
+
+def _toy_scheduler(n_clients=3, n_vms=3):
+    env = make_toy_env(n_vms=n_vms)
+    app = make_toy_app(n_clients=n_clients)
+    return DynamicScheduler(CostModel(env, app, 0.5))
+
+
+def test_restart_lands_on_a_different_host_via_scheduler():
+    plan = FaultPlan([FaultSpec("revocation", "c1", 1)])
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.05})
+    placement = {
+        "s": Assignment("vm0", "on_demand"),
+        "c0": Assignment("vm0", "on_demand"),
+        "c1": Assignment("vm1", "spot"),
+    }
+    driver = Experiment().chaos(plan).transport(reply_timeout_s=30.0).serve(
+        clients,
+        init_params(),
+        scheduler=_toy_scheduler(n_clients=2),
+        placement=placement,
+    )
+    with driver:
+        live = driver.run(2)
+    replaced = [e for e in driver.trace if isinstance(e, VMReplaced)]
+    assert len(replaced) == 1
+    ev = replaced[0]
+    assert ev.task == "c1" and ev.old_vm == "vm1"
+    assert ev.new_vm != "vm1"
+    assert placement["c1"].vm_id == ev.new_vm  # the map moved with it
+    assert driver.workers.host_of("c1") == ev.new_vm
+    assert driver.cohort == ["c0", "c1"]
+    pairing = verify_fault_pairing(plan, driver.trace)
+    assert pairing[("revocation", "c1", 1, "train")] == "recovered"
+    assert len(live.rounds) == 2
+
+
+# ---------------------------------------------------------------------------
+# The capstone: seeded multi-fault soak, sim vs live
+# ---------------------------------------------------------------------------
+
+def _soak_plan():
+    """5 fault kinds over 5 rounds: crash, slow, corrupt_frame, hang,
+    a cross-host revocation, and checkpoint sabotage."""
+    return FaultPlan(
+        [
+            FaultSpec("crash", "c0", 1),
+            FaultSpec("slow", "c1", 2, delay_s=0.25),
+            FaultSpec("corrupt_frame", "c2", 2),
+            FaultSpec("hang", "c1", 3, delay_s=0.25),
+            FaultSpec("revocation", "c0", 4),
+            FaultSpec("corrupt_checkpoint", "s", 4),
+        ],
+        seed=7,
+    )
+
+
+def _soak_clients():
+    return make_paced_clients(
+        {"c0": 0.0, "c1": 0.05, "c2": 0.1}, n_examples=(12, 20, 16)
+    )
+
+
+def _ckpt_managers(root):
+    server = ServerCheckpointManager(
+        str(root / "server_local"), str(root / "server_remote"),
+        interval_rounds=1, keep_last=3,
+    )
+    clients = {
+        cid: ClientCheckpointManager(str(root / f"ckpt_{cid}"))
+        for cid in ("c0", "c1", "c2")
+    }
+    return server, clients
+
+
+def _per_round_folded_weights(trace):
+    """round_idx -> sum of folded client weights."""
+    sums = {}
+    for e in trace:
+        if isinstance(e, UpdateFolded):
+            sums[e.round_idx] = sums.get(e.round_idx, 0.0) + e.weight
+    return sums
+
+
+def test_chaos_soak_sim_vs_live(tmp_path):
+    """The acceptance soak: one seeded plan, five rounds, five fault
+    kinds (incl. checkpoint sabotage and a §4.4 cross-host replacement),
+    replayed on the wall-clock driver and the virtual-clock server —
+    every fault paired, folded weight conserved, per-round signatures
+    identical, final params equal, wall time hard-bounded."""
+    plan = _soak_plan()
+
+    # ---- live (wall clock) ----
+    live_server_ckpt, live_client_ckpts = _ckpt_managers(tmp_path / "live")
+    placement = {
+        cid: Assignment("vm0", "spot") for cid in ("s", "c0", "c1", "c2")
+    }
+    driver = Experiment().chaos(plan).transport(
+        reply_timeout_s=30.0, heartbeat_interval_s=0.05
+    ).serve(
+        _soak_clients(),
+        init_params(),
+        max_rerequests=2,
+        scheduler=_toy_scheduler(),
+        placement=placement,
+        server_ckpt=live_server_ckpt,
+        client_ckpts=live_client_ckpts,
+    )
+    t0 = time.monotonic()
+    with driver:
+        live = driver.run(5)
+    wall = time.monotonic() - t0
+    assert wall < 60.0  # the hard chaos-soak wall bound
+
+    # ---- sim (virtual clock) ----
+    sim_server_ckpt, sim_client_ckpts = _ckpt_managers(tmp_path / "sim")
+    bus = EventBus()
+    server = AsyncFLServer(
+        _soak_clients(),
+        init_params(),
+        schedule=ChaosSchedule(
+            DeterministicSchedule({"c0": 0.01, "c1": 0.02, "c2": 0.03}),
+            plan,
+            bus=bus,
+        ),
+        on_revocation="rerequest",
+        max_rerequests=2,
+        bus=bus,
+        server_ckpt=sim_server_ckpt,
+        client_ckpts=sim_client_ckpts,
+        fault_hook=checkpoint_saboteur(plan, sim_server_ckpt, bus),
+    )
+    sim = server.run(5)
+
+    # Every planned fault is paired with recovery/restore evidence on
+    # BOTH drivers — the soak invariant.
+    for trace in (driver.trace, server.bus.trace):
+        pairing = verify_fault_pairing(plan, trace)
+        assert "unpaired" not in pairing.values(), pairing
+    live_pairing = verify_fault_pairing(plan, driver.trace)
+    assert live_pairing[("corrupt_checkpoint", "s", 4, "train")] == "restored"
+    assert live_pairing[("slow", "c1", 2, "train")] == "delivered"
+    for key, want in [
+        (("crash", "c0", 1, "train"), "recovered"),
+        (("corrupt_frame", "c2", 2, "train"), "recovered"),
+        (("hang", "c1", 3, "train"), "recovered"),
+        (("revocation", "c0", 4, "train"), "recovered"),
+    ]:
+        assert live_pairing[key] == want
+
+    # Folded weight is conserved every round despite the faults: all
+    # three silos' samples (12 + 20 + 16) land in every round's fold.
+    for trace in (driver.trace, server.bus.trace):
+        weights = _per_round_folded_weights(trace)
+        assert sorted(weights) == [1, 2, 3, 4, 5]
+        for r, sum_w in weights.items():
+            assert sum_w == pytest.approx(48.0), (r, sum_w)
+
+    # Cross-driver parity: identical per-round event multisets.
+    assert chaos_signature(driver.trace) == chaos_signature(server.bus.trace)
+
+    # §4.4: the live revocations moved silos to different hosts.
+    replaced = [e for e in driver.trace if isinstance(e, VMReplaced)]
+    assert replaced and all(e.new_vm != e.old_vm for e in replaced)
+    assert any(e.task == "c0" for e in replaced)
+
+    # §4.3: the sabotaged round restored from a *verified* source.
+    recoveries = [e for e in driver.trace if isinstance(e, RecoveryCompleted)]
+    assert [e.resume_round for e in recoveries] == [4]
+    assert recoveries[0].restored_from != "none"
+
+    # The model state is indistinguishable across drivers.
+    assert_params_close(live.final_params, sim.final_params)
+    assert driver.cohort == ["c0", "c1", "c2"]
+    assert len(live.rounds) == len(sim.rounds) == 5

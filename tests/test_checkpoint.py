@@ -12,6 +12,7 @@ except ModuleNotFoundError:  # property tests skip cleanly without it
 
 from repro.checkpoint import (
     ClientCheckpointManager,
+    DeserializationError,
     ServerCheckpointManager,
     deserialize_pytree,
     pytree_num_bytes,
@@ -151,3 +152,93 @@ def test_freshest_without_server_manager(tmp_path):
 def test_pytree_num_bytes():
     tree = {"a": np.zeros((10,), np.float32), "b": np.zeros((3,), np.int8)}
     assert pytree_num_bytes(tree) == 43
+
+
+# ---------------------------------------------------------------------------
+# Integrity: corrupt / truncated / empty checkpoint files
+# ---------------------------------------------------------------------------
+
+def _truncate(path, keep_frac=0.5):
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(1, int(size * keep_frac)))
+
+
+def test_truncated_newest_falls_back_to_previous(tmp_path):
+    """Regression (§4.3): a hand-truncated newest checkpoint must degrade
+    the restore point to the previous round, not crash the restore."""
+    mgr = ServerCheckpointManager(
+        str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=1, keep_last=3
+    )
+    for r in (1, 2, 3):
+        mgr.save(r, _state(float(r)), blocking_transfer=True)
+    _truncate(str(tmp_path / "r" / "round_3.ckpt"))
+    with pytest.warns(RuntimeWarning, match="skipping unreadable checkpoint"):
+        r, restored = mgr.restore(_state(0.0))
+    assert r == 2
+    np.testing.assert_array_equal(restored["w"], _state(2.0)["w"])
+
+
+def test_crc_mismatch_detected_and_skipped(tmp_path):
+    """A bit-flip inside the payload fails the CRC32 check."""
+    mgr = ClientCheckpointManager(str(tmp_path / "c0"))
+    mgr.save(1, _state(1.0))
+    path = mgr.save(2, _state(2.0))
+    with open(path, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        last = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([last[0] ^ 0xFF]))
+    with pytest.warns(RuntimeWarning, match="CRC32 mismatch"):
+        r, restored = mgr.restore(_state(0.0))
+    assert r == 1
+    np.testing.assert_array_equal(restored["w"], _state(1.0)["w"])
+
+
+def test_zero_byte_checkpoint_is_skipped_with_warning(tmp_path):
+    """Zero-byte truncation stubs (crash mid-create) are skipped by the
+    listing itself instead of surfacing an opaque deserializer error."""
+    mgr = ClientCheckpointManager(str(tmp_path / "c0"))
+    mgr.save(4, _state(4.0))
+    (tmp_path / "c0" / "round_9.ckpt").write_bytes(b"")
+    with pytest.warns(RuntimeWarning, match="skipping empty checkpoint file"):
+        info = mgr.latest()
+    assert info is not None and info.round_idx == 4
+    with pytest.warns(RuntimeWarning, match="skipping empty checkpoint file"):
+        r, _ = mgr.restore(_state(0.0))
+    assert r == 4
+
+
+def test_resolve_freshest_passes_over_corrupt_newest(tmp_path):
+    """Freshest-wins must only propose restore points that verify: a
+    sabotaged server file yields to an older durable one — or to an
+    intact client copy when the client's is strictly newer."""
+    s = ServerCheckpointManager(str(tmp_path / "l"), str(tmp_path / "r"), interval_rounds=1)
+    cs = {"c0": ClientCheckpointManager(str(tmp_path / "c0"))}
+    s.save(4, _state(4.0), blocking_transfer=True)
+    s.save(6, _state(6.0), blocking_transfer=True)
+    cs["c0"].save(5, _state(5.0))
+    _truncate(str(tmp_path / "r" / "round_6.ckpt"))
+    src, info = resolve_freshest(s, cs)
+    assert src == "client:c0" and info.round_idx == 5
+    _truncate(str(tmp_path / "c0" / "round_5.ckpt"), keep_frac=0.3)
+    src2, info2 = resolve_freshest(s, cs)
+    assert src2 == "server" and info2.round_idx == 4
+
+
+def test_all_checkpoints_corrupt_raises_not_found(tmp_path):
+    mgr = ClientCheckpointManager(str(tmp_path / "c0"))
+    path = mgr.save(1, _state(1.0))
+    _truncate(path)
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="no client checkpoint"):
+            mgr.restore(_state(0.0))
+
+
+def test_truncated_blob_raises_deserialization_error():
+    """Payload-level corruption (headerless/legacy path) surfaces as the
+    typed DeserializationError, distinct from template mismatches which
+    keep their KeyError/ValueError."""
+    blob = serialize_pytree(_state(1.0))
+    with pytest.raises(DeserializationError, match="malformed checkpoint blob"):
+        deserialize_pytree(blob[: len(blob) // 2], _state(0.0))

@@ -523,7 +523,7 @@ def test_driver_restarts_are_bounded_by_cohort(monkeypatch):
     delays = {"c0": 0.0, "c1": 0.1}
     clients = make_paced_clients(delays, crash_on={"c1": (1,)})
     pool = ThreadWorkerPool(clients, init_params())
-    monkeypatch.setattr(pool, "restart", lambda cid, addr: False)
+    monkeypatch.setattr(pool, "restart", lambda cid, addr, host=None: False)
     driver = LiveRoundDriver(pool, init_params(), reply_timeout_s=30.0)
     with driver:
         live = driver.run(1)
