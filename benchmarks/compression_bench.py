@@ -1,0 +1,244 @@
+"""Wire-compression benchmark: bytes/round + WAN round time + accuracy.
+
+What does the compressed update path (``repro.federated.compression`` +
+the fused dequantize-and-fold kernel) buy on a cross-silo WAN?  Per
+codec (raw fp32 baseline, int8, fp16, top-k 10%):
+
+* ``update_bytes_per_client`` — the serialized ``c_msg_train`` frame a
+  silo actually puts on the inter-cloud link (compressed frames are
+  fixed-width given the element count, so this is exact, not sampled);
+* ``reduction_vs_fp32`` — dense fp32 bytes / wire bytes for that leg
+  (the tentpole acceptance numbers: int8 >= 3x, topk(0.1) >= 5x);
+* ``round_s_wan`` — simulated round time on a 100 Mbit/s WAN uplink:
+  measured compute (client-side encode incl. error feedback + wire
+  codec roundtrip + server-side fused fold) plus wire_bytes / link
+  rate.  Silos upload in parallel, so the wire term is one client's
+  frame, not the cohort sum.  Compression must be *strictly faster*
+  here: the quantize/fold compute it adds is orders of magnitude
+  cheaper than the WAN bytes it removes;
+* ``final_loss`` / ``loss_delta_vs_raw`` — short convergence run (the
+  linear toy cohort from the transport tests) through the real
+  ``AsyncFLServer`` compressed path with error feedback: the accuracy
+  price of quantization, which must stay within tolerance of raw.
+
+Writes BENCH_compression.json (or --out) and prints
+``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
+
+Usage:
+  PYTHONPATH=src python benchmarks/compression_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated.agg_engine import AggregationEngine, plan_for
+from repro.federated.async_server import AsyncFLServer, DeterministicSchedule
+from repro.federated.client import FLClient
+from repro.federated.compression import (
+    ClientCompressor,
+    parse_compression,
+    serialize_update,
+    deserialize_update,
+)
+from repro.checkpoint.serializer import deserialize_pytree, serialize_pytree
+from repro.optim import make_optimizer
+
+Row = Tuple[str, float, str]
+
+CODECS: List[Optional[str]] = [None, "int8", "fp16", "topk:0.1"]
+N_CLIENTS = 4
+ROUNDS = 6
+WAN_BIT_S = 100e6  # simulated inter-cloud uplink, paper §5 scale
+FULL_PARAMS = [250_000, 1_000_000]
+QUICK_PARAMS = [250_000]
+CONV_ROUNDS = 12
+
+
+def _codec_name(codec: Optional[str]) -> str:
+    return "fp32" if codec is None else codec.replace(":", "")
+
+
+def bench_codec_shape(
+    codec: Optional[str], n_params: int, rounds: int = ROUNDS
+) -> Dict[str, Any]:
+    """Measured encode+wire-roundtrip+fold compute for one codec, plus
+    the exact wire size, on a (n_params,) model with N_CLIENTS silos."""
+    spec = parse_compression(codec)
+    rng = np.random.default_rng(0)
+    base = {"w": jnp.zeros((n_params,), jnp.float32)}
+    locals_ = [
+        {"w": jnp.asarray(rng.standard_normal(n_params) * 0.1, jnp.float32)}
+        for _ in range(N_CLIENTS)
+    ]
+    weights = [float(10 * (i + 1)) for i in range(N_CLIENTS)]
+    engine = AggregationEngine()
+    compressors = [ClientCompressor(spec) for _ in range(N_CLIENTS)] if spec else []
+
+    def one_round() -> int:
+        agg = engine.streaming(base=base if spec else None)
+        frame_len = 0
+        for i, (local, w) in enumerate(zip(locals_, weights)):
+            if spec is None:
+                frame = serialize_pytree(local)
+                agg.add(deserialize_pytree(frame, base), w)
+            else:
+                update = compressors[i].encode(base, local)
+                frame = serialize_update(update)
+                agg.add(deserialize_update(frame), w)
+            frame_len = len(frame)
+        jax.block_until_ready(jax.tree.leaves(agg.result()))
+        return frame_len
+
+    wire_bytes = one_round()  # warm: jit traces, plan cache
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        one_round()
+        times.append(time.perf_counter() - t0)
+    compute_s = statistics.median(times)
+
+    dense_bytes = plan_for(base).total_elems * 4
+    wan_s = wire_bytes / (WAN_BIT_S / 8)  # parallel per-silo uplinks
+    entry = {
+        "codec": _codec_name(codec),
+        "n_params": n_params,
+        "n_clients": N_CLIENTS,
+        "update_bytes_per_client": wire_bytes,
+        "update_bytes_per_round": wire_bytes * N_CLIENTS,
+        "dense_bytes_per_client": dense_bytes,
+        "reduction_vs_fp32": round(dense_bytes / wire_bytes, 2),
+        "compute_s": round(compute_s, 6),
+        "wan_uplink_s": round(wan_s, 6),
+        "round_s_wan": round(compute_s + wan_s, 6),
+    }
+    print(
+        f"[compression] {_codec_name(codec)} P={n_params//1000}k: "
+        f"{wire_bytes/1e3:.0f}kB/update ({entry['reduction_vs_fp32']}x), "
+        f"compute={compute_s*1e3:.1f}ms wan={wan_s*1e3:.1f}ms "
+        f"round={entry['round_s_wan']*1e3:.1f}ms",
+        file=sys.stderr,
+    )
+    return entry
+
+
+def _linear_cohort(seed: int = 7) -> List[FLClient]:
+    class _Silo:
+        def __init__(self, x: Any, y: Any) -> None:
+            self.x, self.y = x, y
+
+        def batches(self, batch_size: int, split: str = "train"):
+            for i in range(0, len(self.x), batch_size):
+                yield (self.x[i:i + batch_size], self.y[i:i + batch_size])
+
+    def loss(params: Any, batch: Any) -> jnp.ndarray:
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal(3)
+    clients = []
+    for i in range(2):
+        n = 24
+        x = rng.standard_normal((n, 3))
+        y = x @ w_true + 0.05 * rng.standard_normal(n)
+        clients.append(
+            FLClient(
+                f"c{i}",
+                _Silo(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)),
+                loss,
+                make_optimizer("sgdm", 1e-2),
+                batch_size=8,
+            )
+        )
+    return clients
+
+
+def bench_convergence(rounds: int = CONV_ROUNDS) -> Dict[str, Any]:
+    """Final loss per codec on the linear toy cohort (error feedback on)."""
+    losses: Dict[str, float] = {}
+    for codec in CODECS:
+        server = AsyncFLServer(
+            _linear_cohort(),
+            {"w": jnp.zeros((3,), jnp.float32)},
+            schedule=DeterministicSchedule(0.0),
+            compression=codec,
+        )
+        result = server.run(rounds)
+        losses[_codec_name(codec)] = float(result.rounds[-1].metrics["loss"])
+    raw = losses["fp32"]
+    report = {
+        "rounds": rounds,
+        "final_loss": {k: round(v, 6) for k, v in losses.items()},
+        "loss_delta_vs_raw": {
+            k: round(v - raw, 6) for k, v in losses.items() if k != "fp32"
+        },
+    }
+    print(f"[compression] convergence: {report['final_loss']}", file=sys.stderr)
+    return report
+
+
+def run_grid(quick: bool = False, rounds: int = ROUNDS) -> Dict[str, Any]:
+    params = QUICK_PARAMS if quick else FULL_PARAMS
+    return {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "wan_bit_s": WAN_BIT_S,
+        "entries": [
+            bench_codec_shape(c, p, rounds=rounds)
+            for p in params
+            for c in CODECS
+        ],
+        "convergence": bench_convergence(),
+    }
+
+
+def bench_compression() -> List[Row]:
+    """run.py-compatible rows (quick grid)."""
+    report = run_grid(quick=True, rounds=4)
+    rows: List[Row] = []
+    for e in report["entries"]:
+        rows.append((
+            f"compression_{e['codec']}_{e['n_params']//1000}k",
+            e["round_s_wan"] * 1e6,
+            f"wire_kb={e['update_bytes_per_client']/1e3:.0f};"
+            f"reduction={e['reduction_vs_fp32']};"
+            f"compute_us={e['compute_s']*1e6:.0f}",
+        ))
+    for k, d in report["convergence"]["loss_delta_vs_raw"].items():
+        rows.append((f"compression_loss_delta_{k}", 0.0, f"delta={d}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--out", default="BENCH_compression.json")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[compression] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for e in report["entries"]:
+        print(
+            f"compression_{e['codec']}_{e['n_params']},"
+            f"{e['round_s_wan']*1e6:.1f},"
+            f"wire_kb={e['update_bytes_per_client']/1e3:.0f};"
+            f"reduction={e['reduction_vs_fp32']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ def main() -> None:
     from .aggregation_bench import bench_aggregation
     from .async_round_bench import bench_async_round
     from .chaos_bench import bench_chaos
+    from .compression_bench import bench_compression
     from .control_plane_bench import bench_control_plane
     from .deadline_bench import bench_deadline_round
     from .kernel_bench import bench_kernels
@@ -37,6 +38,7 @@ def main() -> None:
         bench_deadline_round,       # T_round partial rounds vs barrier-on-count
         bench_control_plane,        # event-bus overhead vs NULL_BUS (<5%)
         bench_transport,            # loopback socket rounds vs in-process
+        bench_compression,          # compressed wire path: bytes + WAN round time
         bench_chaos,                # seeded fault soak: MTTR + rounds lost
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]

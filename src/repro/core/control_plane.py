@@ -500,6 +500,7 @@ class Experiment:
         self._carry_discount: float = 0.5
         self._transport: Optional[Dict[str, Any]] = None
         self._chaos: Optional[Any] = None
+        self._compression: Optional[Any] = None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -515,6 +516,7 @@ class Experiment:
         exp._carry_discount = self._carry_discount
         exp._transport = None if self._transport is None else dict(self._transport)
         exp._chaos = self._chaos
+        exp._compression = self._compression
         for key, value in changes.items():
             setattr(exp, key, value)
         return exp
@@ -582,11 +584,36 @@ class Experiment:
         return self._set(use_greedy_mapping=greedy, mapping_prices=prices)
 
     def aggregation(
-        self, aggreg_time_fn: Optional[Callable[[str], float]]
+        self,
+        aggreg_time_fn: Optional[Callable[[str], float]] = None,
+        *,
+        compression: Any = None,
     ) -> "Experiment":
-        """Measured-engine hook for the server aggregation time (e.g.
-        ``repro.federated.agg_engine.make_measured_aggreg_fn``)."""
-        return self._set(aggreg_time_fn=aggreg_time_fn)
+        """Aggregation-path knobs.
+
+        ``aggreg_time_fn`` is the measured-engine hook for the server
+        aggregation time (e.g.
+        ``repro.federated.agg_engine.make_measured_aggreg_fn``).
+
+        ``compression`` turns on the compressed c_msg_train wire path on
+        the *serve* targets: ``"int8"``, ``"fp16"``, ``"topk"`` /
+        ``"topk:0.05"``, or a
+        :class:`~repro.federated.compression.CompressionSpec`.  Clients
+        encode quantized/sparsified deltas (with error feedback), the
+        server folds them through the fused dequantize-and-fold path,
+        and round message logs carry wire vs dense bytes.  The knob is
+        validated here — a bad codec string fails at chain-building
+        time, not mid-run — and, like :meth:`chaos`, rejected by the
+        simulator target (:meth:`build`), which models message sizes
+        rather than carrying real payloads."""
+        exp = self
+        if aggreg_time_fn is not None:
+            exp = exp._set(aggreg_time_fn=aggreg_time_fn)
+        if compression is not None:
+            from repro.federated.compression import parse_compression
+
+            exp = exp._clone(_compression=parse_compression(compression))
+        return exp if exp is not self else self._clone()
 
     def async_rounds(
         self,
@@ -821,6 +848,13 @@ class Experiment:
                 "in-process engine and the socket transport); the "
                 "simulator target models faults with .revocations(k_r=...)"
             )
+        if self._compression is not None:
+            raise ValueError(
+                "wire compression applies to the serve() targets (real "
+                "payloads cross a real or virtual wire there); the "
+                "simulator target models message sizes analytically — "
+                "feed it measured compressed sizes via the cost model"
+            )
         fields = dict(self._overrides)
         if self._deadline is not None:
             fields["round_deadline"] = self._sim_deadline()
@@ -911,7 +945,8 @@ class Experiment:
                         "transport(kind='thread') for chaos runs"
                     )
                 workers: Any = ProcessWorkerPool(
-                    clients, initial_params, reconnect=spec["reconnect"]
+                    clients, initial_params, reconnect=spec["reconnect"],
+                    compression=self._compression,
                 )
             else:
                 if isinstance(clients, Mapping):
@@ -926,7 +961,8 @@ class Experiment:
                     # (chaos= below).
                     live_clients = self._chaos.wrap_clients(clients)
                 workers = ThreadWorkerPool(
-                    live_clients, initial_params, reconnect=spec["reconnect"]
+                    live_clients, initial_params, reconnect=spec["reconnect"],
+                    compression=self._compression,
                 )
             if self._chaos is not None:
                 server_kwargs.setdefault("chaos", self._chaos)
@@ -949,6 +985,7 @@ class Experiment:
             server_kwargs.setdefault(
                 "heartbeat_timeout_s", spec["heartbeat_timeout_s"]
             )
+            server_kwargs.setdefault("compression", self._compression)
             return LiveRoundDriver(
                 workers,
                 initial_params,
@@ -979,6 +1016,7 @@ class Experiment:
                 self._chaos,
                 bus=bus,
             )
+        server_kwargs.setdefault("compression", self._compression)
         return AsyncFLServer(
             clients,
             initial_params,

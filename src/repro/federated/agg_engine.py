@@ -185,13 +185,37 @@ def fused_stacked_tree_reduce(stacked: Any, weights: jnp.ndarray) -> Any:
 class AggStats:
     """Engine counters: `n_traces` counts XLA retraces (a steady-state
     round must hit the jit cache, i.e. n_traces stays flat while n_calls
-    grows), `last_bytes` is the client-side byte volume of the last
-    reduce (for GB/s accounting)."""
+    grows).  Byte volume is tracked on two axes that diverge once updates
+    arrive compressed: ``wire_bytes`` is what actually crossed the
+    transport (the compressed frame), ``folded_bytes`` the dense fp32
+    equivalent the reduce is worth (for GB/s accounting).  For dense
+    updates the two are equal."""
 
     n_calls: int = 0
     n_traces: int = 0
-    last_bytes: int = 0
-    total_bytes: int = 0
+    last_wire_bytes: int = 0
+    total_wire_bytes: int = 0
+    last_folded_bytes: int = 0
+    total_folded_bytes: int = 0
+
+    def record(self, folded: int, wire: Optional[int] = None) -> None:
+        """Account one update: dense-equivalent bytes, and wire bytes if
+        they differ (``wire=None`` means the update arrived dense)."""
+        w = folded if wire is None else wire
+        self.last_wire_bytes = w
+        self.total_wire_bytes += w
+        self.last_folded_bytes = folded
+        self.total_folded_bytes += folded
+
+    # Back-compat aliases: `last_bytes`/`total_bytes` always meant the
+    # dense in-memory volume of the reduce, which is the folded axis.
+    @property
+    def last_bytes(self) -> int:
+        return self.last_folded_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total_folded_bytes
 
 
 class AggregationEngine:
@@ -245,8 +269,7 @@ class AggregationEngine:
             raise ValueError("len(client_params) != len(weights)")
         self.stats.n_calls += 1
         nbytes = sum(l.nbytes for t in client_params for l in jax.tree.leaves(t))
-        self.stats.last_bytes = nbytes
-        self.stats.total_bytes += nbytes
+        self.stats.record(nbytes)
 
         if self.use_pallas:
             plan = plan_for(client_params[0])
@@ -344,9 +367,15 @@ class AggregationEngine:
         return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
 
     # -- streaming -----------------------------------------------------------
-    def streaming(self) -> "StreamingAggregator":
-        """New per-round streaming accumulator (async client folding)."""
-        return StreamingAggregator(self)
+    def streaming(self, base: Any = None) -> "StreamingAggregator":
+        """New per-round streaming accumulator (async client folding).
+
+        ``base`` switches the aggregator to flat/delta mode anchored on
+        the round's global weights — required to fold
+        :class:`~repro.federated.compression.CompressedUpdate` payloads
+        (deltas against ``base``) and numerically identical to the plain
+        weighted average for dense updates (the base cancels exactly)."""
+        return StreamingAggregator(self, base=base)
 
 
 # ---------------------------------------------------------------------------
@@ -427,6 +456,41 @@ def _scale_acc(acc, inv):
     return jax.tree.map(lambda a: a * inv, acc)
 
 
+# Flat-mode (delta) folds: the padded fp32 accumulator is donated so XLA
+# updates it in place, exactly like the tree-mode `_accum_tree`.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _flat_delta_fold(acc, flat, base, w):
+    """acc[:L] += (flat - base) * w — dense update folded as a delta."""
+    return acc.at[: base.shape[0]].add((flat - base) * w)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _flat_scatter_fold(acc, idx, vals, w):
+    """acc[idx] += vals * w — the top-k sparse fold (fp16 values)."""
+    return acc.at[idx].add(vals.astype(jnp.float32) * w)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _flat_dequant_fold_jnp(acc, data, scales, w):
+    """Fused dequantize-and-fold for einsum-tier backends: one jitted
+    pass, same per-block math as the Pallas `dequant_fold` kernel."""
+    nb = scales.shape[0]
+    x = data.reshape(nb, -1).astype(jnp.float32)
+    return acc + ((w * scales)[:, None] * x).reshape(acc.shape)
+
+
+@jax.jit
+def _flat_finalize(acc, base, inv):
+    """base + acc[:L] * inv — the flat-mode weighted average.  The padded
+    accumulator is NOT donated here: the (L,) output can't alias it."""
+    return base + acc[: base.shape[0]] * inv
+
+
+def _leaf_nbytes(leaf: Any) -> int:
+    nbytes = getattr(leaf, "nbytes", None)
+    return int(nbytes) if nbytes is not None else int(np.asarray(leaf).nbytes)
+
+
 class StreamingAggregator:
     """Running weighted accumulation: fold clients in as they land.
 
@@ -434,38 +498,179 @@ class StreamingAggregator:
     bytes and keeps only a single fp32 accumulator (donated in place),
     so asynchronously arriving silos are aggregated in O(L) memory
     rather than O(N·L).  ``result()`` normalizes by the running weight
-    total, casts back to the model dtypes, and consumes the accumulator.
+    total, casts back to the model dtypes, consumes the accumulator, and
+    resets all per-fold state so a reused aggregator starts a fresh fold.
+
+    With ``base`` (the round's global weights) the aggregator runs in
+    *flat/delta mode*: one padded fp32 vector accumulator, every update
+    folded as ``w * (update - base)`` and the result read out as
+    ``base + acc / wsum`` — numerically the same weighted average (the
+    base cancels exactly), but able to fold
+    :class:`~repro.federated.compression.CompressedUpdate` payloads
+    (int8 / fp16 / top-k deltas) directly via the fused Pallas
+    dequantize-and-fold kernel, never materializing a dense fp32 update.
     """
 
-    def __init__(self, engine: Optional[AggregationEngine] = None) -> None:
+    def __init__(
+        self, engine: Optional[AggregationEngine] = None, base: Any = None
+    ) -> None:
         self._engine = engine
+        self._plan: Optional[RavelPlan] = None
+        self._base_flat: Optional[jnp.ndarray] = None
+        self._padded_len = 0
+        if base is not None:
+            from repro.kernels.fedavg_reduce import BLOCK as _block
+            self._plan = plan_for(base)
+            self._base_flat = self._plan.flatten(base)
+            self._padded_len = -(-self._plan.total_elems // _block) * _block
         self._acc: Any = None
+        self._acc_flat: Optional[jnp.ndarray] = None
         self._dtypes: Optional[List[Any]] = None
         self._treedef = None
         self._wsum = 0.0
         self.n_clients = 0
 
-    def add(self, params: Any, weight: float, block: bool = False) -> None:
+    def _reset(self) -> None:
+        """Clear per-fold state (`result()` calls this); the base/plan
+        are construction-time configuration and survive for reuse."""
+        self._acc = None
+        self._acc_flat = None
+        self._dtypes = None
+        self._treedef = None
+        self._wsum = 0.0
+        self.n_clients = 0
+
+    def _ensure_flat_acc(self) -> jnp.ndarray:
+        if self._acc_flat is None:
+            self._acc_flat = jnp.zeros(self._padded_len, jnp.float32)
+        return self._acc_flat
+
+    def add(
+        self,
+        params: Any,
+        weight: float,
+        block: bool = False,
+        wire_bytes: Optional[int] = None,
+    ) -> None:
         """Fold one client in; ``block=True`` waits for the fused
         accumulate to finish (the async round engine uses it to measure
-        the true per-fold cost instead of dispatch latency)."""
+        the true per-fold cost instead of dispatch latency).
+        ``wire_bytes`` is the transport frame size when it differs from
+        the dense in-memory bytes (compressed arrivals); compressed
+        payloads themselves route to :meth:`add_compressed`."""
+        from repro.federated.compression import CompressedUpdate
+        if isinstance(params, CompressedUpdate):
+            self.add_compressed(params, weight, block=block, wire_bytes=wire_bytes)
+            return
         w = float(weight)
         if w < 0:
             raise ValueError("client weight must be non-negative")
-        if self._acc is None:
+        if self._base_flat is not None:
+            flat = self._plan.flatten(params)
+            if flat.shape[0] != self._base_flat.shape[0]:
+                raise ValueError(
+                    f"update has {flat.shape[0]} elements; the aggregation "
+                    f"base has {self._base_flat.shape[0]}"
+                )
+            acc = self._ensure_flat_acc()
+            self._acc_flat = _flat_delta_fold(
+                acc, flat, self._base_flat, jnp.float32(w)
+            )
+            folded = self._acc_flat
+        elif self._acc is None:
             leaves, self._treedef = jax.tree.flatten(params)
-            self._dtypes = [jnp.result_type(l) for l in leaves]
+            # Pin accumulator dtypes from the first client's *concrete*
+            # leaf dtypes (what jnp.asarray actually stores) — never
+            # jnp.result_type, which weak-type-promotes Python-scalar
+            # and numpy-default leaves past what jax will materialize.
+            self._dtypes = [jnp.asarray(l).dtype for l in leaves]
             self._acc = _scale_tree(params, jnp.float32(w))
+            folded = self._acc
         else:
             self._acc = _accum_tree(self._acc, params, jnp.float32(w))
+            folded = self._acc
         if block:
-            jax.block_until_ready(self._acc)
+            jax.block_until_ready(folded)
         self._wsum += w
         self.n_clients += 1
         if self._engine is not None:
-            nbytes = sum(l.nbytes for l in jax.tree.leaves(params))
-            self._engine.stats.last_bytes = nbytes
-            self._engine.stats.total_bytes += nbytes
+            nbytes = sum(_leaf_nbytes(l) for l in jax.tree.leaves(params))
+            self._engine.stats.record(nbytes, wire_bytes)
+
+    def add_compressed(
+        self,
+        update: Any,
+        weight: float,
+        block: bool = False,
+        wire_bytes: Optional[int] = None,
+    ) -> None:
+        """Fold one compressed delta straight into the fp32 accumulator.
+
+        int8 / fp16 payloads go through the fused Pallas
+        ``dequant_fold`` kernel (or its jitted fallback on einsum-tier
+        backends) — one pass over the quantized bytes, no dense fp32
+        intermediate; top-k payloads fold with a donated sparse scatter.
+        """
+        if self._base_flat is None or self._plan is None:
+            raise ValueError(
+                "compressed updates need a delta base: construct the "
+                "aggregator with streaming(base=global_params)"
+            )
+        if update.total_elems != self._plan.total_elems:
+            raise ValueError(
+                f"compressed update has {update.total_elems} elements; "
+                f"the model has {self._plan.total_elems}"
+            )
+        w = float(weight)
+        if w < 0:
+            raise ValueError("client weight must be non-negative")
+        acc = self._ensure_flat_acc()
+        lp = self._padded_len
+        if update.codec == "topk":
+            self._acc_flat = _flat_scatter_fold(
+                acc,
+                jnp.asarray(np.asarray(update.indices)),
+                jnp.asarray(np.asarray(update.data)),
+                jnp.float32(w),
+            )
+        elif update.codec in ("int8", "fp16"):
+            from repro.federated.compression import QBLOCK
+            nb = lp // QBLOCK
+            data = np.zeros(lp, dtype=update.data.dtype)
+            data[: update.total_elems] = update.data
+            if update.codec == "int8":
+                scales = np.asarray(update.scales, np.float32)
+                if scales.shape != (nb,):
+                    raise ValueError(
+                        f"int8 update has {scales.shape} scales; expected ({nb},)"
+                    )
+            else:
+                scales = np.ones(nb, np.float32)
+            if self._use_pallas():
+                from repro.kernels.fedavg_reduce import dequant_fold
+                interp = self._engine.interpret if self._engine is not None else None
+                self._acc_flat = dequant_fold(
+                    acc, jnp.asarray(data), jnp.asarray(scales),
+                    jnp.float32(w), interpret=interp,
+                )
+            else:
+                self._acc_flat = _flat_dequant_fold_jnp(
+                    acc, jnp.asarray(data), jnp.asarray(scales), jnp.float32(w)
+                )
+        else:
+            raise ValueError(f"unknown compressed codec {update.codec!r}")
+        if block:
+            jax.block_until_ready(self._acc_flat)
+        self._wsum += w
+        self.n_clients += 1
+        if self._engine is not None:
+            wire = wire_bytes if wire_bytes is not None else update.wire_bytes
+            self._engine.stats.record(update.dense_bytes, wire)
+
+    def _use_pallas(self) -> bool:
+        if self._engine is not None:
+            return bool(self._engine.use_pallas)
+        return jax.default_backend() == "tpu"
 
     def add_stale(
         self,
@@ -509,17 +714,28 @@ class StreamingAggregator:
         return folded
 
     def result(self) -> Any:
-        if self._acc is None:
+        if self._acc is None and self._acc_flat is None:
             raise ValueError("no clients have been added")
         if self._wsum <= 0:
             raise ValueError("aggregation weights must sum to a positive value")
-        acc = _scale_acc(self._acc, jnp.float32(1.0 / self._wsum))
-        self._acc = None  # consumed (the buffer was donated)
-        leaves = jax.tree.leaves(acc)
-        outs = [l.astype(dt) for l, dt in zip(leaves, self._dtypes)]
+        if self._acc_flat is not None:
+            assert self._plan is not None and self._base_flat is not None
+            vec = _flat_finalize(
+                self._acc_flat, self._base_flat, jnp.float32(1.0 / self._wsum)
+            )
+            out = self._plan.unflatten(vec)
+        else:
+            acc = _scale_acc(self._acc, jnp.float32(1.0 / self._wsum))
+            leaves = jax.tree.leaves(acc)
+            outs = [l.astype(dt) for l, dt in zip(leaves, self._dtypes)]
+            out = jax.tree.unflatten(self._treedef, outs)
+        # Consume: the accumulator was donated, and every per-fold field
+        # (_wsum, n_clients, _dtypes, _treedef) must go with it — stale
+        # normalizer state would silently double-count on reuse.
+        self._reset()
         if self._engine is not None:
             self._engine.stats.n_calls += 1
-        return jax.tree.unflatten(self._treedef, outs)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -534,8 +750,11 @@ def make_measured_aggreg_fn(
 ) -> Callable[[str], float]:
     """Build a `CostModel.t_aggreg` override from a measured reduce rate.
 
-    ``bytes_per_round`` is the client-side byte volume the server reduces
-    each round (N clients x model bytes, e.g. `AggStats.last_bytes`);
+    ``bytes_per_round`` is the dense-equivalent byte volume the server
+    reduces each round (N clients x model bytes, e.g.
+    `AggStats.last_folded_bytes` — the reduce runs over dequantized fp32
+    regardless of what crossed the wire, so folded, not wire, bytes set
+    the aggregation time);
     ``gb_per_s`` the measured engine bandwidth (benchmarks/aggregation_bench
     reports it per shape).  The time scales with each VM's instance
     slowdown exactly like the paper's `aggreg_bl` baseline does.

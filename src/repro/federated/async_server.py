@@ -543,6 +543,7 @@ class AsyncRoundEngine:
         results: Sequence[ClientResult],
         schedule: ArrivalSchedule,
         deadline: Optional[RoundDeadline] = None,
+        base_params: Any = None,
     ) -> FoldReport:
         """Fold one round's ``c_msg_train`` messages per the schedule.
 
@@ -552,7 +553,14 @@ class AsyncRoundEngine:
         (quorum-extended) T_round; messages arriving later are parked in
         the carry-over buffer and folded into the *next* round's average
         with a staleness discount.  Any previously parked updates are
-        drained first — they are already sitting on the server."""
+        drained first — they are already sitting on the server.
+
+        ``base_params`` (the round's global weights) switches the fold to
+        the aggregator's flat/delta mode — required when results carry
+        :class:`~repro.federated.compression.CompressedUpdate` payloads.
+        A compressed entry carried over from an earlier round folds as a
+        *stale delta* applied to the current base (standard delta-based
+        async semantics, on top of the usual staleness discount)."""
         deadline = deadline if deadline is not None else self.deadline
         if not results:
             raise ValueError("fold_round needs at least one client result")
@@ -562,6 +570,7 @@ class AsyncRoundEngine:
         if (
             deadline is None
             and not self.carry
+            and base_params is None
             and all(
                 a.delay_s == 0.0 and a.revoke_at_s is None
                 for a in arrivals.values()
@@ -589,7 +598,7 @@ class AsyncRoundEngine:
                 round_idx, arrivals, deliveries, weights
             )
 
-        agg = self.agg_engine.streaming()
+        agg = self.agg_engine.streaming(base=base_params)
         events: List[FoldEvent] = []
         excluded: List[str] = []
         rerequested: List[str] = []
@@ -848,10 +857,21 @@ class AsyncFLServer(FLServer):
         carry_discount: float = 0.5,
         escalate_after: int = 2,
         on_straggler: Optional[Any] = None,
+        compression: Optional[Any] = None,
         **kwargs,
     ) -> None:
+        from .compression import ClientCompressor, parse_compression
+
         super().__init__(clients, initial_params, **kwargs)
         self.schedule = schedule if schedule is not None else InstantSchedule()
+        # `compression` turns on the compressed wire path: each client's
+        # update is encoded as a quantized/sparsified delta against the
+        # round's global weights (with per-client error feedback) and
+        # folded via the aggregator's fused dequantize-and-fold path —
+        # the virtual-clock twin of the live transport's worker-side
+        # encoding, producing bit-identical updates for parity.
+        self._compression = parse_compression(compression)
+        self._compressors: Dict[str, ClientCompressor] = {}
         self._round_engine = AsyncRoundEngine(
             self.agg_engine,
             on_revocation=on_revocation,
@@ -871,8 +891,40 @@ class AsyncFLServer(FLServer):
         """Late updates parked for the next round (empty without deadlines)."""
         return self._round_engine.carry
 
+    def _compressor_for(self, client_id: str) -> Any:
+        """The client's own compressor when it has one (client-owned
+        error-feedback residual), else a server-held per-client one."""
+        from .compression import ClientCompressor
+
+        for c in self.clients:
+            if str(c.client_id) == client_id:
+                owned = getattr(c, "compressor", None)
+                if owned is not None:
+                    return owned
+                break
+        return self._compressors.setdefault(
+            client_id, ClientCompressor(self._compression)
+        )
+
     def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]) -> FoldReport:
-        report = self._round_engine.fold_round(round_idx, results, self.schedule)
+        base = None
+        if self._compression is not None:
+            # self.params is still the round's dispatched global weights
+            # here (updated only after the fold), so it is both the delta
+            # base for encoding and the aggregation base for folding.
+            base = self.params
+            results = [
+                dataclasses.replace(
+                    r,
+                    params=self._compressor_for(r.client_id).encode(
+                        base, r.params
+                    ),
+                )
+                for r in results
+            ]
+        report = self._round_engine.fold_round(
+            round_idx, results, self.schedule, base_params=base
+        )
         self.fold_reports.append(report)
         # §4.4 escalation decisions are made by the control plane's
         # shared StragglerTracker and published as StragglerEscalated on

@@ -6,6 +6,15 @@ evaluation phase runs the silo's test split and returns scalar metrics.
 
 The train step is jitted once per (model, optimizer) pair and reused
 across rounds — like a real client process would.
+
+With wire compression enabled the client also owns its error-feedback
+residual (:class:`~repro.federated.compression.ClientCompressor`): the
+part of each update a codec dropped is carried into the next round's
+delta, client-side, which is what keeps sparsified training convergent.
+The buffer belongs to the *client* — a restarted worker thread reusing
+the same client object keeps its residual; a replacement VM (fresh
+process) starts from zero, costing only a little extra compression
+error on its next update.
 """
 from __future__ import annotations
 
@@ -55,6 +64,7 @@ class FLClient:
         local_epochs: int = 1,
         batch_fn: Optional[Callable] = None,
         eval_fn: Optional[Callable[[Any, Any], Dict[str, jnp.ndarray]]] = None,
+        compression: Any = None,
     ) -> None:
         self.client_id = client_id
         self.silo = silo
@@ -65,6 +75,18 @@ class FLClient:
         self.batch_fn = batch_fn or (lambda b: b)
         self.eval_fn = eval_fn
         self._opt_state = None
+        # Client-owned compression state: the error-feedback residual
+        # stays with the silo (not the transport invocation), so worker
+        # restarts over the same client object keep it.  The transport
+        # worker and AsyncFLServer both prefer this compressor when the
+        # wire path is compressed.
+        self.compressor = None
+        if compression is not None:
+            from .compression import ClientCompressor, parse_compression
+
+            spec = parse_compression(compression)
+            if spec is not None:
+                self.compressor = ClientCompressor(spec)
 
         @jax.jit
         def train_step(params, opt_state, batch):
@@ -104,6 +126,16 @@ class FLClient:
             n_samples=n_first_epoch,
             train_time_s=time.monotonic() - t0,
         )
+
+    def encode_update(self, global_params: Any, local_params: Any) -> Any:
+        """Compress this round's update with the client-owned
+        error-feedback buffer (requires ``compression=`` at init)."""
+        if self.compressor is None:
+            raise ValueError(
+                f"client {self.client_id!r} has no compressor; pass "
+                "compression= when constructing the FLClient"
+            )
+        return self.compressor.encode(global_params, local_params)
 
     # -- evaluation phase -----------------------------------------------------
     def evaluate(self, aggregated_params: Any) -> EvalResult:

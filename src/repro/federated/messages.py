@@ -5,16 +5,26 @@ weights), c_msg_train (client -> server, updated weights), s_msg_aggreg
 (server -> clients, aggregated weights), c_msg_test (client -> server, ML
 metrics). Byte sizes are measured from the *actual serialized payloads*,
 and feed the Eq.-6 communication-cost model.
+
+With wire compression (:mod:`repro.federated.compression`) the
+``c_msg_train`` leg carries a quantized/sparsified delta: the log's
+``c_msg_train_bytes`` is then the *wire* size (what the cost model must
+see — compressed frames are what cross the inter-cloud link), while
+``c_msg_train_dense_bytes`` keeps the dense fp32 equivalent so reports
+can state the achieved compression ratio.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional, TYPE_CHECKING, Union
 
 import msgpack
 
 from repro.checkpoint.serializer import pytree_num_bytes, serialize_pytree
 from repro.core.application_model import MessageSizes
+
+if TYPE_CHECKING:
+    from repro.federated.compression import CompressionSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,6 +33,11 @@ class RoundMessageLog:
     c_msg_train_bytes: int
     s_msg_aggreg_bytes: int
     c_msg_test_bytes: int
+    # Wire-compression accounting: the codec the c_msg_train leg used
+    # ("none" = raw fp32 pytree frames) and, when compressed, the dense
+    # fp32 size the same update would have cost uncompressed.
+    codec: str = "none"
+    c_msg_train_dense_bytes: Optional[int] = None
 
     def total_bytes(self, n_clients: int) -> int:
         """Bytes on the wire for a full round with n_clients."""
@@ -33,32 +48,72 @@ class RoundMessageLog:
             + self.c_msg_test_bytes
         )
 
+    @property
+    def compression_ratio(self) -> Optional[float]:
+        """dense / wire for the c_msg_train leg (None when uncompressed)."""
+        if self.c_msg_train_dense_bytes is None or self.c_msg_train_bytes <= 0:
+            return None
+        return self.c_msg_train_dense_bytes / self.c_msg_train_bytes
+
 
 def serialize_metrics(metrics: Dict[str, float]) -> bytes:
     """The wire form of a ``c_msg_test`` payload (msgpack, like weights)."""
-    return msgpack.packb(
+    packed = msgpack.packb(
         {str(k): float(v) for k, v in metrics.items()}, use_bin_type=True
     )
+    assert isinstance(packed, bytes)
+    return packed
 
 
-def measure_messages(params: Any, metrics_example: Dict[str, float]) -> RoundMessageLog:
+def measure_messages(
+    params: Any,
+    metrics_example: Dict[str, float],
+    compression: Union[None, str, "CompressionSpec"] = None,
+) -> RoundMessageLog:
     """Measure real serialized sizes for one round's message set.
 
     All four messages are measured from their actual serialized payloads
     — the metrics dict included, so Eq.-6 communication costs never mix
-    measured weight transfers with a guessed per-key constant."""
+    measured weight transfers with a guessed per-key constant.  With
+    ``compression`` the ``c_msg_train`` leg is the compressed frame size
+    (exact: compressed frames are fixed-width given the element count),
+    and the dense fp32 equivalent is reported alongside; the server->
+    client legs always ship dense weights."""
     weight_bytes = len(serialize_pytree(params))
     metric_bytes = len(serialize_metrics(metrics_example))
+    c_train_bytes = weight_bytes
+    codec = "none"
+    dense: Optional[int] = None
+    if compression is not None:
+        from repro.federated.agg_engine import plan_for
+        from repro.federated.compression import (
+            compressed_wire_bytes,
+            parse_compression,
+        )
+
+        spec = parse_compression(compression)
+        if spec is not None:
+            plan = plan_for(params)
+            c_train_bytes = compressed_wire_bytes(plan.total_elems, spec)
+            codec = spec.codec
+            dense = plan.total_elems * 4
     return RoundMessageLog(
         s_msg_train_bytes=weight_bytes,
-        c_msg_train_bytes=weight_bytes,
+        c_msg_train_bytes=c_train_bytes,
         s_msg_aggreg_bytes=weight_bytes,
         c_msg_test_bytes=metric_bytes,
+        codec=codec,
+        c_msg_train_dense_bytes=dense,
     )
 
 
 def to_cost_model_sizes(log: RoundMessageLog) -> MessageSizes:
-    """Bridge real measured sizes into the scheduler's cost model."""
+    """Bridge real measured sizes into the scheduler's cost model.
+
+    Always the *wire* sizes — with compression enabled the c_msg_train
+    term is the compressed frame, which is what the inter-cloud link
+    actually carries (the dense equivalent stays a reporting-only
+    field)."""
     return MessageSizes(
         s_msg_train_gb=log.s_msg_train_bytes / 1e9,
         s_msg_aggreg_gb=log.s_msg_aggreg_bytes / 1e9,
@@ -68,4 +123,4 @@ def to_cost_model_sizes(log: RoundMessageLog) -> MessageSizes:
 
 
 def model_weight_bytes(params: Any) -> int:
-    return pytree_num_bytes(params)
+    return int(pytree_num_bytes(params))

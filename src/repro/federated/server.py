@@ -189,7 +189,14 @@ class FLServer:
                                 server_ckpt_time)
             )
 
-        log = measure_messages(self.params, metrics) if self.measure_round_messages else None
+        log = None
+        if self.measure_round_messages:
+            # AsyncFLServer sets _compression when the wire path is
+            # compressed; the log then carries wire vs dense c_msg_train.
+            log = measure_messages(
+                self.params, metrics,
+                compression=getattr(self, "_compression", None),
+            )
         return RoundRecord(
             round_idx=round_idx,
             train_time_s=train_time,

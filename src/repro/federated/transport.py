@@ -525,6 +525,7 @@ def run_client_worker(
     address: Tuple[str, int],
     connect_timeout_s: float = 10.0,
     reconnect: Optional[ReconnectPolicy] = None,
+    compression: Optional[Any] = None,
 ) -> None:
     """Blocking worker loop: one real ``FLClient`` behind a socket.
 
@@ -546,12 +547,33 @@ def run_client_worker(
     and ``mangle_payload(body) -> bytes`` over the serialized reply.
     ``reconnect`` bounds connect retries with backoff + jitter (a single
     attempt when None).
+
+    ``compression`` (a :class:`~repro.federated.compression
+    .CompressionSpec` or codec string) switches the ``c_msg_train``
+    reply to a compressed delta against the received global weights,
+    with the error-feedback residual held in this worker.  The residual
+    dies with the worker: a restarted or replaced VM re-encodes from a
+    zero residual (slightly more compression error on its next update,
+    never a correctness problem).
     """
     sock = _connect_with_backoff(
         address, connect_timeout_s, reconnect, str(client.client_id)
     )
     if sock is None:
         return
+    compressor = None
+    if compression is not None:
+        from .compression import ClientCompressor, parse_compression
+
+        spec = parse_compression(compression)
+        if spec is not None:
+            # Prefer a client-owned compressor (FLClient(compression=...))
+            # so the error-feedback residual survives worker restarts
+            # over the same client object; else the buffer is scoped to
+            # this invocation (a fresh VM starts from zero residual).
+            compressor = getattr(client, "compressor", None)
+            if compressor is None:
+                compressor = ClientCompressor(spec)
     send_lock = threading.Lock()
     jobs: "queue.Queue[Optional[Tuple[Dict[str, Any], bytes]]]" = queue.Queue()
 
@@ -583,16 +605,23 @@ def run_client_worker(
                 params = deserialize_pytree(payload, template_params)
                 if kind == MSG_S_TRAIN:
                     result = client.train(params)
-                    _send(
-                        {
-                            "kind": MSG_C_TRAIN,
-                            "round_idx": round_idx,
-                            "client_id": str(client.client_id),
-                            "n_samples": int(result.n_samples),
-                            "train_time_s": float(result.train_time_s),
-                        },
-                        _mangle(serialize_pytree(result.params)),
-                    )
+                    header_out = {
+                        "kind": MSG_C_TRAIN,
+                        "round_idx": round_idx,
+                        "client_id": str(client.client_id),
+                        "n_samples": int(result.n_samples),
+                        "train_time_s": float(result.train_time_s),
+                    }
+                    if compressor is not None:
+                        from .compression import serialize_update
+
+                        update = compressor.encode(params, result.params)
+                        header_out["codec"] = update.codec
+                        header_out["dense_bytes"] = int(update.dense_bytes)
+                        body = serialize_update(update)
+                    else:
+                        body = serialize_pytree(result.params)
+                    _send(header_out, _mangle(body))
                 else:
                     ev = client.evaluate(params)
                     _send(
@@ -698,6 +727,7 @@ class ThreadWorkerPool:
         clients: Sequence[Any],
         template_params: Any,
         reconnect: Optional[ReconnectPolicy] = None,
+        compression: Optional[Any] = None,
     ) -> None:
         self._clients: Dict[str, Any] = {
             str(c.client_id): c for c in clients
@@ -706,6 +736,7 @@ class ThreadWorkerPool:
             raise ValueError("duplicate client_id in worker pool")
         self._template = template_params
         self._reconnect = reconnect
+        self._compression = compression
         self._threads: Dict[str, threading.Thread] = {}
         self._hosts: Dict[str, str] = {}
 
@@ -722,7 +753,10 @@ class ThreadWorkerPool:
         thread = threading.Thread(
             target=run_client_worker,
             args=(self._clients[client_id], self._template, address),
-            kwargs={"reconnect": self._reconnect},
+            kwargs={
+                "reconnect": self._reconnect,
+                "compression": self._compression,
+            },
             name=name,
             daemon=True,
         )
@@ -764,9 +798,13 @@ def _process_worker_entry(
     template_np: Any,
     address: Tuple[str, int],
     reconnect: Optional[ReconnectPolicy] = None,
+    compression: Optional[Any] = None,
 ) -> None:
     """Spawn entry: build the client in the child, then serve."""
-    run_client_worker(factory(), template_np, address, reconnect=reconnect)
+    run_client_worker(
+        factory(), template_np, address,
+        reconnect=reconnect, compression=compression,
+    )
 
 
 class ProcessWorkerPool:
@@ -784,11 +822,15 @@ class ProcessWorkerPool:
         client_factories: Mapping[str, Callable[[], Any]],
         template_params: Any,
         reconnect: Optional[ReconnectPolicy] = None,
+        compression: Optional[Any] = None,
     ) -> None:
         self._factories: Dict[str, Callable[[], Any]] = dict(client_factories)
         # Numpy-ify so the template pickles without device buffers.
         self._template_np = jax.tree.map(np.asarray, template_params)
         self._reconnect = reconnect
+        # CompressionSpec is a plain frozen dataclass — pickles into the
+        # spawned child with the rest of the worker args.
+        self._compression = compression
         self._ctx = multiprocessing.get_context("spawn")
         self._procs: Dict[str, Any] = {}
         self._hosts: Dict[str, str] = {}
@@ -810,6 +852,7 @@ class ProcessWorkerPool:
                 self._template_np,
                 address,
                 self._reconnect,
+                self._compression,
             ),
             name=name,
             daemon=True,
@@ -888,6 +931,7 @@ class _TrainOutcome:
     crashed: bool = False    # connection dropped (§4.3 hard-fault signal)
     timed_out: bool = False  # silent past reply_timeout_s (§4.4 evidence)
     payload_bytes: int = 0
+    dense_bytes: int = 0     # dense fp32 equivalent of a compressed reply
 
     def to_arrival(self, client_id: str) -> ClientArrival:
         if self.failed:
@@ -982,6 +1026,7 @@ class LiveRoundDriver:
         on_straggler: Optional[Callable[[str, int], None]] = None,
         cost_model: Optional[Any] = None,
         measure_round_messages: bool = True,
+        compression: Optional[Any] = None,
     ) -> None:
         if heartbeat_interval_s is not None and heartbeat_interval_s <= 0.0:
             raise ValueError("heartbeat_interval_s must be > 0 (or None)")
@@ -1016,6 +1061,11 @@ class LiveRoundDriver:
         self.on_straggler = on_straggler
         self.cost_model = cost_model
         self.measure_round_messages = measure_round_messages
+        # The workers do the encoding (the pool must be built with the
+        # same spec); the driver's copy drives decode + the delta-mode
+        # fold + wire-vs-dense accounting in the round message logs.
+        from .compression import parse_compression
+        self.compression = parse_compression(compression)
         self._on_revocation = on_revocation
         self._max_rerequests = max_rerequests
         self._engine = AsyncRoundEngine(
@@ -1166,7 +1216,10 @@ class LiveRoundDriver:
         schedule = RecordedSchedule(
             {cid: o.to_arrival(cid) for cid, o in outcomes.items()}
         )
-        fold = self._engine.fold_round(round_idx, results, schedule)
+        fold = self._engine.fold_round(
+            round_idx, results, schedule,
+            base_params=self.params if self.compression is not None else None,
+        )
         self.fold_reports.append(fold)
         self.params = fold.params
         jax.block_until_ready(self.params)
@@ -1285,6 +1338,15 @@ class LiveRoundDriver:
                  if o.payload_bytes > 0),
                 default=len(s_train_payload),
             )
+            # With compression, payload_bytes is the measured compressed
+            # frame (what crossed the socket) — the wire truth Eq. 6
+            # needs; the workers' reported dense-equivalent size rides
+            # along so the log can state the achieved ratio.
+            dense_train = max(
+                (o.dense_bytes for o in outcomes.values()
+                 if o.dense_bytes > 0),
+                default=0,
+            )
             log = RoundMessageLog(
                 s_msg_train_bytes=len(s_train_payload),
                 c_msg_train_bytes=c_train_bytes,
@@ -1292,6 +1354,11 @@ class LiveRoundDriver:
                 c_msg_test_bytes=max(
                     c_test_bytes, default=len(serialize_metrics(metrics))
                 ),
+                codec=(
+                    self.compression.codec
+                    if self.compression is not None else "none"
+                ),
+                c_msg_train_dense_bytes=dense_train or None,
             )
             self.message_logs.append(log)
             if self.cost_model is not None:
@@ -1587,7 +1654,16 @@ class LiveRoundDriver:
                         continue  # stale reply from a previous round
                     o = outcomes[cid]
                     try:
-                        params = deserialize_pytree(ev.payload, self.params)
+                        # Compressed replies carry their codec in the
+                        # header; a frame corrupted in either encoding
+                        # raises the same DeserializationError, so the
+                        # §4.3 re-request recovery below is shared.
+                        if ev.header.get("codec") is not None:
+                            from .compression import deserialize_update
+
+                            params = deserialize_update(ev.payload)
+                        else:
+                            params = deserialize_pytree(ev.payload, self.params)
                     except DeserializationError:
                         # Corrupt frame: the reply arrived but is
                         # unusable — a §4.3 suspected fault.  The worker
@@ -1623,6 +1699,7 @@ class LiveRoundDriver:
                     o.n_samples = int(ev.header.get("n_samples", 0))
                     o.train_time_s = float(ev.header.get("train_time_s", 0.0))
                     o.payload_bytes = len(ev.payload)
+                    o.dense_bytes = int(ev.header.get("dense_bytes", 0))
                     pending.discard(cid)
         return outcomes
 

@@ -65,3 +65,59 @@ def fedavg_reduce(
         interpret=interpret,
     )(w, x)
     return out[0, :L]
+
+
+def _dequant_fold_kernel(w_ref, s_ref, a_ref, x_ref, o_ref):
+    """w: (1, 1) fold weight; s: (1, 1) per-block scale; a/x/o: (1, BLOCK).
+
+    One fused pass: dequantize the tile (``x * scale``), weight it, and
+    add it onto the fp32 accumulator tile — the quantized bytes are read
+    once and no dense fp32 copy of the update is ever materialized."""
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = a_ref[...] + (w_ref[0, 0] * s_ref[0, 0]) * x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def dequant_fold(
+    acc: jnp.ndarray,       # (Lp,) fp32 accumulator, Lp % BLOCK == 0
+    data: jnp.ndarray,      # (Lp,) quantized update (int8 or fp16)
+    scales: jnp.ndarray,    # (Lp // BLOCK,) per-block dequant scales
+    weight: jnp.ndarray,    # scalar fold weight
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused dequantize-and-fold: ``acc + weight * (data * scales)``.
+
+    Quantization blocks are exactly the kernel's grid tiles (one wire
+    scale per (1, BLOCK) tile), so each int8/fp16 tile is dequantized in
+    VREGs and accumulated in a single HBM pass.  The accumulator is
+    donated and aliased to the output (updated in place, O(L) memory for
+    the whole round).  fp16 updates reuse the same kernel with unit
+    scales.  Like ``fedavg_reduce``: compiled Mosaic on TPU, interpreter
+    elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Lp = acc.shape[0]
+    if Lp % BLOCK:
+        raise ValueError(f"accumulator length {Lp} not a multiple of BLOCK={BLOCK}")
+    nb = Lp // BLOCK
+    a2 = acc.reshape(nb, BLOCK)
+    x2 = data.reshape(nb, BLOCK)
+    s2 = scales.astype(jnp.float32).reshape(nb, 1)
+    w2 = jnp.asarray(weight, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _dequant_fold_kernel,
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # weight: replicated
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),       # this tile's scale
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),   # accumulator tile
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),   # quantized tile
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        input_output_aliases={2: 0},  # accumulator updated in place
+        interpret=interpret,
+    )(w2, s2, a2, x2)
+    return out.reshape(Lp)

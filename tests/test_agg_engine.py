@@ -190,10 +190,11 @@ def test_streaming_matches_batch():
     agg = engine.streaming()
     for t, w in zip(trees, weights):  # clients land one at a time
         agg.add(t, w)
+    assert agg.n_clients == 4
     got = agg.result()
     want = fedavg(trees, weights)
     assert_trees_close(got, want)
-    assert agg.n_clients == 4
+    assert agg.n_clients == 0  # result() consumes all per-fold state
 
 
 def test_streaming_bf16_restores_dtype():
@@ -402,3 +403,127 @@ def test_measured_aggreg_fn_feeds_cost_model():
     # default (no hook) keeps the paper's aggreg_bl baseline
     cm0 = CostModel(env, app, 0.5)
     assert cm0.t_aggreg(vm) == pytest.approx(app.aggreg_bl * env.inst_slowdown(vm))
+
+
+# ---------------------------------------------------------------------------
+# streaming-aggregator reuse, dtype pinning, byte accounting (PR 7 fixes)
+# ---------------------------------------------------------------------------
+
+def test_streaming_reuse_after_result_tree_mode():
+    """Regression: result() must reset _wsum/n_clients/_dtypes/_treedef so
+    the same aggregator instance serves the next round cleanly."""
+    trees_a, weights_a = ragged_trees(3, seed=0)
+    trees_b, weights_b = ragged_trees(2, seed=1)
+    agg = StreamingAggregator()
+    for t, w in zip(trees_a, weights_a):
+        agg.add(t, w)
+    first = agg.result()
+    assert agg.n_clients == 0
+    for t, w in zip(trees_b, weights_b):
+        agg.add(t, w)
+    second = agg.result()
+    assert_trees_close(first, fedavg(trees_a, weights_a))
+    # The second fold must NOT be polluted by round A's weights/acc.
+    assert_trees_close(second, fedavg(trees_b, weights_b))
+
+
+def test_streaming_reuse_after_result_flat_mode():
+    trees_a, weights_a = ragged_trees(2, seed=2)
+    trees_b, weights_b = ragged_trees(3, seed=3)
+    base, _ = ragged_trees(1, seed=4)
+    agg = AggregationEngine().streaming(base=base[0])
+    for trees, weights in ((trees_a, weights_a), (trees_b, weights_b)):
+        for t, w in zip(trees, weights):
+            agg.add(t, w)
+        assert_trees_close(agg.result(), fedavg(trees, weights))
+
+
+def test_streaming_flat_mode_matches_tree_mode_dense():
+    """With a base, dense adds fold as weighted *deltas*; the base
+    cancels exactly so the result equals the plain weighted average."""
+    trees, weights = ragged_trees(4, seed=5)
+    base, _ = ragged_trees(1, seed=6)
+    agg = AggregationEngine().streaming(base=base[0])
+    for t, w in zip(trees, weights):
+        agg.add(t, w)
+    assert_trees_close(agg.result(), fedavg(trees, weights))
+
+
+def test_streaming_pins_concrete_leaf_dtypes():
+    """Regression: output dtypes come from the first client's concrete
+    leaves, not jnp.result_type's weak-type promotion — a plain-python /
+    numpy leaf must not widen (or weaken) the restored tree."""
+    mk = lambda rng: {  # noqa: E731 - local tree builder
+        "f32": jnp.asarray(rng.standard_normal(5), jnp.float32),
+        "bf16": jnp.asarray(rng.standard_normal(7), jnp.bfloat16),
+        "np64": rng.standard_normal(3),  # numpy float64 leaf
+    }
+    rng = np.random.default_rng(0)
+    trees = [mk(rng) for _ in range(3)]
+    weights = [1.0, 2.0, 3.0]
+    agg = StreamingAggregator()
+    for t, w in zip(trees, weights):
+        agg.add(t, w)
+    out = agg.result()
+    expect = {k: jnp.asarray(trees[0][k]).dtype for k in trees[0]}
+    assert {k: out[k].dtype for k in out} == expect
+    for k in expect:
+        oracle = sum(
+            w * np.asarray(t[k], np.float64) for t, w in zip(trees, weights)
+        ) / sum(weights)
+        np.testing.assert_allclose(
+            np.asarray(out[k], np.float64), oracle,
+            atol=2e-2 if k == "bf16" else 1e-5, rtol=2e-2,
+        )
+
+
+def test_stats_split_wire_vs_folded_bytes():
+    from repro.federated.compression import CompressionSpec, compress
+
+    trees, weights = ragged_trees(2, seed=7)
+    base, _ = ragged_trees(1, seed=8)
+    engine = AggregationEngine(use_pallas=False)
+    plan = plan_for(base[0])
+    base_flat = np.asarray(plan.flatten(base[0]))
+    agg = engine.streaming(base=base[0])
+
+    # Dense add: wire == folded.
+    agg.add(trees[0], weights[0])
+    dense_nbytes = sum(
+        np.asarray(l).nbytes for l in jax.tree.leaves(trees[0])
+    )
+    assert engine.stats.last_wire_bytes == dense_nbytes
+    assert engine.stats.last_folded_bytes == dense_nbytes
+    assert engine.stats.last_bytes == dense_nbytes  # back-compat alias
+
+    # Compressed add: wire < folded == dense fp32 equivalent.
+    cu = compress(
+        np.asarray(plan.flatten(trees[1])) - base_flat, CompressionSpec("int8")
+    )
+    agg.add(cu, weights[1])
+    assert engine.stats.last_folded_bytes == cu.dense_bytes
+    assert engine.stats.last_wire_bytes == cu.wire_bytes
+    assert engine.stats.last_wire_bytes < engine.stats.last_folded_bytes
+    assert engine.stats.total_wire_bytes == dense_nbytes + cu.wire_bytes
+    assert engine.stats.total_folded_bytes == dense_nbytes + cu.dense_bytes
+    assert engine.stats.total_bytes == engine.stats.total_folded_bytes
+    agg.result()
+
+
+def test_streaming_compressed_requires_base():
+    from repro.federated.compression import CompressionSpec, compress
+
+    cu = compress(np.zeros(16, np.float32), CompressionSpec("fp16"))
+    agg = StreamingAggregator()
+    with pytest.raises(ValueError, match="base"):
+        agg.add_compressed(cu, 1.0)
+
+
+def test_streaming_compressed_rejects_size_mismatch():
+    from repro.federated.compression import CompressionSpec, compress
+
+    base, _ = ragged_trees(1, seed=9)
+    agg = AggregationEngine().streaming(base=base[0])
+    cu = compress(np.zeros(16, np.float32), CompressionSpec("fp16"))
+    with pytest.raises(ValueError, match="elem"):
+        agg.add_compressed(cu, 1.0)

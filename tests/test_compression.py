@@ -1,0 +1,468 @@
+"""Compressed wire path: codec roundtrips, the fused dequantize-and-fold
+property (quantize -> fused fold == dense fp32 fold of the decompressed
+updates, within codec tolerance, across ragged pytrees), error-feedback
+convergence, wire framing (truncation raises the typed error), builder
+validation, byte accounting, sim-vs-live parity with compression on, and
+the chaos corrupt_frame interaction on a compressed frame."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:  # hypothesis is an optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip cleanly without it
+    from _hypothesis_stub import given, settings, st
+
+from conftest import assert_trees_close, ragged_trees
+from repro.checkpoint.serializer import DeserializationError
+from repro.core import Experiment
+from repro.federated import (
+    AsyncFLServer,
+    ClientCompressor,
+    CompressedUpdate,
+    CompressionSpec,
+    DeterministicSchedule,
+    FaultPlan,
+    FLClient,
+    LiveRoundDriver,
+    compress,
+    compressed_wire_bytes,
+    decompress,
+    deserialize_update,
+    parse_compression,
+    plan_for,
+    serialize_update,
+)
+from repro.federated.agg_engine import AggregationEngine
+from repro.federated.aggregation import fedavg
+from repro.federated.chaos import FaultSpec, verify_fault_pairing
+from repro.federated.compression import QBLOCK, topk_count
+from repro.kernels.fedavg_reduce import BLOCK, dequant_fold
+from test_transport import (
+    assert_params_close,
+    init_params,
+    make_paced_clients,
+    trace_signature,
+)
+
+CODEC_SPECS = [
+    CompressionSpec("int8"),
+    CompressionSpec("fp16"),
+    CompressionSpec("topk", k_frac=0.1),
+]
+
+
+def _rand_vec(n, seed, scale=0.1):
+    return (np.random.default_rng(seed).standard_normal(n) * scale).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Codecs: roundtrip + tolerance + wire sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", CODEC_SPECS, ids=lambda s: s.codec)
+def test_codec_wire_roundtrip_is_exact(spec):
+    """serialize -> deserialize reproduces the codec output bit-exactly."""
+    vec = _rand_vec(3 * QBLOCK + 17, seed=0)
+    cu = compress(vec, spec)
+    back = deserialize_update(serialize_update(cu))
+    assert back.codec == cu.codec
+    assert back.total_elems == cu.total_elems
+    np.testing.assert_array_equal(np.asarray(back.data), np.asarray(cu.data))
+    if cu.scales is not None:
+        np.testing.assert_array_equal(back.scales, cu.scales)
+    if cu.indices is not None:
+        np.testing.assert_array_equal(back.indices, cu.indices)
+    np.testing.assert_array_equal(decompress(back), decompress(cu))
+
+
+def test_int8_error_bounded_by_half_scale_per_block():
+    vec = _rand_vec(2 * QBLOCK + 100, seed=1)
+    cu = compress(vec, CompressionSpec("int8"))
+    err = np.abs(decompress(cu) - vec)
+    # Per block: |x - q*scale| <= scale/2 (round-to-nearest).
+    for b in range(cu.scales.size):
+        lo, hi = b * QBLOCK, min((b + 1) * QBLOCK, vec.size)
+        assert err[lo:hi].max() <= cu.scales[b] / 2 + 1e-7
+
+
+def test_topk_keeps_largest_magnitudes():
+    vec = _rand_vec(5000, seed=2)
+    spec = CompressionSpec("topk", k_frac=0.1)
+    cu = compress(vec, spec)
+    k = topk_count(vec.size, 0.1)
+    assert cu.indices.size == k == cu.data.size
+    kept = set(cu.indices.tolist())
+    cutoff = np.sort(np.abs(vec))[-k]
+    # Everything strictly above the cutoff magnitude must be kept.
+    for i in np.nonzero(np.abs(vec) > cutoff)[0]:
+        assert int(i) in kept
+    # Indices arrive sorted (the wire validator requires it).
+    assert np.all(np.diff(cu.indices) > 0)
+
+
+def test_zero_block_quantizes_to_zero():
+    vec = np.zeros(QBLOCK + 5, np.float32)
+    vec[-1] = 0.25  # second block non-zero, first block all-zero
+    cu = compress(vec, CompressionSpec("int8"))
+    assert cu.scales[0] == 0.0
+    np.testing.assert_array_equal(decompress(cu)[:QBLOCK], 0.0)
+    assert decompress(cu)[-1] == pytest.approx(0.25, rel=0.01)
+
+
+@pytest.mark.parametrize("spec", CODEC_SPECS, ids=lambda s: s.codec)
+def test_wire_bytes_beat_dense_and_match_predictor(spec):
+    n = 4 * QBLOCK
+    cu = compress(_rand_vec(n, seed=3), spec)
+    assert cu.dense_bytes == 4 * n
+    assert cu.wire_bytes < cu.dense_bytes
+    # Frame sizes are data-independent given n: the accounting predictor
+    # must match the real serialized size exactly.
+    assert compressed_wire_bytes(n, spec) == cu.wire_bytes
+    floor = {"int8": 3.5, "fp16": 1.9, "topk": 5.0}[spec.codec]
+    assert cu.dense_bytes / cu.wire_bytes > floor
+
+
+# ---------------------------------------------------------------------------
+# Wire framing: corruption always raises the typed error
+# ---------------------------------------------------------------------------
+
+def test_truncated_or_garbled_frame_raises_typed_error():
+    frame = serialize_update(compress(_rand_vec(QBLOCK, seed=4),
+                                      CompressionSpec("int8")))
+    for bad in (
+        frame[: len(frame) // 2],  # ChaosClient.mangle_payload's cut
+        frame[:-3],
+        b"not msgpack at all",
+        b"",
+    ):
+        with pytest.raises(DeserializationError):
+            deserialize_update(bad)
+
+
+def test_internally_inconsistent_frames_raise():
+    import msgpack
+
+    ok = {"v": 1, "codec": "int8", "n": 8, "data": b"\x01" * 8,
+          "scales": np.ones(1, np.float32).tobytes()}
+    bad_frames = [
+        {**ok, "v": 2},
+        {**ok, "codec": "lz4"},
+        {**ok, "n": 0},
+        {**ok, "data": b"\x01" * 7},       # length mismatch
+        {**ok, "scales": b"\x00" * 3},     # not a whole float32
+        {"v": 1, "codec": "topk", "n": 8, "data": b"\x01" * 4,
+         "idx": np.array([3, 1], np.int32).tobytes()},  # unsorted
+        {"v": 1, "codec": "topk", "n": 8, "data": b"\x01" * 4,
+         "idx": np.array([1, 9], np.int32).tobytes()},  # out of range
+    ]
+    for obj in bad_frames:
+        with pytest.raises(DeserializationError):
+            deserialize_update(msgpack.packb(obj, use_bin_type=True))
+
+
+# ---------------------------------------------------------------------------
+# parse_compression / spec validation
+# ---------------------------------------------------------------------------
+
+def test_parse_compression_accepts_all_forms():
+    assert parse_compression(None) is None
+    assert parse_compression("int8") == CompressionSpec("int8")
+    assert parse_compression("fp16").codec == "fp16"
+    assert parse_compression("topk").k_frac == 0.1
+    assert parse_compression("topk:0.05").k_frac == 0.05
+    spec = CompressionSpec("topk", k_frac=0.25)
+    assert parse_compression(spec) is spec
+
+
+def test_parse_compression_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="codec"):
+        parse_compression("lz4")
+    with pytest.raises(ValueError, match="k_frac"):
+        parse_compression("topk:1.5")
+    with pytest.raises(ValueError, match="k_frac"):
+        CompressionSpec("topk", k_frac=0.0)
+    with pytest.raises(ValueError, match="topk"):
+        parse_compression("int8:0.5")
+    with pytest.raises(ValueError):
+        parse_compression(123)
+
+
+# ---------------------------------------------------------------------------
+# Fused dequantize-and-fold kernel (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", ["int8", "fp16"])
+def test_dequant_fold_kernel_matches_reference(codec):
+    n = 2 * BLOCK + 123
+    lp = 3 * BLOCK
+    vec = _rand_vec(n, seed=5)
+    cu = compress(vec, CompressionSpec(codec))
+    data = np.zeros(lp, dtype=np.asarray(cu.data).dtype)
+    data[:n] = cu.data
+    scales = (
+        np.asarray(cu.scales, np.float32)
+        if cu.scales is not None else np.ones(lp // BLOCK, np.float32)
+    )
+    acc0 = _rand_vec(lp, seed=6)
+    out = dequant_fold(
+        jnp.asarray(acc0), jnp.asarray(data), jnp.asarray(scales),
+        jnp.float32(2.5), interpret=True,
+    )
+    ref = acc0.copy()
+    ref[:n] += 2.5 * decompress(cu)
+    np.testing.assert_allclose(np.asarray(out)[:n], ref[:n], atol=1e-5)
+    # Padding tail stays untouched by the fold (quantized pad is zero).
+    np.testing.assert_allclose(np.asarray(out)[n:], ref[n:], atol=1e-6)
+
+
+def test_dequant_fold_rejects_unpadded_acc():
+    with pytest.raises(ValueError, match="BLOCK"):
+        dequant_fold(
+            jnp.zeros(BLOCK + 1, jnp.float32),
+            jnp.zeros(BLOCK + 1, jnp.int8),
+            jnp.ones(1, jnp.float32),
+            jnp.float32(1.0),
+            interpret=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Property: quantize -> fused fold == dense fp32 fold (per codec,
+# ragged pytrees)
+# ---------------------------------------------------------------------------
+
+def _fused_vs_dense_fold(codec, n_clients, seed, use_pallas):
+    """The tentpole property, shared by the hypothesis + smoke tests."""
+    spec = (
+        CompressionSpec(codec) if codec != "topk"
+        else CompressionSpec("topk", k_frac=0.3)
+    )
+    trees, weights = ragged_trees(n_clients, seed=seed)
+    base, _ = ragged_trees(1, seed=seed + 1000)
+    base = base[0]
+    plan = plan_for(base)
+    base_flat = np.asarray(plan.flatten(base))
+
+    engine = AggregationEngine(
+        use_pallas=use_pallas, interpret=True if use_pallas else None
+    )
+    agg = engine.streaming(base=base)
+    updates = []
+    for t, w in zip(trees, weights):
+        cu = compress(np.asarray(plan.flatten(t)) - base_flat, spec)
+        updates.append((cu, w))
+        agg.add(cu, w)  # routes to add_compressed
+    fused = agg.result()
+
+    # Dense fp32 oracle over the *decompressed* updates: the fused path
+    # must match it to float32 accuracy (no codec tolerance needed —
+    # both sides see identical quantized values).
+    wsum = float(sum(w for _, w in updates))
+    acc = np.zeros(plan.total_elems, np.float64)
+    for cu, w in zip((u for u, _ in updates), (w for _, w in updates)):
+        acc += np.float64(w) * decompress(cu)
+    dense_vec = base_flat + (acc / wsum).astype(np.float32)
+    dense = plan.unflatten(jnp.asarray(dense_vec, jnp.float32))
+    assert_trees_close(fused, dense)
+
+    # And the codec-tolerance bound vs the *uncompressed* average: the
+    # weighted mean of per-update errors never exceeds the worst one.
+    raw = fedavg(trees, weights)
+    per_update_err = max(
+        float(np.abs(
+            decompress(cu) - (np.asarray(plan.flatten(t)) - base_flat)
+        ).max())
+        for (cu, _), t in zip(updates, trees)
+    )
+    tol = per_update_err + 1e-4
+    got_flat = np.asarray(plan.flatten(fused))
+    want_flat = np.asarray(plan.flatten(raw))
+    assert float(np.abs(got_flat - want_flat).max()) <= tol
+
+
+@pytest.mark.parametrize("codec", ["int8", "fp16", "topk"])
+def test_fused_fold_matches_dense_fold(codec):
+    _fused_vs_dense_fold(codec, n_clients=3, seed=0, use_pallas=False)
+
+
+@pytest.mark.parametrize("codec", ["int8", "fp16"])
+def test_fused_fold_matches_dense_fold_pallas(codec):
+    _fused_vs_dense_fold(codec, n_clients=3, seed=1, use_pallas=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    codec=st.sampled_from(["int8", "fp16", "topk"]),
+    n_clients=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=50),
+)
+def test_fused_fold_matches_dense_fold_property(codec, n_clients, seed):
+    _fused_vs_dense_fold(codec, n_clients, seed, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_carries_dropped_mass():
+    """What top-k drops this round is in the next round's encode input."""
+    spec = CompressionSpec("topk", k_frac=0.5, error_feedback=True)
+    comp = ClientCompressor(spec)
+    base = {"w": jnp.zeros((6,), jnp.float32)}
+    local = {"w": jnp.asarray([1.0, -2.0, 0.1, 0.2, 3.0, -0.3], jnp.float32)}
+    cu1 = comp.encode(base, local)
+    # k=3 keeps {-2, 1, 3}; residual holds the dropped {0.1, 0.2, -0.3}.
+    resid = comp._residual
+    np.testing.assert_allclose(
+        np.sort(np.abs(resid[np.abs(resid) > 0])), [0.1, 0.2, 0.3],
+        atol=1e-6,
+    )
+    # Second round with a zero delta: the residual alone drives the
+    # update, so the dropped coordinates ship now.
+    cu2 = comp.encode(base, base)
+    shipped = decompress(cu2)
+    np.testing.assert_allclose(
+        np.sort(np.abs(shipped[np.abs(shipped) > 0])), [0.1, 0.2, 0.3],
+        atol=1e-3,  # fp16 value storage
+    )
+
+
+def test_error_feedback_off_keeps_no_state():
+    spec = CompressionSpec("topk", k_frac=0.5, error_feedback=False)
+    comp = ClientCompressor(spec)
+    base = {"w": jnp.zeros((6,), jnp.float32)}
+    local = {"w": jnp.asarray([1.0, -2.0, 0.1, 0.2, 3.0, -0.3], jnp.float32)}
+    comp.encode(base, local)
+    assert comp._residual is None
+    cu2 = comp.encode(base, base)
+    assert float(np.abs(decompress(cu2)).max()) == 0.0
+
+
+def _convergence_loss(compression, n_rounds=12):
+    clients = make_paced_clients(
+        {"c0": 0.0, "c1": 0.0}, n_examples=(24, 24), seed=7
+    )
+    server = AsyncFLServer(
+        clients, init_params(), schedule=DeterministicSchedule(0.0),
+        compression=compression,
+    )
+    result = server.run(n_rounds)
+    return [r.metrics["loss"] for r in result.rounds]
+
+
+def test_compressed_convergence_matches_uncompressed():
+    """Error feedback keeps sparsified/quantized training within epsilon
+    of the uncompressed loss trajectory on the toy app."""
+    raw = _convergence_loss(None)
+    for codec in ("int8", "topk:0.25"):
+        comp = _convergence_loss(codec)
+        assert comp[-1] < raw[0]  # actually converging
+        assert comp[-1] == pytest.approx(raw[-1], rel=0.15, abs=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Builder + accounting
+# ---------------------------------------------------------------------------
+
+def test_builder_validates_compression_at_chain_time():
+    exp = Experiment().aggregation(compression="topk:0.05")
+    assert exp._compression == CompressionSpec("topk", k_frac=0.05)
+    with pytest.raises(ValueError, match="codec"):
+        Experiment().aggregation(compression="bogus")
+    with pytest.raises(ValueError, match="k_frac"):
+        Experiment().aggregation(compression="topk:7")
+
+
+def test_builder_chains_do_not_alias_compression():
+    base = Experiment()
+    with_comp = base.aggregation(compression="int8")
+    assert base._compression is None
+    assert with_comp._compression == CompressionSpec("int8")
+
+
+def test_simulator_target_rejects_compression():
+    from conftest import make_toy_app, make_toy_env
+
+    chain = (Experiment.on(make_toy_env()).app(make_toy_app())
+             .aggregation(compression="int8"))
+    with pytest.raises(ValueError, match="serve"):
+        chain.build()
+
+
+def test_round_log_accounts_wire_vs_dense():
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.0})
+    server = AsyncFLServer(
+        clients, init_params(), schedule=DeterministicSchedule(0.0),
+        compression="fp16", measure_round_messages=True,
+    )
+    result = server.run(1)
+    log = result.rounds[0].message_log
+    assert log.codec == "fp16"
+    assert log.c_msg_train_dense_bytes == 3 * 4  # the 3-weight toy model
+    # Server->client legs stay dense.
+    assert log.s_msg_train_bytes == log.s_msg_aggreg_bytes
+    assert log.compression_ratio == pytest.approx(
+        log.c_msg_train_dense_bytes / log.c_msg_train_bytes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sim-vs-live parity + chaos interaction (thread transport)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", ["int8", "topk:0.5"])
+def test_sim_vs_live_parity_with_compression(codec):
+    """Compression on both bus drivers: identical params (bit-exact —
+    both drivers encode the same deterministic codecs against the same
+    bases) and identical trace signatures."""
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.0})
+    from test_transport import chain_replies
+    chain_replies(clients[0], clients[1])
+    driver = (Experiment().aggregation(compression=codec)
+              .transport(reply_timeout_s=30.0)
+              .serve(clients, init_params()))
+    assert isinstance(driver, LiveRoundDriver)
+    assert driver.compression == parse_compression(codec)
+    with driver:
+        live = driver.run(2)
+
+    server = AsyncFLServer(
+        make_paced_clients({"c0": 0.0, "c1": 0.0}),
+        init_params(),
+        schedule=DeterministicSchedule({"c0": 0.01, "c1": 0.02}),
+        compression=codec,
+    )
+    sim = server.run(2)
+
+    assert_params_close(live.final_params, sim.final_params)
+    assert trace_signature(driver.trace) == trace_signature(server.bus.trace)
+    # The live log's c_msg_train leg measured the compressed frame.
+    log = driver.message_logs[0]
+    assert log.codec == parse_compression(codec).codec
+    assert log.c_msg_train_dense_bytes == 12
+
+
+def test_corrupt_frame_on_compressed_frame_still_recovers():
+    """Chaos interaction: corrupt_frame truncates a *compressed*
+    c_msg_train; decode raises the same typed DeserializationError and
+    the §4.3 re-request recovery applies unchanged."""
+    plan = FaultPlan([FaultSpec("corrupt_frame", "c1", 1)])
+    clients = make_paced_clients({"c0": 0.0, "c1": 0.05})
+    driver = (Experiment().aggregation(compression="int8").chaos(plan)
+              .transport(reply_timeout_s=30.0)
+              .serve(clients, init_params()))
+    with driver:
+        live = driver.run(2)
+    from repro.core.events import UpdateArrived
+    arrivals = [e for e in driver.trace
+                if isinstance(e, UpdateArrived) and e.task == "c1"
+                and e.round_idx == 1]
+    assert [e.attempt for e in arrivals] == [2]
+    pairing = verify_fault_pairing(plan, driver.trace)
+    assert pairing[("corrupt_frame", "c1", 1, "train")] == "recovered"
+    assert len(live.rounds) == 2
+    assert np.isfinite(np.asarray(live.final_params["w"])).all()
