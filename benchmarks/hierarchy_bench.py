@@ -1,0 +1,270 @@
+"""Hierarchy benchmark: fold throughput + rounds/s, flat vs region trees.
+
+What does the two-level aggregation hierarchy
+(``repro.federated.hierarchy``) cost at cohort scale?  The regional
+engines each fold their cohort into a padded fp32 accumulator and
+export a :class:`~repro.federated.agg_engine.PartialSum`; the parent
+folds R partials with one donated add each.  Per grid point
+(n_clients x tree shape):
+
+* ``us_per_client`` — wall time of one full round's fold divided by the
+  cohort size: the per-update cost of the hot path (``add`` into the
+  streaming accumulator + the parent's ``fold_partial`` amortized);
+* ``rounds_per_s`` — 1 / round fold time: how fast the server side can
+  turn rounds if the wire were free;
+* ``overhead_vs_flat`` — tree fold time / flat fold time at the same
+  cohort size (the price of the extra partial hop, which buys the
+  regional fan-in);
+* ``vs_flat8_per_client`` — per-client cost relative to the flat
+  8-silo baseline (the paper's cross-silo scale).  The tentpole
+  acceptance: at 10k clients this stays within 2x, i.e. the hierarchy
+  keeps per-update cost flat while the population grows 3 orders of
+  magnitude.
+
+A second section times the *engine* path — ``HierarchyCoordinator.
+fold_round`` (real per-client FoldEvents, carry-over bookkeeping, bus
+summaries) against a flat ``AsyncRoundEngine`` — at a moderate cohort,
+so the coordinator's per-round overhead is visible separately from the
+raw fold arithmetic.
+
+Writes BENCH_hierarchy.json (or --out) and prints
+``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
+
+Usage:
+  PYTHONPATH=src python benchmarks/hierarchy_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import NULL_BUS
+from repro.federated.agg_engine import AggregationEngine
+from repro.federated.async_server import AsyncRoundEngine, InstantSchedule
+from repro.federated.client import ClientResult
+from repro.federated.hierarchy import HierarchyCoordinator, partition_regions
+
+Row = Tuple[str, float, str]
+
+N_PARAMS = 8192          # one dense layer's worth — fold cost is O(L) per add
+UPDATE_POOL = 64         # distinct simulated updates cycled over the cohort
+REPEATS = 5
+FULL_COHORTS = [1_000, 10_000]
+QUICK_COHORTS = [1_000]
+TREES = [1, 4, 16]       # 1 == flat (no regional hop)
+ENGINE_COHORT = 512      # coordinator-path benchmark size
+
+
+def _update_pool(n: int, n_params: int, seed: int = 0) -> List[Any]:
+    """Pre-built simulated client updates (two-leaf tree, L total)."""
+    rng = np.random.default_rng(seed)
+    k = n_params // 2
+    return [
+        {
+            "w": jnp.asarray(rng.standard_normal(k), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(n_params - k), jnp.float32),
+        }
+        for _ in range(n)
+    ]
+
+
+def _base(n_params: int) -> Any:
+    k = n_params // 2
+    return {
+        "w": jnp.zeros((k,), jnp.float32),
+        "b": jnp.zeros((n_params - k,), jnp.float32),
+    }
+
+
+def fold_once(
+    engine: AggregationEngine,
+    base: Any,
+    pool: List[Any],
+    weights: List[float],
+    n_clients: int,
+    regions: int,
+) -> Any:
+    """One round's fold: flat (regions == 1) or two-level tree."""
+    if regions == 1:
+        agg = engine.streaming(base=base, base_round=0)
+        for i in range(n_clients):
+            agg.add(pool[i % len(pool)], weights[i])
+        return agg.result()
+    parent = engine.streaming(base=base, base_round=0)
+    for r in range(regions):
+        regional = engine.streaming(base=base, base_round=0)
+        for i in range(r, n_clients, regions):
+            regional.add(pool[i % len(pool)], weights[i])
+        parent.fold_partial(regional.export_partial(f"region{r}"))
+    return parent.result()
+
+
+def bench_fold_tree(
+    n_clients: int,
+    regions: int,
+    flat8_us_per_client: Optional[float] = None,
+    repeats: int = REPEATS,
+) -> Dict[str, Any]:
+    """Measured fold wall time for one (cohort, tree-shape) grid point."""
+    engine = AggregationEngine()
+    base = _base(N_PARAMS)
+    pool = _update_pool(min(n_clients, UPDATE_POOL), N_PARAMS)
+    rng = np.random.default_rng(1)
+    weights = [float(w) for w in rng.integers(1, 16, size=n_clients)]
+
+    jax.block_until_ready(
+        jax.tree.leaves(fold_once(engine, base, pool, weights, n_clients, regions))
+    )  # warm: jit traces, plan cache
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fold_once(engine, base, pool, weights, n_clients, regions)
+        jax.block_until_ready(jax.tree.leaves(out))
+        times.append(time.perf_counter() - t0)
+    fold_s = statistics.median(times)
+
+    us_per_client = fold_s / n_clients * 1e6
+    entry = {
+        "n_clients": n_clients,
+        "regions": regions,
+        "tree": "flat" if regions == 1 else f"{regions}-region",
+        "n_params": N_PARAMS,
+        "fold_s": round(fold_s, 6),
+        "us_per_client": round(us_per_client, 3),
+        "rounds_per_s": round(1.0 / fold_s, 3),
+    }
+    if flat8_us_per_client is not None:
+        entry["vs_flat8_per_client"] = round(us_per_client / flat8_us_per_client, 3)
+    print(
+        f"[hierarchy] {entry['tree']} N={n_clients}: "
+        f"fold={fold_s*1e3:.1f}ms {us_per_client:.1f}us/client "
+        f"{entry['rounds_per_s']:.1f} rounds/s",
+        file=sys.stderr,
+    )
+    return entry
+
+
+def bench_engine_round(n_clients: int = ENGINE_COHORT, regions: int = 4) -> Dict[str, Any]:
+    """Coordinator path (FoldEvents + bus summaries) vs a flat engine."""
+    base = _base(N_PARAMS)
+    pool = _update_pool(UPDATE_POOL, N_PARAMS)
+    rng = np.random.default_rng(2)
+    results = [
+        ClientResult(f"c{i}", pool[i % len(pool)], int(rng.integers(1, 16)), 0.0)
+        for i in range(n_clients)
+    ]
+    schedule = InstantSchedule()
+
+    flat = AsyncRoundEngine(bus=NULL_BUS)
+    coord = HierarchyCoordinator(
+        partition_regions([r.client_id for r in results], regions), bus=NULL_BUS
+    )
+
+    def time_one(fold: Any) -> float:
+        fold()  # warm
+        times = []
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            fold()
+            times.append(time.perf_counter() - t0)
+        return statistics.median(times)
+
+    flat_s = time_one(
+        lambda: flat.fold_round(0, results, schedule, base_params=base)
+    )
+    tree_s = time_one(
+        lambda: coord.fold_round(0, results, schedule, base_params=base)
+    )
+    entry = {
+        "n_clients": n_clients,
+        "regions": regions,
+        "flat_engine_s": round(flat_s, 6),
+        "coordinator_s": round(tree_s, 6),
+        "overhead_vs_flat": round(tree_s / flat_s, 3),
+    }
+    print(
+        f"[hierarchy] engine N={n_clients}: flat={flat_s*1e3:.1f}ms "
+        f"coordinator({regions} regions)={tree_s*1e3:.1f}ms "
+        f"({entry['overhead_vs_flat']}x)",
+        file=sys.stderr,
+    )
+    return entry
+
+
+def run_grid(quick: bool = False, repeats: int = REPEATS) -> Dict[str, Any]:
+    cohorts = QUICK_COHORTS if quick else FULL_COHORTS
+    flat8 = bench_fold_tree(8, 1, repeats=repeats)  # paper-scale baseline
+    entries = [flat8]
+    for n in cohorts:
+        flat_n: Dict[str, Any] = {}
+        for r in TREES:
+            e = bench_fold_tree(
+                n, r, flat8_us_per_client=flat8["us_per_client"], repeats=repeats
+            )
+            if r == 1:
+                flat_n = e
+            else:
+                e["overhead_vs_flat"] = round(e["fold_s"] / flat_n["fold_s"], 3)
+            entries.append(e)
+    return {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "n_params": N_PARAMS,
+        "entries": entries,
+        "engine_round": bench_engine_round(),
+    }
+
+
+def bench_hierarchy() -> List[Row]:
+    """run.py-compatible rows (quick grid)."""
+    report = run_grid(quick=True, repeats=3)
+    rows: List[Row] = []
+    for e in report["entries"]:
+        derived = (
+            f"us_per_client={e['us_per_client']};"
+            f"rounds_per_s={e['rounds_per_s']}"
+        )
+        if "vs_flat8_per_client" in e:
+            derived += f";vs_flat8={e['vs_flat8_per_client']}"
+        rows.append((f"hierarchy_{e['tree']}_{e['n_clients']}", e["fold_s"] * 1e6, derived))
+    er = report["engine_round"]
+    rows.append((
+        f"hierarchy_engine_{er['regions']}region_{er['n_clients']}",
+        er["coordinator_s"] * 1e6,
+        f"flat_us={er['flat_engine_s']*1e6:.0f};overhead={er['overhead_vs_flat']}",
+    ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--repeats", type=int, default=REPEATS)
+    ap.add_argument("--out", default="BENCH_hierarchy.json")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, repeats=args.repeats)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[hierarchy] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for e in report["entries"]:
+        print(
+            f"hierarchy_{e['tree']}_{e['n_clients']},"
+            f"{e['fold_s']*1e6:.1f},"
+            f"us_per_client={e['us_per_client']};"
+            f"rounds_per_s={e['rounds_per_s']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

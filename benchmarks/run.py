@@ -13,6 +13,7 @@ def main() -> None:
     from .compression_bench import bench_compression
     from .control_plane_bench import bench_control_plane
     from .deadline_bench import bench_deadline_round
+    from .hierarchy_bench import bench_hierarchy
     from .kernel_bench import bench_kernels
     from .paper_tables import (
         bench_checkpoint_overhead,
@@ -40,6 +41,7 @@ def main() -> None:
         bench_transport,            # loopback socket rounds vs in-process
         bench_compression,          # compressed wire path: bytes + WAN round time
         bench_chaos,                # seeded fault soak: MTTR + rounds lost
+        bench_hierarchy,            # regional partial-sum folds vs flat at 1k clients
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]
     print("name,us_per_call,derived")

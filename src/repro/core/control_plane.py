@@ -60,7 +60,9 @@ from .events import (
     DeadlineExpired,
     Event,
     EventBus,
+    PartialFolded,
     RecoveryCompleted,
+    RegionClosed,
     RevocationOccurred,
     RoundClosed,
     RoundDispatched,
@@ -81,11 +83,13 @@ if TYPE_CHECKING:  # concrete types only needed for static conformance
     from .initial_mapping import InitialMapping
     from .pre_scheduling import PreScheduling
     from .simulator import SimulationConfig, SimulationResult
+    from repro.federated.hierarchy import HierarchyCoordinator
 
 __all__ = [
     "ControlPlane",
     "Experiment",
     "FaultToleranceAPI",
+    "HierarchyAPI",
     "MapperAPI",
     "PreSchedulerAPI",
     "RecoveryOutcome",
@@ -167,6 +171,36 @@ class SchedulerAPI(Protocol):
     ) -> ReplacementDecision: ...
 
 
+@runtime_checkable
+class HierarchyAPI(Protocol):
+    """Two-level aggregation: regional cohort folds composed via partial
+    sums (see :mod:`repro.federated.hierarchy` for the concrete
+    coordinator and the numerical-equivalence contract)."""
+
+    @property
+    def region_ids(self) -> List[str]: ...
+
+    def cohort_for(
+        self, round_idx: int, client_ids: Sequence[str]
+    ) -> List[str]: ...
+
+    def fold_partials(
+        self,
+        round_idx: int,
+        partials: Sequence[Any],
+        base_params: Any,
+        now_s: float = ...,
+    ) -> Any: ...
+
+    def fold_round(
+        self,
+        round_idx: int,
+        results: Sequence[Any],
+        schedule: Any = ...,
+        base_params: Any = ...,
+    ) -> Any: ...
+
+
 def _static_conformance(
     pre: "PreScheduling",
     mapper: "InitialMapping",
@@ -179,6 +213,14 @@ def _static_conformance(
     the CI typecheck job the moment a concrete module drifts off its
     Protocol surface."""
     return pre, mapper, ft, sched
+
+
+def _static_hierarchy_conformance(
+    coordinator: "HierarchyCoordinator",
+) -> HierarchyAPI:
+    """mypy-only witness (same contract as :func:`_static_conformance`):
+    the concrete hierarchy coordinator satisfies :class:`HierarchyAPI`."""
+    return coordinator
 
 
 # ---------------------------------------------------------------------------
@@ -331,6 +373,37 @@ class ControlPlane:
         return self.bus.publish(
             RoundClosed(now_s, round_idx, span_s,
                         tuple(carried_over), tuple(carried_in))
+        )
+
+    # -- hierarchy (regional partial-sum folds) ----------------------------
+    def close_region(
+        self,
+        round_idx: int,
+        region: str,
+        now_s: float,
+        span_s: float,
+        n_folded: int = 0,
+        carried_over: Sequence[str] = (),
+    ) -> RegionClosed:
+        """A region's cohort fold finished; its partial sum is exported."""
+        return self.bus.publish(
+            RegionClosed(now_s, round_idx, region, span_s,
+                         n_folded, tuple(carried_over))
+        )
+
+    def partial_folded(
+        self,
+        round_idx: int,
+        region: str,
+        n_clients: int,
+        weight: float,
+        now_s: float,
+        base_round: Optional[int] = None,
+    ) -> PartialFolded:
+        """A regional partial sum entered the parent round's accumulator."""
+        return self.bus.publish(
+            PartialFolded(now_s, round_idx, region,
+                          int(n_clients), float(weight), base_round)
         )
 
     # -- §4.3 / §4.4 fault recovery ---------------------------------------
@@ -501,6 +574,7 @@ class Experiment:
         self._transport: Optional[Dict[str, Any]] = None
         self._chaos: Optional[Any] = None
         self._compression: Optional[Any] = None
+        self._hierarchy: Optional[Dict[str, Any]] = None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -517,6 +591,7 @@ class Experiment:
         exp._transport = None if self._transport is None else dict(self._transport)
         exp._chaos = self._chaos
         exp._compression = self._compression
+        exp._hierarchy = None if self._hierarchy is None else dict(self._hierarchy)
         for key, value in changes.items():
             setattr(exp, key, value)
         return exp
@@ -656,6 +731,66 @@ class Experiment:
         exp._min_clients = min_clients
         exp._carry_discount = float(carry_discount)
         return exp
+
+    def hierarchy(
+        self,
+        regions: Union[int, Mapping[str, Sequence[str]]] = 4,
+        *,
+        cohort: Any = None,
+        sharded: bool = False,
+        seed: int = 0,
+    ) -> "Experiment":
+        """Two-level aggregation on the in-process *serve* target.
+
+        ``regions`` partitions the clients across regional aggregators —
+        an int (round-robin into that many regions) or an explicit
+        ``{region_id: [client_ids]}`` mapping.  Each region runs its own
+        async round engine (deadline, carry-over, and §4.3 re-request
+        state are region-private) and exports a weighted
+        :class:`~repro.federated.agg_engine.PartialSum`; the parent
+        folds the partials, which is numerically identical to the flat
+        fold over the same clients.
+
+        ``cohort`` turns on per-round client sampling: a float fraction
+        in ``(0, 1]``, an int fixed size, or a
+        :class:`~repro.federated.hierarchy.CohortSampler` (``seed``
+        feeds the sampler when built here).  ``sharded=True`` reduces
+        the parent's stacked regional accumulators across devices with a
+        pod-axis ``psum``.
+
+        Validated at chain time; like :meth:`chaos`, the virtual-clock
+        simulator target rejects it (it models one flat aggregation
+        server), and the socket transport drives flat rounds — the
+        hierarchy is an in-process :meth:`serve` concept."""
+        from repro.federated.hierarchy import as_cohort_sampler
+
+        if isinstance(regions, bool):
+            raise TypeError(
+                "regions must be an int or a {region_id: [client_ids]} "
+                "mapping"
+            )
+        if isinstance(regions, int):
+            if regions < 1:
+                raise ValueError(f"need at least one region, got {regions}")
+            region_spec: Union[int, Dict[str, List[str]]] = regions
+        elif isinstance(regions, Mapping):
+            region_spec = {
+                str(rid): [str(c) for c in cids]
+                for rid, cids in regions.items()
+            }
+            if not region_spec:
+                raise ValueError("region mapping is empty")
+        else:
+            raise TypeError(
+                f"regions must be an int or a {{region_id: [client_ids]}} "
+                f"mapping, got {type(regions).__name__}"
+            )
+        sampler = as_cohort_sampler(cohort, seed=int(seed))
+        return self._clone(_hierarchy={
+            "regions": region_spec,
+            "cohort": sampler,
+            "sharded": bool(sharded),
+        })
 
     def chaos(self, plan: Any) -> "Experiment":
         """Attach a :class:`~repro.federated.chaos.FaultPlan` to the
@@ -855,6 +990,12 @@ class Experiment:
                 "simulator target models message sizes analytically — "
                 "feed it measured compressed sizes via the cost model"
             )
+        if self._hierarchy is not None:
+            raise ValueError(
+                "a hierarchy applies to the in-process serve() target "
+                "(regional engines fold real partial sums there); the "
+                "simulator target models a single flat aggregation server"
+            )
         fields = dict(self._overrides)
         if self._deadline is not None:
             fields["round_deadline"] = self._sim_deadline()
@@ -917,6 +1058,13 @@ class Experiment:
         )
         spec = self._transport
         if spec is not None:
+            if self._hierarchy is not None:
+                raise ValueError(
+                    "the hierarchy runs in-process: regional engines fold "
+                    "partial sums in the server's process, while the socket "
+                    "transport drives a flat round loop — drop .transport() "
+                    "or .hierarchy()"
+                )
             if schedule is not None:
                 raise ValueError(
                     "an ArrivalSchedule is a virtual-clock concept; the "
@@ -1017,6 +1165,18 @@ class Experiment:
                 bus=bus,
             )
         server_kwargs.setdefault("compression", self._compression)
+        if self._hierarchy is not None:
+            from repro.federated.hierarchy import HierarchicalFLServer
+
+            server_kwargs.setdefault("regions", self._hierarchy["regions"])
+            server_kwargs.setdefault("cohort", self._hierarchy["cohort"])
+            server_kwargs.setdefault("sharded", self._hierarchy["sharded"])
+            return HierarchicalFLServer(
+                clients,
+                initial_params,
+                schedule=schedule,
+                **server_kwargs,
+            )
         return AsyncFLServer(
             clients,
             initial_params,

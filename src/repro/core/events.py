@@ -39,7 +39,9 @@ __all__ = [
     "FaultInjected",
     "NULL_BUS",
     "NullBus",
+    "PartialFolded",
     "RecoveryCompleted",
+    "RegionClosed",
     "RevocationOccurred",
     "RoundClosed",
     "RoundDispatched",
@@ -204,6 +206,44 @@ class RoundClosed(Event):
     span_s: float
     carried_over: Tuple[str, ...] = ()  # late silos parked for the next round
     carried_in: Tuple[str, ...] = ()    # stale silos folded into this round
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionClosed(Event):
+    """One region's cohort fold is complete; its partial sum is exported.
+
+    The regional analogue of :class:`RoundClosed`: published by the
+    hierarchy coordinator on the *parent* bus when a
+    :class:`~repro.federated.hierarchy.RegionalAggregator` finishes its
+    cohort round (the region's own engine publishes the usual per-fold
+    vocabulary on its private bus).  ``span_s`` is the region's round
+    span on its virtual clock; ``carried_over`` names the region's late
+    silos parked for its next round."""
+
+    round_idx: int
+    region: str
+    span_s: float
+    n_folded: int = 0
+    carried_over: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialFolded(Event):
+    """A regional :class:`~repro.federated.agg_engine.PartialSum` entered
+    the parent round's accumulator.
+
+    ``weight`` is the region's raw (undiscounted) weight total and
+    ``n_clients`` its cohort contribution — summing them across a
+    round's ``PartialFolded`` events reproduces the flat engine's
+    normalizer, which is what the weight-conservation audits check.
+    ``base_round`` tags the global weights the partial was accumulated
+    against (must equal the parent's base round)."""
+
+    round_idx: int
+    region: str
+    n_clients: int
+    weight: float
+    base_round: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,11 +35,20 @@ park updates that miss a round's ``T_round`` in a :class:`CarryOverBuffer`;
 the next round's :class:`StreamingAggregator` drains it first, folding each
 late silo with a staleness-discounted weight (``StreamingAggregator
 .add_stale`` / ``fold_carry``), so no silo's contribution is ever dropped.
+
+Hierarchical aggregation (see :mod:`repro.federated.hierarchy`) composes
+aggregators into a tree: a regional aggregator exports its padded fp32
+accumulator + weight total as a :class:`PartialSum`
+(:meth:`StreamingAggregator.export_partial`) and a parent folds it with
+:meth:`StreamingAggregator.fold_partial` — weighted partial sums compose
+associatively, so the two-level fold is the same weighted average the
+flat engine computes.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import hashlib
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -60,7 +69,10 @@ class RavelPlan:
     ``unflatten`` restores an ``(L,)`` vector to the original treedef,
     shapes, and per-leaf dtypes.  Both are traced exactly once per model
     structure (the plan is cached), so the per-round cost is pure data
-    movement.
+    movement.  ``signature`` is a stable digest of the structure key
+    (treedef + shapes + dtypes) — the cheap equality token
+    :class:`PartialSum` carries so a parent aggregator can validate a
+    regional partial against its own plan without shipping treedefs.
     """
 
     treedef: Any
@@ -68,12 +80,19 @@ class RavelPlan:
     dtypes: Tuple[Any, ...]
     sizes: Tuple[int, ...]
     total_elems: int
-    flatten: Callable[[Any], jnp.ndarray]
-    flatten_stack: Callable[[Sequence[Any]], jnp.ndarray]
-    unflatten: Callable[[jnp.ndarray], Any]
+    signature: str
+    flatten: Callable[[Any], Any]
+    flatten_stack: Callable[[Sequence[Any]], Any]
+    unflatten: Callable[[Any], Any]
 
 
-_PLAN_CACHE: Dict[Any, RavelPlan] = {}
+# Bounded LRU: hierarchical / multi-model serving churns tree structures,
+# so an unbounded module-global would grow forever (each plan pins two
+# jitted closures) and leak across engines.  Hits move the plan to the
+# back; inserts evict from the front.  Plans held by live aggregators
+# survive eviction — only the cache entry (and its reuse) is dropped.
+_PLAN_CACHE: "OrderedDict[Any, RavelPlan]" = OrderedDict()
+_PLAN_CACHE_MAX: int = 64
 
 
 def _structure_key(tree: Any) -> Any:
@@ -85,11 +104,38 @@ def _structure_key(tree: Any) -> Any:
     )
 
 
+def clear_plan_cache() -> None:
+    """Drop every cached :class:`RavelPlan` (tests / structure churn)."""
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_size() -> int:
+    """Number of plans currently cached (bounded by the LRU limit)."""
+    return len(_PLAN_CACHE)
+
+
+def set_plan_cache_limit(max_plans: int) -> int:
+    """Set the LRU bound on the module-global plan cache; returns it.
+
+    Shrinking below the current population evicts oldest-first
+    immediately.  The default (64) covers dozens of concurrently-served
+    model structures; raise it for multi-model zoos, lower it in
+    memory-tight tests."""
+    global _PLAN_CACHE_MAX
+    if max_plans < 1:
+        raise ValueError("plan cache limit must be >= 1")
+    _PLAN_CACHE_MAX = int(max_plans)
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return _PLAN_CACHE_MAX
+
+
 def plan_for(tree: Any) -> RavelPlan:
-    """Return the (cached) RavelPlan for ``tree``'s structure."""
+    """Return the (LRU-cached) RavelPlan for ``tree``'s structure."""
     key = _structure_key(tree)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
+        _PLAN_CACHE.move_to_end(key)
         return plan
 
     leaves, treedef = jax.tree.flatten(tree)
@@ -99,22 +145,20 @@ def plan_for(tree: Any) -> RavelPlan:
     dtypes = tuple(jnp.result_type(l) for l in leaves)
     sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
     total = int(sum(sizes))
+    signature = hashlib.sha1(repr(key).encode()).hexdigest()[:16]
 
-    @jax.jit
-    def flatten(t):
+    def flatten(t: Any) -> Any:
         ls = jax.tree.leaves(t)
         return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in ls])
 
-    @jax.jit
-    def flatten_stack(trees):
+    def flatten_stack(trees: Sequence[Any]) -> Any:
         rows = [
             jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(t)])
             for t in trees
         ]
         return jnp.stack(rows)
 
-    @jax.jit
-    def unflatten(vec):
+    def unflatten(vec: Any) -> Any:
         outs = []
         off = 0
         for shape, dtype, size in zip(shapes, dtypes, sizes):
@@ -124,18 +168,98 @@ def plan_for(tree: Any) -> RavelPlan:
 
     plan = RavelPlan(
         treedef=treedef, shapes=shapes, dtypes=dtypes, sizes=sizes,
-        total_elems=total, flatten=flatten, flatten_stack=flatten_stack,
-        unflatten=unflatten,
+        total_elems=total, signature=signature,
+        flatten=jax.jit(flatten), flatten_stack=jax.jit(flatten_stack),
+        unflatten=jax.jit(unflatten),
     )
     _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# Structure validation (typed errors instead of opaque tree.map failures)
+# ---------------------------------------------------------------------------
+
+class StructureMismatchError(ValueError):
+    """A client's update pytree diverges from the fold's structure.
+
+    Raised (instead of an opaque ``jax.tree.map`` error — or worse, a
+    silent broadcast) the moment a second client's treedef or leaf
+    shapes fail to match the structure the fold was pinned to.  Carries
+    the offending ``client_id`` (when the caller supplied one) and the
+    first mismatching leaf ``path``."""
+
+    def __init__(
+        self,
+        message: str,
+        client_id: Optional[str] = None,
+        path: Optional[str] = None,
+    ) -> None:
+        super().__init__(message)
+        self.client_id = client_id
+        self.path = path
+
+
+def _leaf_paths(treedef: Any) -> List[str]:
+    """Human-readable key paths for every leaf slot of a treedef."""
+    dummy = jax.tree.unflatten(treedef, list(range(treedef.num_leaves)))
+    kps, _ = jax.tree_util.tree_flatten_with_path(dummy)
+    return [jax.tree_util.keystr(kp) or "<root>" for kp, _ in kps]
+
+
+def _first_structure_mismatch(
+    ref_treedef: Any,
+    ref_shapes: Tuple[Tuple[int, ...], ...],
+    params: Any,
+) -> Optional[Tuple[str, str]]:
+    """``(leaf path, detail)`` of the first divergence, or None if the
+    update matches the reference treedef + leaf shapes (dtypes are NOT
+    compared: mixed-precision clients fold through the fp32 cast)."""
+    leaves, treedef = jax.tree.flatten(params)
+    shapes = tuple(tuple(np.shape(l)) for l in leaves)
+    if treedef == ref_treedef:
+        if shapes == ref_shapes:
+            return None
+        for path, got, want in zip(_leaf_paths(treedef), shapes, ref_shapes):
+            if got != want:
+                return path, f"leaf shape {got} != expected {want}"
+        return "<root>", "leaf shapes diverge"
+    ref_paths = _leaf_paths(ref_treedef)
+    got_paths = _leaf_paths(treedef)
+    for rp, gp in zip(ref_paths, got_paths):
+        if rp != gp:
+            return gp, f"unexpected leaf (expected {rp} here)"
+    if len(got_paths) != len(ref_paths):
+        longer = got_paths if len(got_paths) > len(ref_paths) else ref_paths
+        extra = longer[min(len(got_paths), len(ref_paths))]
+        kind = "extra" if len(got_paths) > len(ref_paths) else "missing"
+        return extra, (
+            f"{kind} leaf: update has {len(got_paths)} leaves, "
+            f"expected {len(ref_paths)}"
+        )
+    return "<root>", f"treedef {treedef} != expected {ref_treedef}"
+
+
+def _raise_structure_mismatch(
+    mismatch: Tuple[str, str], client_id: Optional[str]
+) -> None:
+    path, detail = mismatch
+    who = f"client {client_id!r}" if client_id is not None else "an update"
+    raise StructureMismatchError(
+        f"update from {who} does not match the fold's pytree structure "
+        f"at leaf {path!r}: {detail}",
+        client_id=client_id,
+        path=path,
+    )
 
 
 # ---------------------------------------------------------------------------
 # Fused flat reduces
 # ---------------------------------------------------------------------------
 
-def _dot_reduce(stacked: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+def _dot_reduce(stacked: Any, w: Any) -> Any:
     """(N, L) x (N,) -> (L,): single fp32-accumulated contraction.
 
     ``w`` must already be normalized."""
@@ -143,12 +267,12 @@ def _dot_reduce(stacked: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return out.astype(stacked.dtype)
 
 
-def _pallas_flat_reduce(stacked, weights, interpret):
+def _pallas_flat_reduce(stacked: Any, weights: Any, interpret: Any) -> Any:
     from repro.kernels.fedavg_reduce import fedavg_reduce as _kernel
     return _kernel(stacked, weights, interpret=interpret)
 
 
-def fused_stacked_tree_reduce(stacked: Any, weights: jnp.ndarray) -> Any:
+def fused_stacked_tree_reduce(stacked: Any, weights: Any) -> Any:
     """Traceable FedAvg over a pytree with a leading client/pod axis.
 
     Flattens every leaf of the replica stack into one ``(N, L)`` buffer
@@ -244,11 +368,11 @@ class AggregationEngine:
         self.interpret = interpret
         self.chunk_elems = chunk_elems
         self.stats = AggStats()
-        self._tree_reduce_cache: Dict[Any, Callable] = {}
+        self._tree_reduce_cache: Dict[Any, Callable[..., Any]] = {}
 
     # -- weights -------------------------------------------------------------
     @staticmethod
-    def _normalized_weights(weights: Sequence[float]) -> np.ndarray:
+    def _normalized_weights(weights: Sequence[float]) -> Any:
         w = np.asarray(weights, np.float64)
         if w.ndim != 1 or w.size == 0:
             raise ValueError("weights must be a non-empty 1-D sequence")
@@ -280,17 +404,17 @@ class AggregationEngine:
         fn = self._get_tree_reduce(client_params)
         return fn(list(client_params), jnp.asarray(w))
 
-    def _get_tree_reduce(self, client_params: Sequence[Any]) -> Callable:
+    def _get_tree_reduce(self, client_params: Sequence[Any]) -> Callable[..., Any]:
         key = (len(client_params), _structure_key(client_params[0]))
         fn = self._tree_reduce_cache.get(key)
         if fn is not None:
             return fn
         stats = self.stats
 
-        def tree_reduce(trees, w):
+        def tree_reduce(trees: Any, w: Any) -> Any:
             stats.n_traces += 1  # executes at trace time only
 
-            def avg(*leaves):
+            def avg(*leaves: Any) -> Any:
                 acc = leaves[0].astype(jnp.float32) * w[0]
                 for i in range(1, len(leaves)):
                     acc = acc + leaves[i].astype(jnp.float32) * w[i]
@@ -305,11 +429,11 @@ class AggregationEngine:
     # -- flat path ((N, L) stacked buffers) ----------------------------------
     def reduce_flat(
         self,
-        stacked: jnp.ndarray,
-        weights: jnp.ndarray,
+        stacked: Any,
+        weights: Any,
         donate: Optional[bool] = None,
         chunk_elems: Optional[int] = None,
-    ) -> jnp.ndarray:
+    ) -> Any:
         """Weighted average over axis 0 of a contiguous (N, L) buffer.
 
         ``donate=True`` hands the stacked buffer to XLA (the caller must
@@ -331,7 +455,7 @@ class AggregationEngine:
             donate = self.use_pallas and self.backend == "tpu"
         return self._get_flat_reduce(donate)(stacked, w)
 
-    def _get_flat_reduce(self, donate: bool) -> Callable:
+    def _get_flat_reduce(self, donate: bool) -> Callable[..., Any]:
         """Per-engine jitted flat reduce (trace-counted, backend-routed)."""
         key = ("flat", self.use_pallas, bool(donate))
         fn = self._tree_reduce_cache.get(key)
@@ -344,11 +468,11 @@ class AggregationEngine:
                 from repro.kernels.ops import _interpret_default
                 interp = _interpret_default()
 
-            def flat_reduce(stacked, w):
+            def flat_reduce(stacked: Any, w: Any) -> Any:
                 stats.n_traces += 1  # executes at trace time only
                 return _pallas_flat_reduce(stacked, w, interpret=interp)
         else:
-            def flat_reduce(stacked, w):
+            def flat_reduce(stacked: Any, w: Any) -> Any:
                 stats.n_traces += 1  # executes at trace time only
                 return _dot_reduce(stacked, w / jnp.sum(w))
 
@@ -356,7 +480,7 @@ class AggregationEngine:
         self._tree_reduce_cache[key] = fn
         return fn
 
-    def _reduce_flat_chunked(self, stacked, w, chunk):
+    def _reduce_flat_chunked(self, stacked: Any, w: Any, chunk: int) -> Any:
         """Column-blocked streaming reduce: O(N*chunk) working set.
 
         Each block goes through the same backend-routed reduce as the
@@ -367,15 +491,21 @@ class AggregationEngine:
         return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
 
     # -- streaming -----------------------------------------------------------
-    def streaming(self, base: Any = None) -> "StreamingAggregator":
+    def streaming(
+        self, base: Any = None, base_round: Optional[int] = None
+    ) -> "StreamingAggregator":
         """New per-round streaming accumulator (async client folding).
 
         ``base`` switches the aggregator to flat/delta mode anchored on
         the round's global weights — required to fold
         :class:`~repro.federated.compression.CompressedUpdate` payloads
         (deltas against ``base``) and numerically identical to the plain
-        weighted average for dense updates (the base cancels exactly)."""
-        return StreamingAggregator(self, base=base)
+        weighted average for dense updates (the base cancels exactly).
+        ``base_round`` tags the base so compressed updates carrying a
+        ``base_round`` of their own are validated against it (a delta
+        folded against the wrong round's base is silent corruption —
+        see :meth:`StreamingAggregator.rebase`)."""
+        return StreamingAggregator(self, base=base, base_round=base_round)
 
 
 # ---------------------------------------------------------------------------
@@ -390,7 +520,13 @@ class CarryEntry:
     it is finally folded, its example weight is discounted by the staleness
     factor ``discount ** (fold_round - origin_round)`` so fresh silos
     dominate while the straggler's contribution still lands (never silently
-    dropped)."""
+    dropped).
+
+    ``params`` must be a *dense* pytree: a compressed update encodes a
+    delta against its origin round's base, which a later round no longer
+    has — the async engine dequantizes at park time
+    (:func:`repro.federated.compression.materialize_update`) so the
+    parked value is base-independent."""
 
     client_id: str
     params: Any
@@ -428,6 +564,10 @@ class CarryOverBuffer:
     def clients(self) -> List[str]:
         return [e.client_id for e in self._entries]
 
+    def snapshot(self) -> List[CarryEntry]:
+        """Non-destructive view of the parked entries (oldest first)."""
+        return list(self._entries)
+
     def pending_weight(self) -> float:
         """Total raw (undiscounted) example weight awaiting a fold."""
         return sum(e.weight for e in self._entries)
@@ -439,39 +579,52 @@ class CarryOverBuffer:
         return bool(self._entries)
 
 
-@jax.jit
-def _scale_tree(tree, w):
+def _scale_tree_impl(tree: Any, w: Any) -> Any:
     return jax.tree.map(lambda l: l.astype(jnp.float32) * w, tree)
+
+
+_scale_tree: Callable[..., Any] = jax.jit(_scale_tree_impl)
 
 
 # The accumulator is donated: same shape/dtype in and out, so XLA updates
 # it in place — O(L) extra memory total, regardless of client count.
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _accum_tree(acc, tree, w):
+def _accum_tree_impl(acc: Any, tree: Any, w: Any) -> Any:
     return jax.tree.map(lambda a, l: a + l.astype(jnp.float32) * w, acc, tree)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _scale_acc(acc, inv):
+_accum_tree: Callable[..., Any] = jax.jit(_accum_tree_impl, donate_argnums=(0,))
+
+
+def _scale_acc_impl(acc: Any, inv: Any) -> Any:
     return jax.tree.map(lambda a: a * inv, acc)
+
+
+_scale_acc: Callable[..., Any] = jax.jit(_scale_acc_impl, donate_argnums=(0,))
 
 
 # Flat-mode (delta) folds: the padded fp32 accumulator is donated so XLA
 # updates it in place, exactly like the tree-mode `_accum_tree`.
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _flat_delta_fold(acc, flat, base, w):
+def _flat_delta_fold_impl(acc: Any, flat: Any, base: Any, w: Any) -> Any:
     """acc[:L] += (flat - base) * w — dense update folded as a delta."""
     return acc.at[: base.shape[0]].add((flat - base) * w)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _flat_scatter_fold(acc, idx, vals, w):
+_flat_delta_fold: Callable[..., Any] = jax.jit(
+    _flat_delta_fold_impl, donate_argnums=(0,)
+)
+
+
+def _flat_scatter_fold_impl(acc: Any, idx: Any, vals: Any, w: Any) -> Any:
     """acc[idx] += vals * w — the top-k sparse fold (fp16 values)."""
     return acc.at[idx].add(vals.astype(jnp.float32) * w)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _flat_dequant_fold_jnp(acc, data, scales, w):
+_flat_scatter_fold: Callable[..., Any] = jax.jit(
+    _flat_scatter_fold_impl, donate_argnums=(0,)
+)
+
+
+def _flat_dequant_fold_jnp_impl(acc: Any, data: Any, scales: Any, w: Any) -> Any:
     """Fused dequantize-and-fold for einsum-tier backends: one jitted
     pass, same per-block math as the Pallas `dequant_fold` kernel."""
     nb = scales.shape[0]
@@ -479,16 +632,68 @@ def _flat_dequant_fold_jnp(acc, data, scales, w):
     return acc + ((w * scales)[:, None] * x).reshape(acc.shape)
 
 
-@jax.jit
-def _flat_finalize(acc, base, inv):
+_flat_dequant_fold_jnp: Callable[..., Any] = jax.jit(
+    _flat_dequant_fold_jnp_impl, donate_argnums=(0,)
+)
+
+
+# A regional partial sum is another padded fp32 accumulator: folding it
+# is a donated elementwise add (partial sums compose associatively).
+def _flat_partial_fold_impl(acc: Any, other: Any) -> Any:
+    """acc += other — fold a regional partial accumulator in."""
+    return acc + other
+
+
+_flat_partial_fold: Callable[..., Any] = jax.jit(
+    _flat_partial_fold_impl, donate_argnums=(0,)
+)
+
+
+def _flat_finalize_impl(acc: Any, base: Any, inv: Any) -> Any:
     """base + acc[:L] * inv — the flat-mode weighted average.  The padded
     accumulator is NOT donated here: the (L,) output can't alias it."""
     return base + acc[: base.shape[0]] * inv
 
 
+_flat_finalize: Callable[..., Any] = jax.jit(_flat_finalize_impl)
+
+
 def _leaf_nbytes(leaf: Any) -> int:
     nbytes = getattr(leaf, "nbytes", None)
     return int(nbytes) if nbytes is not None else int(np.asarray(leaf).nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Partial sums (hierarchical aggregation)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartialSum:
+    """One aggregator's exported partial fold — the hierarchy wire unit.
+
+    ``acc`` is the BLOCK-padded fp32 delta accumulator (the exact buffer
+    a flat-mode :class:`StreamingAggregator` holds: ``sum_i w_i *
+    (update_i - base)``, zero-padded to the Pallas tile multiple), so a
+    parent engine folds it with one elementwise add and regional /
+    parent results compose to the same weighted average the flat fold
+    computes.  ``wsum`` / ``n_clients`` are the region's raw weight
+    total and client count; ``plan_signature`` pins the model structure
+    and ``base_round`` the global weights the deltas were taken against
+    — :meth:`StreamingAggregator.fold_partial` validates both, because a
+    partial folded against a different structure or base is silent
+    corruption."""
+
+    acc: Any
+    wsum: float
+    n_clients: int
+    plan_signature: str
+    base_round: Optional[int] = None
+    region_id: str = ""
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes a parent link carries for this partial (the fp32 acc)."""
+        return _leaf_nbytes(self.acc)
 
 
 class StreamingAggregator:
@@ -509,41 +714,115 @@ class StreamingAggregator:
     :class:`~repro.federated.compression.CompressedUpdate` payloads
     (int8 / fp16 / top-k deltas) directly via the fused Pallas
     dequantize-and-fold kernel, never materializing a dense fp32 update.
+
+    The base survives ``result()`` so a flat-mode aggregator can be
+    reused — but a *reused* aggregator folding the NEXT round's deltas
+    must first :meth:`rebase` onto that round's global weights:
+    compressed deltas are meaningless against a stale base.  Construct
+    with ``base_round`` (or via ``streaming(base=..., base_round=...)``)
+    to have :meth:`add_compressed` enforce the match against each
+    update's own ``base_round`` tag.
     """
 
     def __init__(
-        self, engine: Optional[AggregationEngine] = None, base: Any = None
+        self,
+        engine: Optional[AggregationEngine] = None,
+        base: Any = None,
+        base_round: Optional[int] = None,
     ) -> None:
         self._engine = engine
         self._plan: Optional[RavelPlan] = None
-        self._base_flat: Optional[jnp.ndarray] = None
+        self._base_flat: Optional[Any] = None
         self._padded_len = 0
+        self.base_round: Optional[int] = None
         if base is not None:
             from repro.kernels.fedavg_reduce import BLOCK as _block
             self._plan = plan_for(base)
             self._base_flat = self._plan.flatten(base)
             self._padded_len = -(-self._plan.total_elems // _block) * _block
+            self.base_round = base_round
+        elif base_round is not None:
+            raise ValueError(
+                "base_round tags a delta base: pass base= too"
+            )
         self._acc: Any = None
-        self._acc_flat: Optional[jnp.ndarray] = None
+        self._acc_flat: Optional[Any] = None
         self._dtypes: Optional[List[Any]] = None
-        self._treedef = None
+        self._treedef: Any = None
+        self._shapes: Optional[Tuple[Tuple[int, ...], ...]] = None
         self._wsum = 0.0
         self.n_clients = 0
 
     def _reset(self) -> None:
         """Clear per-fold state (`result()` calls this); the base/plan
-        are construction-time configuration and survive for reuse."""
+        are construction-time configuration and survive for reuse —
+        callers starting a NEW round on a reused flat-mode aggregator
+        must :meth:`rebase` onto that round's global weights first."""
         self._acc = None
         self._acc_flat = None
         self._dtypes = None
         self._treedef = None
+        self._shapes = None
         self._wsum = 0.0
         self.n_clients = 0
 
-    def _ensure_flat_acc(self) -> jnp.ndarray:
+    def _ensure_flat_acc(self) -> Any:
         if self._acc_flat is None:
             self._acc_flat = jnp.zeros(self._padded_len, jnp.float32)
         return self._acc_flat
+
+    @property
+    def mid_fold(self) -> bool:
+        """True while a fold is accumulating (clients added, no result yet)."""
+        return self.n_clients > 0 or self._acc is not None or self._acc_flat is not None
+
+    def rebase(self, base: Any, base_round: Optional[int] = None) -> None:
+        """Re-anchor a reused flat-mode aggregator on a new round's base.
+
+        The fix for the stale-base reuse bug: ``_base_flat`` survives
+        ``_reset()`` by design (construction-time configuration), so a
+        flat-mode aggregator reused for the next round would silently
+        fold that round's compressed deltas against the *previous*
+        round's global weights.  Call ``rebase(new_global_params,
+        base_round=r)`` between rounds instead of rebuilding the
+        aggregator; the new base must have the same pytree structure,
+        and rebasing mid-fold is rejected (the accumulator holds deltas
+        against the old base)."""
+        if self._plan is None or self._base_flat is None:
+            raise ValueError(
+                "rebase() applies to flat/delta mode: construct the "
+                "aggregator with streaming(base=global_params) first"
+            )
+        if self.mid_fold:
+            raise ValueError(
+                "cannot rebase mid-fold: the accumulator holds deltas "
+                "against the current base — call result() (or "
+                "export_partial()) first"
+            )
+        plan = plan_for(base)
+        if plan.signature != self._plan.signature:
+            mismatch = _first_structure_mismatch(
+                self._plan.treedef, self._plan.shapes, base
+            )
+            raise StructureMismatchError(
+                "rebase() base does not match the aggregator's plan"
+                + (f" at leaf {mismatch[0]!r}: {mismatch[1]}" if mismatch else ""),
+                path=mismatch[0] if mismatch else None,
+            )
+        self._plan = plan
+        self._base_flat = plan.flatten(base)
+        self.base_round = base_round
+
+    def _check_structure(self, params: Any, client_id: Optional[str]) -> None:
+        if self._plan is not None:
+            ref_treedef, ref_shapes = self._plan.treedef, self._plan.shapes
+        elif self._treedef is not None and self._shapes is not None:
+            ref_treedef, ref_shapes = self._treedef, self._shapes
+        else:
+            return
+        mismatch = _first_structure_mismatch(ref_treedef, ref_shapes, params)
+        if mismatch is not None:
+            _raise_structure_mismatch(mismatch, client_id)
 
     def add(
         self,
@@ -551,27 +830,29 @@ class StreamingAggregator:
         weight: float,
         block: bool = False,
         wire_bytes: Optional[int] = None,
+        client_id: Optional[str] = None,
     ) -> None:
         """Fold one client in; ``block=True`` waits for the fused
         accumulate to finish (the async round engine uses it to measure
         the true per-fold cost instead of dispatch latency).
         ``wire_bytes`` is the transport frame size when it differs from
         the dense in-memory bytes (compressed arrivals); compressed
-        payloads themselves route to :meth:`add_compressed`."""
+        payloads themselves route to :meth:`add_compressed`.
+        ``client_id`` names the silo in structure-mismatch errors."""
         from repro.federated.compression import CompressedUpdate
         if isinstance(params, CompressedUpdate):
-            self.add_compressed(params, weight, block=block, wire_bytes=wire_bytes)
+            self.add_compressed(
+                params, weight, block=block, wire_bytes=wire_bytes,
+                client_id=client_id,
+            )
             return
         w = float(weight)
         if w < 0:
             raise ValueError("client weight must be non-negative")
+        self._check_structure(params, client_id)
         if self._base_flat is not None:
+            assert self._plan is not None
             flat = self._plan.flatten(params)
-            if flat.shape[0] != self._base_flat.shape[0]:
-                raise ValueError(
-                    f"update has {flat.shape[0]} elements; the aggregation "
-                    f"base has {self._base_flat.shape[0]}"
-                )
             acc = self._ensure_flat_acc()
             self._acc_flat = _flat_delta_fold(
                 acc, flat, self._base_flat, jnp.float32(w)
@@ -584,6 +865,11 @@ class StreamingAggregator:
             # jnp.result_type, which weak-type-promotes Python-scalar
             # and numpy-default leaves past what jax will materialize.
             self._dtypes = [jnp.asarray(l).dtype for l in leaves]
+            # Pin the structure too: every later client is validated
+            # against this treedef + these leaf shapes (a mismatch used
+            # to surface as an opaque tree.map error or a silent
+            # broadcast).
+            self._shapes = tuple(tuple(np.shape(l)) for l in leaves)
             self._acc = _scale_tree(params, jnp.float32(w))
             folded = self._acc
         else:
@@ -603,6 +889,7 @@ class StreamingAggregator:
         weight: float,
         block: bool = False,
         wire_bytes: Optional[int] = None,
+        client_id: Optional[str] = None,
     ) -> None:
         """Fold one compressed delta straight into the fp32 accumulator.
 
@@ -610,11 +897,27 @@ class StreamingAggregator:
         ``dequant_fold`` kernel (or its jitted fallback on einsum-tier
         backends) — one pass over the quantized bytes, no dense fp32
         intermediate; top-k payloads fold with a donated sparse scatter.
+
+        An update tagged with a ``base_round`` must match the
+        aggregator's own base-round tag: the payload is a delta against
+        that specific round's global weights, and folding it against any
+        other base silently corrupts the average (the stale-base reuse
+        bug) — :meth:`rebase` the aggregator between rounds.
         """
         if self._base_flat is None or self._plan is None:
             raise ValueError(
                 "compressed updates need a delta base: construct the "
                 "aggregator with streaming(base=global_params)"
+            )
+        update_round = getattr(update, "base_round", None)
+        if update_round is not None and update_round != self.base_round:
+            who = f" from client {client_id!r}" if client_id is not None else ""
+            raise ValueError(
+                f"compressed update{who} was encoded against base round "
+                f"{update_round}, but the aggregator's base is "
+                f"{'untagged' if self.base_round is None else f'round {self.base_round}'}"
+                " — rebase(new_base, base_round=...) the aggregator onto "
+                "the update's round before folding"
             )
         if update.total_elems != self._plan.total_elems:
             raise ValueError(
@@ -679,6 +982,7 @@ class StreamingAggregator:
         stale_rounds: int,
         discount: float,
         block: bool = False,
+        client_id: Optional[str] = None,
     ) -> float:
         """Fold a carried-over (stale) update with a staleness-discounted
         weight ``weight * discount**stale_rounds``; returns the effective
@@ -688,7 +992,7 @@ class StreamingAggregator:
         if not 0.0 <= discount <= 1.0:
             raise ValueError("staleness discount must be in [0, 1]")
         w_eff = float(weight) * float(discount) ** int(stale_rounds)
-        self.add(params, w_eff, block=block)
+        self.add(params, w_eff, block=block, client_id=client_id)
         return w_eff
 
     def fold_carry(
@@ -708,10 +1012,89 @@ class StreamingAggregator:
         for entry in buffer.drain():
             w_eff = self.add_stale(
                 entry.params, entry.weight, entry.age_at(round_idx),
-                discount, block=block,
+                discount, block=block, client_id=entry.client_id,
             )
             folded.append((entry, w_eff))
         return folded
+
+    # -- hierarchy: partial-sum export / fold -------------------------------
+    def export_partial(self, region_id: str = "") -> PartialSum:
+        """Consume the fold as a :class:`PartialSum` instead of params.
+
+        The regional half of the hierarchy: the padded accumulator,
+        weight total, and client count leave as one composable unit (the
+        base is NOT applied — the parent holds the same base and applies
+        it once at finalize).  Flat/delta mode only: partial sums
+        compose only against a shared base.  Like :meth:`result`, the
+        per-fold state is consumed."""
+        if self._plan is None or self._base_flat is None:
+            raise ValueError(
+                "export_partial() requires flat/delta mode: partial sums "
+                "compose only against a shared base — construct the "
+                "aggregator with streaming(base=global_params)"
+            )
+        if self.n_clients == 0:
+            raise ValueError("no clients have been added")
+        partial = PartialSum(
+            acc=self._ensure_flat_acc(),
+            wsum=self._wsum,
+            n_clients=self.n_clients,
+            plan_signature=self._plan.signature,
+            base_round=self.base_round,
+            region_id=region_id,
+        )
+        self._reset()
+        if self._engine is not None:
+            self._engine.stats.n_calls += 1
+        return partial
+
+    def fold_partial(self, partial: PartialSum, block: bool = False) -> None:
+        """Fold a regional :class:`PartialSum` into this accumulator.
+
+        One donated elementwise add over the padded fp32 buffers —
+        weighted partial sums compose associatively, so a parent folding
+        R regional partials computes exactly the flat engine's
+        ``sum_i w_i * (update_i - base)`` over all N clients.  The
+        partial's plan signature and base-round tag must match this
+        aggregator's (folding a partial taken against a different
+        structure or base is silent corruption)."""
+        if self._plan is None or self._base_flat is None:
+            raise ValueError(
+                "fold_partial() requires flat/delta mode: construct the "
+                "aggregator with streaming(base=global_params)"
+            )
+        if partial.n_clients < 1:
+            raise ValueError("a partial sum must carry at least one client")
+        if partial.wsum < 0:
+            raise ValueError("partial weight total must be non-negative")
+        if partial.plan_signature != self._plan.signature:
+            raise StructureMismatchError(
+                f"partial sum from region {partial.region_id!r} was taken "
+                f"against plan {partial.plan_signature}, but this "
+                f"aggregator's plan is {self._plan.signature}",
+                client_id=partial.region_id or None,
+            )
+        if partial.base_round != self.base_round:
+            raise ValueError(
+                f"partial sum from region {partial.region_id!r} was "
+                f"accumulated against base round {partial.base_round}, but "
+                f"the aggregator's base is round {self.base_round}"
+            )
+        other = jnp.asarray(partial.acc, jnp.float32)
+        acc = self._ensure_flat_acc()
+        if other.shape != acc.shape:
+            raise ValueError(
+                f"partial accumulator has shape {other.shape}; the parent's "
+                f"padded accumulator is {acc.shape}"
+            )
+        self._acc_flat = _flat_partial_fold(acc, other)
+        if block:
+            jax.block_until_ready(self._acc_flat)
+        self._wsum += float(partial.wsum)
+        self.n_clients += int(partial.n_clients)
+        if self._engine is not None:
+            nbytes = _leaf_nbytes(other)
+            self._engine.stats.record(nbytes, nbytes)
 
     def result(self) -> Any:
         if self._acc is None and self._acc_flat is None:
@@ -727,6 +1110,7 @@ class StreamingAggregator:
         else:
             acc = _scale_acc(self._acc, jnp.float32(1.0 / self._wsum))
             leaves = jax.tree.leaves(acc)
+            assert self._dtypes is not None
             outs = [l.astype(dt) for l, dt in zip(leaves, self._dtypes)]
             out = jax.tree.unflatten(self._treedef, outs)
         # Consume: the accumulator was donated, and every per-fold field

@@ -97,6 +97,7 @@ from repro.core.events import (
 from repro.core.revocation import RevocationModel, RevocationSampler
 from .agg_engine import AggregationEngine, CarryEntry, CarryOverBuffer
 from .client import ClientResult
+from .compression import CompressedUpdate, materialize_update
 
 __all__ = [
     "ArrivalSchedule",
@@ -456,6 +457,10 @@ class FoldReport:
     carried_over: List[str] = dataclasses.field(default_factory=list)
     carried_in: List[str] = dataclasses.field(default_factory=list)
     escalations: List[str] = dataclasses.field(default_factory=list)
+    # Hierarchy: with ``fold_round(..., emit_partial=True)`` the round's
+    # accumulator leaves as a PartialSum for a parent engine instead of
+    # finalized params (params is None in that case).
+    partial: Optional[Any] = None
 
     @property
     def span_saved_s(self) -> float:
@@ -544,6 +549,7 @@ class AsyncRoundEngine:
         schedule: ArrivalSchedule,
         deadline: Optional[RoundDeadline] = None,
         base_params: Any = None,
+        emit_partial: bool = False,
     ) -> FoldReport:
         """Fold one round's ``c_msg_train`` messages per the schedule.
 
@@ -558,12 +564,26 @@ class AsyncRoundEngine:
         ``base_params`` (the round's global weights) switches the fold to
         the aggregator's flat/delta mode — required when results carry
         :class:`~repro.federated.compression.CompressedUpdate` payloads.
-        A compressed entry carried over from an earlier round folds as a
-        *stale delta* applied to the current base (standard delta-based
-        async semantics, on top of the usual staleness discount)."""
+        A compressed update that misses the deadline is *materialized*
+        (dequantized against this round's base) before it is parked: the
+        delta is only meaningful against its origin round's base, which
+        the next round no longer has, so the carry buffer always holds
+        dense, base-independent parameters.
+
+        ``emit_partial=True`` (hierarchy: this engine is a regional
+        aggregator) finishes the round as a
+        :class:`~repro.federated.agg_engine.PartialSum` on
+        ``FoldReport.partial`` instead of finalized params
+        (``FoldReport.params`` is None) — requires ``base_params``,
+        since partial sums compose only against a shared base."""
         deadline = deadline if deadline is not None else self.deadline
         if not results:
             raise ValueError("fold_round needs at least one client result")
+        if emit_partial and base_params is None:
+            raise ValueError(
+                "emit_partial requires base_params: partial sums compose "
+                "only against a shared delta base"
+            )
         by_id = {r.client_id: r for r in results}
         arrivals = schedule.round_arrivals(round_idx, list(by_id))
 
@@ -598,7 +618,10 @@ class AsyncRoundEngine:
                 round_idx, arrivals, deliveries, weights
             )
 
-        agg = self.agg_engine.streaming(base=base_params)
+        agg = self.agg_engine.streaming(
+            base=base_params,
+            base_round=round_idx if base_params is not None else None,
+        )
         events: List[FoldEvent] = []
         excluded: List[str] = []
         rerequested: List[str] = []
@@ -615,7 +638,7 @@ class AsyncRoundEngine:
             t0 = time.monotonic()
             w_eff = agg.add_stale(
                 entry.params, entry.weight, entry.age_at(round_idx),
-                self.carry_discount, block=True,
+                self.carry_discount, block=True, client_id=entry.client_id,
             )
             measured = time.monotonic() - t0
             cost = self.fold_cost_s if self.fold_cost_s is not None else measured
@@ -669,8 +692,14 @@ class AsyncRoundEngine:
                 # Missed the (quorum-extended) deadline: park the update
                 # for the next round's discounted average and advance the
                 # silo's miss streak toward §4.4 escalation.
+                park_params = res.params
+                if isinstance(park_params, CompressedUpdate):
+                    # A compressed delta is pinned to THIS round's base;
+                    # the next round's aggregator has a different one.
+                    # Materialize now, while the origin base is on hand.
+                    park_params = materialize_update(base_params, park_params)
                 self.carry.defer(
-                    CarryEntry(cid, res.params, float(res.n_samples),
+                    CarryEntry(cid, park_params, float(res.n_samples),
                                origin_round=round_idx,
                                late_by_s=arrival - t_close)
                 )
@@ -685,7 +714,7 @@ class AsyncRoundEngine:
                 continue
 
             t0 = time.monotonic()
-            agg.add(res.params, res.n_samples, block=True)
+            agg.add(res.params, res.n_samples, block=True, client_id=cid)
             measured = time.monotonic() - t0
             cost = self.fold_cost_s if self.fold_cost_s is not None else measured
             start = max(arrival, server_free)
@@ -711,8 +740,14 @@ class AsyncRoundEngine:
             )
 
         t0 = time.monotonic()
-        params = agg.result()
-        jax.block_until_ready(params)
+        partial = None
+        if emit_partial:
+            params = None
+            partial = agg.export_partial()
+            jax.block_until_ready(partial.acc)
+        else:
+            params = agg.result()
+            jax.block_until_ready(params)
         finalize = (time.monotonic() - t0) if self.fold_cost_s is None else 0.0
         busy += finalize
         span = server_free + finalize
@@ -768,6 +803,7 @@ class AsyncRoundEngine:
             carried_over=carried_over,
             carried_in=carried_in,
             escalations=escalations,
+            partial=partial,
         )
 
     # ------------------------------------------------------------------
@@ -917,7 +953,7 @@ class AsyncFLServer(FLServer):
                 dataclasses.replace(
                     r,
                     params=self._compressor_for(r.client_id).encode(
-                        base, r.params
+                        base, r.params, base_round=round_idx
                     ),
                 )
                 for r in results

@@ -122,6 +122,13 @@ class CompressedUpdate:
     element indices (topk only).  ``total_elems`` is the dense length the
     update folds into — the aggregator validates it against the model's
     ravel plan.
+
+    ``base_round`` tags which round's global weights the delta was taken
+    against.  A delta is only meaningful relative to that exact base, so
+    a tagged update lets the server-side aggregator reject a fold
+    against any other round's weights (the stale-base reuse bug) instead
+    of silently corrupting the average.  ``None`` means untagged
+    (legacy encoders); untagged updates fold without the check.
     """
 
     codec: str
@@ -129,6 +136,7 @@ class CompressedUpdate:
     data: np.ndarray
     scales: Optional[np.ndarray] = None
     indices: Optional[np.ndarray] = None
+    base_round: Optional[int] = None
 
     @property
     def wire_bytes(self) -> int:
@@ -145,12 +153,18 @@ def _num_blocks(total_elems: int) -> int:
     return -(-total_elems // QBLOCK)
 
 
-def compress(flat: np.ndarray, spec: CompressionSpec) -> CompressedUpdate:
+def compress(
+    flat: np.ndarray,
+    spec: CompressionSpec,
+    base_round: Optional[int] = None,
+) -> CompressedUpdate:
     """Compress a dense fp32 vector (a flattened delta) with ``spec``.
 
     Pure numpy and deterministic, so the virtual-clock server and the
     live socket workers produce bit-identical updates for the same
-    inputs (trace/params parity across bus drivers).
+    inputs (trace/params parity across bus drivers).  ``base_round``
+    tags the update with the round whose global weights the delta was
+    taken against (see :class:`CompressedUpdate`).
     """
     vec = np.ascontiguousarray(np.asarray(flat, dtype=np.float32).reshape(-1))
     n = int(vec.size)
@@ -159,7 +173,8 @@ def compress(flat: np.ndarray, spec: CompressionSpec) -> CompressedUpdate:
 
     if spec.codec == "fp16":
         return CompressedUpdate(
-            codec="fp16", total_elems=n, data=vec.astype(np.float16)
+            codec="fp16", total_elems=n, data=vec.astype(np.float16),
+            base_round=base_round,
         )
 
     if spec.codec == "topk":
@@ -175,6 +190,7 @@ def compress(flat: np.ndarray, spec: CompressionSpec) -> CompressedUpdate:
             total_elems=n,
             data=vec[idx].astype(np.float16),
             indices=idx,
+            base_round=base_round,
         )
 
     # int8: symmetric per-QBLOCK scales, scale = absmax / 127.
@@ -188,7 +204,8 @@ def compress(flat: np.ndarray, spec: CompressionSpec) -> CompressedUpdate:
     q = np.clip(np.rint(blocks / safe[:, None]), -127, 127).astype(np.int8)
     q[scales == 0.0] = 0
     return CompressedUpdate(
-        codec="int8", total_elems=n, data=q.reshape(-1)[:n], scales=scales
+        codec="int8", total_elems=n, data=q.reshape(-1)[:n], scales=scales,
+        base_round=base_round,
     )
 
 
@@ -212,6 +229,29 @@ def decompress(update: CompressedUpdate) -> np.ndarray:
     return out
 
 
+def materialize_update(base: Any, update: CompressedUpdate) -> Any:
+    """Dense pytree equivalent of ``base + decompress(update)``.
+
+    A compressed update is a delta against one specific round's global
+    weights; anything that outlives that round — above all a
+    :class:`~repro.federated.agg_engine.CarryEntry` parked for a later
+    round's fold — must be pinned to dense parameters *while the origin
+    base is still on hand*.  Folding the raw ``CompressedUpdate`` into a
+    later round's aggregator would apply the delta to the wrong base and
+    silently corrupt the average.
+    """
+    from repro.federated.agg_engine import plan_for
+
+    plan = plan_for(base)
+    if update.total_elems != plan.total_elems:
+        raise ValueError(
+            f"compressed update has {update.total_elems} elements; "
+            f"the base has {plan.total_elems}"
+        )
+    vec = np.asarray(plan.flatten(base), dtype=np.float32) + decompress(update)
+    return plan.unflatten(vec)
+
+
 # ---------------------------------------------------------------------------
 # Wire form: one msgpack blob per update, embedded as a frame payload
 # ---------------------------------------------------------------------------
@@ -228,6 +268,8 @@ def serialize_update(update: CompressedUpdate) -> bytes:
         obj["scales"] = np.ascontiguousarray(update.scales, np.float32).tobytes()
     if update.indices is not None:
         obj["idx"] = np.ascontiguousarray(update.indices, np.int32).tobytes()
+    if update.base_round is not None:
+        obj["br"] = int(update.base_round)
     packed = msgpack.packb(obj, use_bin_type=True)
     assert isinstance(packed, bytes)
     return packed
@@ -262,6 +304,11 @@ def deserialize_update(payload: bytes) -> CompressedUpdate:
     raw = obj.get("data")
     if not isinstance(raw, (bytes, bytearray)):
         raise DeserializationError("compressed update frame has no data field")
+    base_round = obj.get("br")
+    if base_round is not None and not isinstance(base_round, int):
+        raise DeserializationError(
+            f"bad base round tag {base_round!r} in update frame"
+        )
 
     if codec == "fp16":
         if len(raw) != 2 * n:
@@ -269,7 +316,9 @@ def deserialize_update(payload: bytes) -> CompressedUpdate:
                 f"fp16 payload length {len(raw)} != 2 * {n}"
             )
         data = np.frombuffer(raw, dtype=np.float16)
-        return CompressedUpdate(codec="fp16", total_elems=n, data=data)
+        return CompressedUpdate(
+            codec="fp16", total_elems=n, data=data, base_round=base_round
+        )
 
     if codec == "topk":
         rawi = obj.get("idx")
@@ -287,7 +336,8 @@ def deserialize_update(payload: bytes) -> CompressedUpdate:
             raise DeserializationError("topk indices not sorted within range")
         data = np.frombuffer(raw, dtype=np.float16)
         return CompressedUpdate(
-            codec="topk", total_elems=n, data=data, indices=idx
+            codec="topk", total_elems=n, data=data, indices=idx,
+            base_round=base_round,
         )
 
     # int8
@@ -303,7 +353,8 @@ def deserialize_update(payload: bytes) -> CompressedUpdate:
     data = np.frombuffer(raw, dtype=np.int8)
     scales = np.frombuffer(raws, dtype=np.float32)
     return CompressedUpdate(
-        codec="int8", total_elems=n, data=data, scales=scales
+        codec="int8", total_elems=n, data=data, scales=scales,
+        base_round=base_round,
     )
 
 
@@ -342,8 +393,17 @@ class ClientCompressor:
         self.spec = spec
         self._residual: Optional[np.ndarray] = None
 
-    def encode(self, global_params: Any, local_params: Any) -> CompressedUpdate:
-        """Compress this round's update against the round's global weights."""
+    def encode(
+        self,
+        global_params: Any,
+        local_params: Any,
+        base_round: Optional[int] = None,
+    ) -> CompressedUpdate:
+        """Compress this round's update against the round's global weights.
+
+        ``base_round`` tags the update with the round those globals
+        belong to, so the aggregator can refuse to fold it against any
+        other base (see :class:`CompressedUpdate`)."""
         from repro.federated.agg_engine import plan_for
 
         plan = plan_for(global_params)
@@ -352,7 +412,7 @@ class ClientCompressor:
         delta = p - g
         if self.spec.error_feedback and self._residual is not None:
             delta = delta + self._residual
-        update = compress(delta, self.spec)
+        update = compress(delta, self.spec, base_round=base_round)
         if self.spec.error_feedback:
             self._residual = delta - decompress(update)
         return update

@@ -527,3 +527,143 @@ def test_streaming_compressed_rejects_size_mismatch():
     cu = compress(np.zeros(16, np.float32), CompressionSpec("fp16"))
     with pytest.raises(ValueError, match="elem"):
         agg.add_compressed(cu, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# stale-base reuse, plan-cache bounds, structure validation (PR 8 fixes)
+# ---------------------------------------------------------------------------
+
+def test_stale_base_compressed_reuse_raises_then_rebases():
+    """Regression: _base_flat survives _reset(), so a flat-mode
+    aggregator reused for the next round silently folded that round's
+    compressed deltas against the PREVIOUS round's globals.  A tagged
+    update now fails loudly, and rebase() is the sanctioned base swap."""
+    from repro.federated.compression import CompressionSpec, compress
+
+    rng = np.random.default_rng(0)
+    base_a = {"w": jnp.asarray(rng.standard_normal(24), jnp.float32)}
+    base_b = {"w": jnp.asarray(rng.standard_normal(24), jnp.float32)}
+    update = {"w": jnp.asarray(rng.standard_normal(24), jnp.float32)}
+    plan = plan_for(base_a)
+
+    agg = AggregationEngine().streaming(base=base_a, base_round=0)
+    agg.add(update, 3.0)
+    agg.result()
+
+    # Round 1's delta, encoded against round 1's base and tagged with it.
+    delta = np.asarray(plan.flatten(update), np.float32) - np.asarray(
+        plan.flatten(base_b), np.float32
+    )
+    cu = compress(delta, CompressionSpec("fp16"), base_round=1)
+    with pytest.raises(ValueError, match="base round 1"):
+        agg.add_compressed(cu, 1.0)  # aggregator still anchored on round 0
+
+    agg.rebase(base_b, base_round=1)
+    assert agg.base_round == 1
+    agg.add_compressed(cu, 1.0)
+    # base_b + (update - base_b) == update, up to fp16 codec error
+    np.testing.assert_allclose(
+        np.asarray(agg.result()["w"]), np.asarray(update["w"]),
+        atol=1e-3, rtol=1e-3,
+    )
+
+
+def test_rebase_guards():
+    rng = np.random.default_rng(1)
+    base = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    tree_mode = StreamingAggregator()
+    with pytest.raises(ValueError, match="flat/delta"):
+        tree_mode.rebase(base)
+    agg = AggregationEngine().streaming(base=base)
+    agg.add({"w": jnp.ones(8, jnp.float32)}, 1.0)
+    with pytest.raises(ValueError, match="mid-fold"):
+        agg.rebase(base)
+    agg.result()
+    from repro.federated.agg_engine import StructureMismatchError
+
+    with pytest.raises(StructureMismatchError):
+        agg.rebase({"w": jnp.ones((2, 8), jnp.float32)})
+
+
+def test_streaming_base_round_requires_base():
+    with pytest.raises(ValueError, match="base"):
+        AggregationEngine().streaming(base_round=3)
+
+
+def test_untagged_compressed_update_folds_without_round_check():
+    """Wire compatibility: transport workers emit untagged updates; those
+    fold against whatever base the aggregator holds (legacy behavior)."""
+    from repro.federated.compression import CompressionSpec, compress
+
+    base = {"w": jnp.zeros(16, jnp.float32)}
+    agg = AggregationEngine().streaming(base=base, base_round=5)
+    cu = compress(np.ones(16, np.float32), CompressionSpec("fp16"))
+    agg.add_compressed(cu, 2.0)  # no raise
+    np.testing.assert_allclose(np.asarray(agg.result()["w"]), 1.0)
+
+
+def test_plan_cache_bounded_lru():
+    """Regression: the module-global plan cache grew without bound — one
+    entry per distinct structure, forever (a long-lived multi-tenant
+    server is a slow leak).  It is now a bounded LRU."""
+    from repro.federated.agg_engine import (
+        clear_plan_cache,
+        plan_cache_size,
+        set_plan_cache_limit,
+    )
+
+    clear_plan_cache()
+    try:
+        set_plan_cache_limit(8)
+        for i in range(40):
+            plan_for({"x": jnp.zeros((i + 1,), jnp.float32)})
+        assert plan_cache_size() <= 8
+        # LRU: the most recent structure is retained (cache hit)
+        before = plan_cache_size()
+        plan_for({"x": jnp.zeros((40,), jnp.float32)})
+        assert plan_cache_size() == before
+        with pytest.raises(ValueError):
+            set_plan_cache_limit(0)
+        clear_plan_cache()
+        assert plan_cache_size() == 0
+    finally:
+        set_plan_cache_limit(64)
+        clear_plan_cache()
+
+
+def test_tree_mode_structure_mismatch_raises_typed_error():
+    """Regression: tree mode pinned only the treedef, so a client whose
+    leaf SHAPES diverged (e.g. (3,) vs (1, 3)) was silently broadcast
+    into the accumulator, corrupting every later fold."""
+    from repro.federated.agg_engine import StructureMismatchError
+
+    agg = StreamingAggregator()
+    agg.add({"w": jnp.ones((3,), jnp.float32)}, 1.0, client_id="c-good")
+    with pytest.raises(StructureMismatchError) as ei:
+        agg.add({"w": jnp.ones((1, 3), jnp.float32)}, 1.0, client_id="c-bad")
+    assert ei.value.client_id == "c-bad"
+    assert "w" in str(ei.value) and "c-bad" in str(ei.value)
+    assert ei.value.path is not None
+
+
+def test_flat_mode_structure_mismatch_names_leaf():
+    from repro.federated.agg_engine import StructureMismatchError
+
+    base = {"a": jnp.zeros((4,), jnp.float32), "b": jnp.zeros((2, 2), jnp.float32)}
+    agg = AggregationEngine().streaming(base=base)
+    bad = {"a": jnp.ones((4,), jnp.float32), "b": jnp.ones((4,), jnp.float32)}
+    with pytest.raises(StructureMismatchError) as ei:
+        agg.add(bad, 1.0, client_id="s2")
+    assert "b" in str(ei.value)
+    # treedef divergence (missing key) is also typed, not a tree.map error
+    with pytest.raises(StructureMismatchError):
+        agg.add({"a": jnp.ones((4,), jnp.float32)}, 1.0)
+
+
+def test_structure_check_allows_mixed_dtypes():
+    """dtype divergence is NOT a structure mismatch: mixed-precision
+    clients fold through the fp32 cast by design."""
+    agg = StreamingAggregator()
+    agg.add({"w": jnp.ones((3,), jnp.float32)}, 1.0)
+    agg.add({"w": jnp.ones((3,), jnp.bfloat16)}, 1.0)
+    assert agg.n_clients == 2

@@ -714,3 +714,68 @@ def test_recover_server_without_any_checkpoint_keeps_params():
     server = FLServer([StubClient(r) for r in results], results[0].params)
     assert server._recover_server() == "none"
     assert_trees_close(server.params, results[0].params)
+
+
+# ---------------------------------------------------------------------------
+# compressed carry-over is materialized at park time (PR 8 fix)
+# ---------------------------------------------------------------------------
+
+def test_compressed_carry_is_materialized_dense_at_park():
+    """Regression: a CompressedUpdate that missed its round's deadline
+    was parked as-is, and the next round folded its quantized delta
+    against the NEW base — silently shifting the straggler's update by
+    (new_base - origin_base).  The engine now dequantizes at park time,
+    so the carried value is base-independent."""
+    from repro.federated.agg_engine import plan_for
+    from repro.federated.client import ClientResult
+    from repro.federated.compression import (
+        CompressedUpdate,
+        CompressionSpec,
+        compress,
+    )
+
+    rng = np.random.default_rng(0)
+    base0 = {"w": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+    base1 = {"w": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+    dense = {
+        cid: {"w": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+        for cid in ("c0", "c1")
+    }
+    plan = plan_for(base0)
+
+    def encode(params, base, round_idx):
+        delta = np.asarray(plan.flatten(params), np.float32) - np.asarray(
+            plan.flatten(base), np.float32
+        )
+        return compress(delta, CompressionSpec("fp16"), base_round=round_idx)
+
+    schedule = DeterministicSchedule({"c0": 1.0, "c1": 9.0})
+    engine = AsyncRoundEngine(deadline=FixedDeadline(t_round_s=2.0),
+                              carry_discount=0.5)
+
+    # Round 1: c1's compressed update misses the deadline and is parked.
+    r1_results = [
+        ClientResult("c0", encode(dense["c0"], base0, 1), 10, 0.0),
+        ClientResult("c1", encode(dense["c1"], base0, 1), 30, 0.0),
+    ]
+    report1 = engine.fold_round(1, r1_results, schedule, base_params=base0)
+    assert report1.carried_over == ["c1"]
+    (entry,) = engine.carry._entries
+    # the parked payload is DENSE (the bug parked the CompressedUpdate)
+    assert not isinstance(entry.params, CompressedUpdate)
+    np.testing.assert_allclose(
+        np.asarray(entry.params["w"]), np.asarray(dense["c1"]["w"]),
+        atol=1e-3, rtol=1e-3,
+    )
+
+    # Round 2: the carried update folds against base1 at half weight.
+    r2_results = [ClientResult("c0", encode(dense["c0"], base1, 2), 10, 0.0)]
+    report2 = engine.fold_round(
+        2, r2_results, InstantSchedule(), base_params=base1
+    )
+    assert report2.carried_in == ["c1"]
+    want = fedavg([dense["c0"]["w"], dense["c1"]["w"]], [10.0, 15.0])
+    np.testing.assert_allclose(
+        np.asarray(report2.params["w"]), np.asarray(want),
+        atol=2e-3, rtol=2e-3,
+    )

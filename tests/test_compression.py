@@ -466,3 +466,47 @@ def test_corrupt_frame_on_compressed_frame_still_recovers():
     assert pairing[("corrupt_frame", "c1", 1, "train")] == "recovered"
     assert len(live.rounds) == 2
     assert np.isfinite(np.asarray(live.final_params["w"])).all()
+
+
+def test_base_round_tag_survives_wire_roundtrip():
+    """PR 8: the optional base-round tag rides the msgpack frame ("br")
+    and deserializes back; untagged frames stay untagged (legacy)."""
+    import numpy as np
+
+    from repro.federated.compression import (
+        CompressionSpec,
+        compress,
+        deserialize_update,
+        serialize_update,
+    )
+
+    delta = np.linspace(-1, 1, 64).astype(np.float32)
+    for codec in ("int8", "fp16", "topk"):
+        tagged = compress(delta, CompressionSpec(codec), base_round=7)
+        assert tagged.base_round == 7
+        back = deserialize_update(serialize_update(tagged))
+        assert back.base_round == 7
+        untagged = compress(delta, CompressionSpec(codec))
+        assert untagged.base_round is None
+        assert deserialize_update(serialize_update(untagged)).base_round is None
+
+
+def test_bad_base_round_tag_rejected():
+    import numpy as np
+
+    from repro.federated.compression import (
+        CompressionSpec,
+        DeserializationError,
+        compress,
+        deserialize_update,
+        serialize_update,
+    )
+
+    cu = compress(np.ones(16, np.float32), CompressionSpec("fp16"), base_round=2)
+    frame = serialize_update(cu)
+    import msgpack
+
+    obj = msgpack.unpackb(frame, raw=False)
+    obj["br"] = "seven"
+    with pytest.raises(DeserializationError, match="base round"):
+        deserialize_update(msgpack.packb(obj, use_bin_type=True))
