@@ -1,17 +1,122 @@
 """Benchmark harness: one function per paper table/figure (+ kernels and
 the roofline table). Prints ``name,us_per_call,derived`` CSV on stdout;
-human-readable reports go to stderr."""
+human-readable reports go to stderr.
+
+``--check`` re-runs each grid-style benchmark on its quick grid and
+compares the fresh report against the committed ``BENCH_*.json``
+artifact at the repo root: boolean acceptance flags that were true when
+committed must still be true, and shared numeric keys must stay within
+a wide (5x) tolerance — quick grids are smaller than the committed full
+grids, so this only catches gross regressions, not noise.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
+from typing import Any, Callable, Dict, List
+
+# Fresh numbers may drift from the committed artifact by machine and by
+# quick-vs-full grid size; 5x flags order-of-magnitude breakage only.
+CHECK_TOLERANCE = 5.0
 
 
-def main() -> None:
+def _check_registry() -> Dict[str, Callable[[], Dict[str, Any]]]:
+    """Committed artifact -> fresh quick-grid report producer."""
+    from .aggregation_bench import run_grid as agg
+    from .async_round_bench import run_grid as async_round
+    from .chaos_bench import run_grid as chaos
+    from .compression_bench import run_grid as compression
+    from .control_plane_bench import run_grid as control
+    from .cost_bench import run_grid as cost
+    from .deadline_bench import run_grid as deadline
+    from .hierarchy_bench import run_grid as hierarchy
+    from .transport_bench import run_grid as transport
+
+    return {
+        "BENCH_agg.json": lambda: agg(quick=True),
+        "BENCH_async.json": lambda: async_round(quick=True),
+        "BENCH_chaos.json": lambda: chaos(quick=True),
+        "BENCH_compression.json": lambda: compression(quick=True),
+        "BENCH_control.json": lambda: control(quick=True),
+        "BENCH_cost.json": lambda: cost(quick=True),
+        "BENCH_deadline.json": lambda: deadline(quick=True),
+        "BENCH_hierarchy.json": lambda: hierarchy(quick=True),
+        "BENCH_transport.json": lambda: transport(quick=True),
+    }
+
+
+def _compare(committed: Any, fresh: Any, path: str, problems: List[str]) -> None:
+    """Walk shared keys; report acceptance-flag and order-of-magnitude
+    regressions. Lists of dicts (per-shape entries) are skipped — quick
+    and full grids sweep different shapes."""
+    if isinstance(committed, bool):
+        if committed and fresh is not True:
+            problems.append(f"{path}: was true when committed, now {fresh!r}")
+    elif isinstance(committed, (int, float)):
+        if not isinstance(fresh, (int, float)) or isinstance(fresh, bool):
+            problems.append(f"{path}: committed number, fresh {fresh!r}")
+        elif committed > 1e-9:
+            ratio = fresh / committed
+            if not (1.0 / CHECK_TOLERANCE <= ratio <= CHECK_TOLERANCE):
+                problems.append(
+                    f"{path}: {fresh:.6g} vs committed {committed:.6g} "
+                    f"(ratio {ratio:.2f} outside {CHECK_TOLERANCE}x)")
+    elif isinstance(committed, dict) and isinstance(fresh, dict):
+        for key in sorted(set(committed) & set(fresh)):
+            _compare(committed[key], fresh[key], f"{path}.{key}", problems)
+    elif isinstance(committed, list) and isinstance(fresh, list):
+        if (len(committed) == len(fresh)
+                and all(isinstance(v, (int, float)) for v in committed)):
+            for i, (c, f) in enumerate(zip(committed, fresh)):
+                _compare(c, f, f"{path}[{i}]", problems)
+
+
+def check(root: str) -> int:
+    registry = _check_registry()
+    n_checked = 0
+    failures: List[str] = []
+    for fname, produce in sorted(registry.items()):
+        artifact = os.path.join(root, fname)
+        if not os.path.exists(artifact):
+            print(f"[check] {fname}: no committed artifact, skipping",
+                  file=sys.stderr)
+            continue
+        with open(artifact) as f:
+            committed = json.load(f)
+        print(f"[check] {fname}: re-running quick grid...", file=sys.stderr)
+        try:
+            fresh = produce()
+        except Exception as e:  # noqa: BLE001 — report, keep checking
+            failures.append(f"{fname}: fresh quick run failed: {e!r}")
+            continue
+        problems: List[str] = []
+        _compare(committed, fresh, fname, problems)
+        n_checked += 1
+        if problems:
+            failures.extend(problems)
+            for p in problems:
+                print(f"[check] FAIL {p}", file=sys.stderr)
+        else:
+            print(f"[check] {fname}: ok", file=sys.stderr)
+    print(f"[check] {n_checked} artifacts checked, "
+          f"{len(failures)} problems", file=sys.stderr)
+    if failures:
+        for p in failures:
+            print(f"CHECK-FAIL,{p}")
+        return 1
+    print("CHECK-OK")
+    return 0
+
+
+def run_all() -> None:
     from .aggregation_bench import bench_aggregation
     from .async_round_bench import bench_async_round
     from .chaos_bench import bench_chaos
     from .compression_bench import bench_compression
     from .control_plane_bench import bench_control_plane
+    from .cost_bench import bench_cost_autopilot
     from .deadline_bench import bench_deadline_round
     from .hierarchy_bench import bench_hierarchy
     from .kernel_bench import bench_kernels
@@ -42,6 +147,7 @@ def main() -> None:
         bench_compression,          # compressed wire path: bytes + WAN round time
         bench_chaos,                # seeded fault soak: MTTR + rounds lost
         bench_hierarchy,            # regional partial-sum folds vs flat at 1k clients
+        bench_cost_autopilot,       # cost autopilot vs paper heuristic Pareto
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]
     print("name,us_per_call,derived")
@@ -52,6 +158,20 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — keep the harness going
             print(f"{bench.__name__},0,ERROR:{e!r}")
             print(f"[ERROR] {bench.__name__}: {e!r}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check", action="store_true",
+        help="compare fresh quick grids against committed BENCH_*.json")
+    ap.add_argument(
+        "--root", default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        help="directory holding the committed BENCH_*.json artifacts")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check(args.root))
+    run_all()
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ Usage:
       [--app til|shakespeare|femnist] [--rounds N] [--markets MODE] \
       [--k-r SECONDS] [--seed N] [--deadline SECONDS] [--async-rounds] \
       [--checkpoint-every N] [--limit N] [--json PATH]
+  PYTHONPATH=src python scripts/trace_dump.py --diff A.json B.json
 
 Examples:
   # the paper's spot-clients scenario with revocations, 10 rounds
@@ -21,6 +22,10 @@ Examples:
   # T_round partial rounds: watch DeadlineExpired / carry-over events
   PYTHONPATH=src python scripts/trace_dump.py --app shakespeare \
       --async-rounds --deadline 400
+
+  # structural diff of two JSON dumps (exit 1 when they diverge):
+  # event-type count deltas, per-round deltas, first divergence
+  PYTHONPATH=src python scripts/trace_dump.py --diff before.json after.json
 """
 from __future__ import annotations
 
@@ -67,6 +72,62 @@ def trace_to_json(trace: Iterable[Event]) -> List[dict]:
     return [{"event": type(e).__name__, **dataclasses.asdict(e)} for e in trace]
 
 
+def _signature(event: dict) -> tuple:
+    """The structural identity of one JSON-dumped event: its type and
+    round, ignoring timestamps (wall-clock drift is not a divergence)."""
+    return (event.get("event", "?"), event.get("round_idx"))
+
+
+def diff_traces(trace_a: List[dict], trace_b: List[dict],
+                label_a: str = "A", label_b: str = "B") -> bool:
+    """Print a structural diff of two JSON trace dumps; True if they
+    match (same event-type sequence per round, timestamps ignored)."""
+    from collections import Counter
+
+    counts_a = Counter(e.get("event", "?") for e in trace_a)
+    counts_b = Counter(e.get("event", "?") for e in trace_b)
+    print(f"event-type counts ({label_a}: {len(trace_a)} events, "
+          f"{label_b}: {len(trace_b)} events)")
+    for name in sorted(set(counts_a) | set(counts_b)):
+        ca, cb = counts_a[name], counts_b[name]
+        marker = "" if ca == cb else f"   <-- {cb - ca:+d}"
+        print(f"  {name:<22} {ca:>5} {cb:>5}{marker}")
+
+    rounds_a = Counter(e.get("round_idx") for e in trace_a)
+    rounds_b = Counter(e.get("round_idx") for e in trace_b)
+    changed = [r for r in sorted(set(rounds_a) | set(rounds_b),
+                                 key=lambda r: (r is None, r))
+               if rounds_a[r] != rounds_b[r]]
+    if changed:
+        print("per-round event-count deltas:")
+        for r in changed:
+            print(f"  round {r!s:<4} {rounds_a[r]:>5} -> {rounds_b[r]:>5}")
+    else:
+        print("per-round event counts: identical")
+
+    sig_a = [_signature(e) for e in trace_a]
+    sig_b = [_signature(e) for e in trace_b]
+    divergence = next((i for i, (sa, sb) in enumerate(zip(sig_a, sig_b))
+                       if sa != sb), None)
+    if divergence is None and len(sig_a) != len(sig_b):
+        divergence = min(len(sig_a), len(sig_b))
+    if divergence is None:
+        print("structural divergence: none (traces match)")
+        return True
+    print(f"first structural divergence at event #{divergence}:")
+    for label, trace in ((label_a, trace_a), (label_b, trace_b)):
+        if divergence < len(trace):
+            e = dict(trace[divergence])
+            name = e.pop("event", "?")
+            t = e.pop("time_s", None)
+            t_str = f"{t:.2f}s " if isinstance(t, (int, float)) else ""
+            print(f"  {label}: {t_str}{name} "
+                  f"{' '.join(f'{k}={v}' for k, v in e.items() if v not in ((), [], None, ''))}")
+        else:
+            print(f"  {label}: <trace ended>")
+    return False
+
+
 def main() -> None:
     from repro.core import (
         Experiment,
@@ -94,7 +155,22 @@ def main() -> None:
     ap.add_argument("--limit", type=int, default=None,
                     help="show only the first N events")
     ap.add_argument("--json", default=None, help="also dump the trace as JSON")
+    ap.add_argument("--diff", nargs=2, metavar=("A.json", "B.json"),
+                    default=None,
+                    help="structurally diff two JSON trace dumps instead of "
+                         "running a scenario; exit 1 when they diverge")
     args = ap.parse_args()
+
+    if args.diff is not None:
+        path_a, path_b = args.diff
+        with open(path_a) as f:
+            trace_a = json.load(f)
+        with open(path_b) as f:
+            trace_b = json.load(f)
+        identical = diff_traces(trace_a, trace_b,
+                                label_a=os.path.basename(path_a),
+                                label_b=os.path.basename(path_b))
+        sys.exit(0 if identical else 1)
 
     apps = {"til": til_application, "shakespeare": shakespeare_application,
             "femnist": femnist_application}

@@ -42,10 +42,23 @@ from .application_model import (
     til_application,
     til_application_aws,
 )
+from .autopilot import (
+    AutopilotSpec,
+    BudgetTracker,
+    BudgetedMapper,
+    CostAwareScheduler,
+    DeadlineController,
+    PriceTicker,
+)
 from .cloud_model import (
     CloudEnvironment,
+    PriceFeed,
+    PricePoint,
     Provider,
     Region,
+    SpotPriceTrace,
+    SyntheticSpotFeed,
+    TracePriceFeed,
     VMType,
     aws_gcp_environment,
     cloudlab_environment,
@@ -69,14 +82,17 @@ from .cost_model import (
     PlacementEvaluation,
     RoundPlan,
 )
-from .dynamic_scheduler import DynamicScheduler, ReplacementDecision
+from .dynamic_scheduler import BudgetSignal, DynamicScheduler, ReplacementDecision
 from .events import (
+    BudgetExceeded,
     CheckpointSaved,
     CostAccrued,
+    DeadlineAdjusted,
     DeadlineExpired,
     Event,
     EventBus,
     NullBus,
+    PriceUpdated,
     RecoveryCompleted,
     RevocationOccurred,
     RoundClosed,
@@ -86,7 +102,13 @@ from .events import (
     UpdateFolded,
     VMReplaced,
 )
-from .fault_tolerance import CheckpointPolicy, CheckpointRecord, FaultToleranceModule, RecoveryPlan
+from .fault_tolerance import (
+    CheckpointPolicy,
+    CheckpointRecord,
+    FaultToleranceModule,
+    RecoveryPlan,
+    RiskAwareCheckpointPolicy,
+)
 from .initial_mapping import InfeasibleMappingError, InitialMapping, MappingSolution
 from .pre_scheduling import (
     CallableProbe,
@@ -110,6 +132,11 @@ from .simulator import (
 __all__ = [
     "SERVER",
     "Assignment",
+    "AutopilotSpec",
+    "BudgetExceeded",
+    "BudgetSignal",
+    "BudgetTracker",
+    "BudgetedMapper",
     "CallableProbe",
     "CheckpointPolicy",
     "CheckpointRecord",
@@ -118,7 +145,10 @@ __all__ = [
     "CloudEnvironment",
     "ControlPlane",
     "CostAccrued",
+    "CostAwareScheduler",
     "CostModel",
+    "DeadlineAdjusted",
+    "DeadlineController",
     "DeadlineExpired",
     "DeadlineRoundPlan",
     "DynamicScheduler",
@@ -139,6 +169,10 @@ __all__ = [
     "NullBus",
     "Placement",
     "PlacementEvaluation",
+    "PriceFeed",
+    "PricePoint",
+    "PriceTicker",
+    "PriceUpdated",
     "PreScheduling",
     "PreSchedulerAPI",
     "PreSchedulingResult",
@@ -153,15 +187,19 @@ __all__ = [
     "RevocationModel",
     "RevocationOccurred",
     "RevocationSampler",
+    "RiskAwareCheckpointPolicy",
     "RoundClosed",
     "RoundDispatched",
     "RoundPlan",
     "SchedulerAPI",
     "SimulationConfig",
     "SimulationResult",
+    "SpotPriceTrace",
     "StragglerEscalated",
     "StragglerTracker",
+    "SyntheticSpotFeed",
     "TableProbe",
+    "TracePriceFeed",
     "UpdateArrived",
     "UpdateFolded",
     "VMReplaced",

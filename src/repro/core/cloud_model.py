@@ -6,10 +6,20 @@ GPU/vCPU capacity bounds, and per-VM fixed cost ($/s) for on-demand and
 spot markets.
 
 All monetary values are USD; all times are seconds unless noted.
+
+Spot prices need not be the static `VMType.cost_spot_hour` constants:
+the :class:`PriceFeed` family models time-varying spot markets — a
+seeded synthetic walk (:class:`SyntheticSpotFeed`) or a replayable
+recorded trace (:class:`SpotPriceTrace` / :class:`TracePriceFeed`) —
+which the cost autopilot (`repro.core.autopilot`) threads through the
+cost model and the billing ledger.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+import random
 from typing import Dict, Iterable, List, Optional, Tuple
 
 
@@ -251,3 +261,210 @@ def aws_gcp_environment() -> CloudEnvironment:
         ("gcp_us_west1", "gcp_us_west1"): 1.000,
     }
     return env
+
+
+# ---------------------------------------------------------------------------
+# Time-varying spot prices: feeds and replayable traces.
+#
+# The paper treats cost_{jkl} as a constant; real spot markets move.  A
+# PriceFeed answers "what does this VM's spot market charge at time t"
+# and "what does occupying it over [t0, t1] cost" — the cost autopilot
+# (repro.core.autopilot) wires one into the CostModel and the
+# simulator's billing ledger.  On-demand prices stay fixed constants on
+# every feed (that is what on-demand means).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PricePoint:
+    """One observed spot quote: from ``time_s`` on, ``vm_id`` costs
+    ``price_per_hour`` $/h (piecewise-constant until the next point)."""
+
+    time_s: float
+    vm_id: str
+    price_per_hour: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotPriceTrace:
+    """A replayable spot-price history: per-VM piecewise-constant steps.
+
+    The JSON form (`to_json`/`from_json`) is the interchange format —
+    a synthetic walk exported with `SyntheticSpotFeed.trace()` replays
+    bit-identically through a :class:`TracePriceFeed`."""
+
+    points: Tuple[PricePoint, ...]
+
+    def __post_init__(self) -> None:
+        by_vm: Dict[str, float] = {}
+        for p in self.points:
+            if p.price_per_hour <= 0.0:
+                raise ValueError(f"non-positive price for {p.vm_id}: {p.price_per_hour}")
+            if p.time_s < by_vm.get(p.vm_id, 0.0):
+                raise ValueError(f"trace points for {p.vm_id} not time-sorted")
+            by_vm[p.vm_id] = p.time_s
+
+    def for_vm(self, vm_id: str) -> List[PricePoint]:
+        return [p for p in self.points if p.vm_id == vm_id]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "points": [dataclasses.asdict(p) for p in self.points]
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SpotPriceTrace":
+        data = json.loads(text)
+        return cls(points=tuple(
+            PricePoint(float(p["time_s"]), str(p["vm_id"]),
+                       float(p["price_per_hour"]))
+            for p in data["points"]
+        ))
+
+
+class PriceFeed:
+    """Static feed: spot markets sit at the listed `VMType.cost_spot_hour`.
+
+    Subclasses override :meth:`spot_price_per_hour` (and, when the
+    piecewise structure allows a cheaper integral, :meth:`cost_between`).
+    All feeds are deterministic and random-access in time: querying
+    t=900 then t=300 returns the same prices as querying in order."""
+
+    def spot_price_per_hour(self, vm: VMType, now_s: float) -> float:
+        return vm.cost_spot_hour
+
+    def price_per_second(self, vm: VMType, market: str, now_s: float) -> float:
+        """Time-varying cost_{jkl}: $/s for ``vm`` on ``market`` at ``now_s``."""
+        if market == "on_demand":
+            return vm.cost_on_demand_hour / 3600.0
+        if market == "spot":
+            return self.spot_price_per_hour(vm, now_s) / 3600.0
+        raise ValueError(f"unknown market {market!r}")
+
+    def cost_between(
+        self, vm: VMType, market: str, t0: float, t1: float
+    ) -> float:
+        """$ charged for occupying ``vm`` over [t0, t1] (piecewise exact)."""
+        if t1 <= t0:
+            return 0.0
+        if market == "on_demand":
+            return (vm.cost_on_demand_hour / 3600.0) * (t1 - t0)
+        return self._spot_cost_between(vm, t0, t1)
+
+    def _spot_cost_between(self, vm: VMType, t0: float, t1: float) -> float:
+        return (self.spot_price_per_hour(vm, t0) / 3600.0) * (t1 - t0)
+
+
+class SyntheticSpotFeed(PriceFeed):
+    """Seeded mean-reverting spot-price walk around each VM's listed price.
+
+    Each VM's market moves independently on ``step_s`` ticks: the
+    log-multiplier follows an AR(1) walk (``l' = (1 - reversion) * l +
+    sigma * N(0,1)``) clipped to ``[floor_mult, cap_mult]`` times the
+    listed `cost_spot_hour`.  Per-VM streams are seeded by
+    ``(seed, vm_id)`` and lazily extended, so prices are deterministic
+    and independent of query order — two feeds with the same seed agree
+    at every (vm, t) no matter who asked what first."""
+
+    def __init__(
+        self,
+        seed: int = 0,
+        step_s: float = 300.0,
+        sigma: float = 0.08,
+        reversion: float = 0.15,
+        floor_mult: float = 0.4,
+        cap_mult: float = 2.5,
+    ) -> None:
+        if step_s <= 0.0:
+            raise ValueError("step_s must be positive")
+        if sigma < 0.0:
+            raise ValueError("sigma must be >= 0")
+        if not 0.0 < reversion <= 1.0:
+            raise ValueError("reversion must be in (0, 1]")
+        if not 0.0 < floor_mult <= 1.0 <= cap_mult:
+            raise ValueError("need floor_mult in (0,1] and cap_mult >= 1")
+        self.seed = seed
+        self.step_s = float(step_s)
+        self.sigma = float(sigma)
+        self.reversion = float(reversion)
+        self.floor_mult = float(floor_mult)
+        self.cap_mult = float(cap_mult)
+        self._walks: Dict[str, List[float]] = {}   # vm_id -> multiplier per tick
+        self._rngs: Dict[str, random.Random] = {}
+        self._logs: Dict[str, float] = {}          # last log-multiplier per vm
+
+    def _multiplier(self, vm_id: str, tick: int) -> float:
+        walk = self._walks.setdefault(vm_id, [1.0])
+        if vm_id not in self._rngs:
+            self._rngs[vm_id] = random.Random(f"{self.seed}:{vm_id}")
+            self._logs[vm_id] = 0.0
+        rng = self._rngs[vm_id]
+        while len(walk) <= tick:
+            log_m = (1.0 - self.reversion) * self._logs[vm_id] + self.sigma * rng.gauss(0.0, 1.0)
+            self._logs[vm_id] = log_m
+            walk.append(min(self.cap_mult, max(self.floor_mult, math.exp(log_m))))
+        return walk[tick]
+
+    def spot_price_per_hour(self, vm: VMType, now_s: float) -> float:
+        tick = max(0, int(now_s // self.step_s))
+        return vm.cost_spot_hour * self._multiplier(vm.vm_id, tick)
+
+    def _spot_cost_between(self, vm: VMType, t0: float, t1: float) -> float:
+        # Piecewise-constant integral over the walk's ticks.
+        total = 0.0
+        t = t0
+        while t < t1:
+            tick_end = (int(t // self.step_s) + 1) * self.step_s
+            seg_end = min(t1, tick_end)
+            total += (self.spot_price_per_hour(vm, t) / 3600.0) * (seg_end - t)
+            t = seg_end
+        return total
+
+    def trace(self, vms: Iterable[VMType], until_s: float) -> SpotPriceTrace:
+        """Export the walk over [0, until_s] as a replayable trace."""
+        points: List[PricePoint] = []
+        for vm in vms:
+            last: Optional[float] = None
+            n_ticks = int(until_s // self.step_s) + 1
+            for tick in range(n_ticks):
+                price = vm.cost_spot_hour * self._multiplier(vm.vm_id, tick)
+                if last is None or price != last:
+                    points.append(PricePoint(tick * self.step_s, vm.vm_id, price))
+                    last = price
+        points.sort(key=lambda p: (p.time_s, p.vm_id))
+        return SpotPriceTrace(points=tuple(points))
+
+
+class TracePriceFeed(PriceFeed):
+    """Replay a recorded :class:`SpotPriceTrace`.
+
+    A VM with no points in the trace stays at its listed spot price;
+    before a VM's first point, its first quote applies (the trace is a
+    window into an always-trading market, not its opening)."""
+
+    def __init__(self, trace: SpotPriceTrace) -> None:
+        self.trace = trace
+        self._by_vm: Dict[str, List[PricePoint]] = {}
+        for p in trace.points:
+            self._by_vm.setdefault(p.vm_id, []).append(p)
+
+    def spot_price_per_hour(self, vm: VMType, now_s: float) -> float:
+        points = self._by_vm.get(vm.vm_id)
+        if not points:
+            return vm.cost_spot_hour
+        price = points[0].price_per_hour
+        for p in points:
+            if p.time_s > now_s:
+                break
+            price = p.price_per_hour
+        return price
+
+    def _spot_cost_between(self, vm: VMType, t0: float, t1: float) -> float:
+        points = self._by_vm.get(vm.vm_id)
+        if not points:
+            return (vm.cost_spot_hour / 3600.0) * (t1 - t0)
+        # Breakpoints inside (t0, t1) split the integral.
+        cuts = [t0] + [p.time_s for p in points if t0 < p.time_s < t1] + [t1]
+        total = 0.0
+        for a, b in zip(cuts, cuts[1:]):
+            total += (self.spot_price_per_hour(vm, a) / 3600.0) * (b - a)
+        return total

@@ -77,7 +77,8 @@ from .pre_scheduling import PreSchedulingResult
 
 if TYPE_CHECKING:  # concrete types only needed for static conformance
     from .application_model import FLApplication
-    from .cloud_model import CloudEnvironment
+    from .autopilot import AutopilotSpec
+    from .cloud_model import CloudEnvironment, PriceFeed
     from .dynamic_scheduler import DynamicScheduler
     from .fault_tolerance import FaultToleranceModule
     from .initial_mapping import InitialMapping
@@ -575,6 +576,7 @@ class Experiment:
         self._chaos: Optional[Any] = None
         self._compression: Optional[Any] = None
         self._hierarchy: Optional[Dict[str, Any]] = None
+        self._autopilot: Optional["AutopilotSpec"] = None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -592,6 +594,7 @@ class Experiment:
         exp._chaos = self._chaos
         exp._compression = self._compression
         exp._hierarchy = None if self._hierarchy is None else dict(self._hierarchy)
+        exp._autopilot = self._autopilot
         for key, value in changes.items():
             setattr(exp, key, value)
         return exp
@@ -731,6 +734,58 @@ class Experiment:
         exp._min_clients = min_clients
         exp._carry_discount = float(carry_discount)
         return exp
+
+    def autopilot(
+        self,
+        budget: Optional[float] = None,
+        *,
+        price_feed: Optional["PriceFeed"] = None,
+        adaptive_deadline: bool = False,
+        risk_checkpointing: bool = False,
+        **knobs: Any,
+    ) -> "Experiment":
+        """Cost autopilot (``repro.core.autopilot``): close the loop on $.
+
+        Four composable features, validated together at chain time:
+
+        * ``budget=`` — a $ ceiling for the run.  The Initial Mapping
+          picks per-task markets by revocation-adjusted expected cost
+          under it (`BudgetedMapper`), §4.4 replacements rank (vm,
+          market) pairs with the accrued spend tilting Eq. 3 toward
+          cost (`CostAwareScheduler`), and a `BudgetTracker` on the bus
+          publishes ``BudgetExceeded`` when the ledger crosses.
+        * ``price_feed=`` — a :class:`~repro.core.cloud_model.PriceFeed`
+          (e.g. `SyntheticSpotFeed`, or `TracePriceFeed` replaying a
+          dumped `SpotPriceTrace`) makes spot quotes move: billing
+          integrates the walk, and ``PriceUpdated`` ticks land on the
+          bus.  Simulator target only (the live engine bills nothing).
+        * ``adaptive_deadline=True`` — a `DeadlineController` retunes
+          T_round online from arrival quantiles, carry-over pressure,
+          and $/round, emitting ``DeadlineAdjusted``.  Works on both
+          targets: the chain's float deadline (if any) seeds the
+          controller, which otherwise bootstraps from the first round's
+          arrivals.
+        * ``risk_checkpointing=True`` — the chain's checkpoint policy
+          becomes a `RiskAwareCheckpointPolicy`: its interval is the
+          calm baseline, scaled down as observed revocations cluster or
+          spot quotes run hot.  Simulator target only.
+
+        Extra ``knobs`` are forwarded to
+        :class:`~repro.core.autopilot.AutopilotSpec` (controller gains,
+        clamps, checkpoint cadence floor, ``spot_fallback_after``).
+        Composes with :meth:`revocations` chaos on the simulator — the
+        autopilot *reacts* to the same Poisson process the fault
+        injection drives."""
+        from .autopilot import AutopilotSpec
+
+        spec = AutopilotSpec(
+            budget_usd=None if budget is None else float(budget),
+            price_feed=price_feed,
+            adaptive_deadline=bool(adaptive_deadline),
+            risk_checkpointing=bool(risk_checkpointing),
+            **knobs,
+        )
+        return self._clone(_autopilot=spec)
 
     def hierarchy(
         self,
@@ -1000,6 +1055,8 @@ class Experiment:
         if self._deadline is not None:
             fields["round_deadline"] = self._sim_deadline()
             fields["deadline_min_clients"] = self._resolved_min_clients()
+        if self._autopilot is not None:
+            fields["autopilot"] = self._autopilot
         config = SimulationConfig(**fields)
         config.validate(self._app)
         return config
@@ -1049,6 +1106,53 @@ class Experiment:
                 "target (.build()/.simulate()); the live engine takes the "
                 "equivalent configuration as serve(...) keyword arguments"
             )
+        if self._autopilot is not None:
+            ap = self._autopilot
+            if ap.price_feed is not None or ap.risk_checkpointing:
+                raise ValueError(
+                    "autopilot price feeds and risk-aware checkpoint "
+                    "cadence are simulator-target concepts (VM billing and "
+                    "CheckpointPolicy live there); the serve() targets "
+                    "honor budget= and adaptive_deadline=True"
+                )
+            ap_bus = server_kwargs.setdefault("bus", EventBus())
+            if ap.budget_usd is not None:
+                from .autopilot import BudgetTracker
+
+                # The bus keeps the tracker alive via its subscription;
+                # it turns any CostAccrued the run publishes into
+                # BudgetExceeded when the ledger crosses.
+                BudgetTracker(ap.budget_usd).attach(ap_bus)
+            if ap.adaptive_deadline:
+                if "round_deadline" in server_kwargs:
+                    raise ValueError(
+                        "adaptive_deadline and an explicit round_deadline= "
+                        "kwarg both claim T_round — drop one"
+                    )
+                if self._deadline is not None and not isinstance(
+                    self._deadline, (int, float)
+                ):
+                    raise ValueError(
+                        "adaptive_deadline replaces the chain's deadline "
+                        "policy/callable: seed it with a float "
+                        "async_rounds(deadline=<seconds>), or pass none to "
+                        "bootstrap from the first round's arrivals"
+                    )
+                from repro.federated.async_server import CallableDeadline
+
+                controller = ap.build_controller(
+                    initial_t_round_s=(
+                        float(self._deadline)
+                        if isinstance(self._deadline, (int, float))
+                        else None
+                    ),
+                    round_cost_allowance_usd=None,
+                )
+                controller.attach(ap_bus)
+                server_kwargs["round_deadline"] = CallableDeadline(
+                    fn=controller.propose,
+                    min_clients=self._resolved_min_clients(),
+                )
         # Chain-derived engine settings; an explicit serve(...) kwarg wins.
         server_kwargs.setdefault("round_deadline", self._live_deadline())
         server_kwargs.setdefault("carry_discount", self._carry_discount)

@@ -10,7 +10,7 @@ import dataclasses
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
 from .application_model import FLApplication, MessageSizes
-from .cloud_model import CloudEnvironment, VMType
+from .cloud_model import CloudEnvironment, PriceFeed, VMType
 
 SERVER = "s"
 
@@ -74,6 +74,7 @@ class CostModel:
         app: FLApplication,
         alpha: float = 0.5,
         aggreg_time_fn: Optional[Callable[[str], float]] = None,
+        price_feed: Optional[PriceFeed] = None,
     ) -> None:
         if not 0.0 <= alpha <= 1.0:
             raise ValueError("alpha must be in [0, 1]")
@@ -84,8 +85,32 @@ class CostModel:
         # aggregation-engine bandwidth (repro.federated.agg_engine
         # .make_measured_aggreg_fn) instead of the static aggreg_bl.
         self.aggreg_time_fn = aggreg_time_fn
+        # Optional time-varying spot market (repro.core.cloud_model
+        # PriceFeed); None keeps the paper's fixed cost_{jkl} constants.
+        self.price_feed = price_feed
         self._t_max: Optional[float] = None
         self._cost_max: Optional[float] = None
+
+    # -- time-varying prices -------------------------------------------------
+    def price_per_second(
+        self, vm_id: str, market: str, now_s: float = 0.0
+    ) -> float:
+        """cost_{jkl} at ``now_s``: feed-quoted for spot markets when a
+        `PriceFeed` is configured, else the static listed rate."""
+        vm = self.env.vm_types[vm_id]
+        if self.price_feed is not None:
+            return self.price_feed.price_per_second(vm, market, now_s)
+        return vm.cost_per_second(market)
+
+    def vm_cost_between(
+        self, vm_id: str, market: str, t0: float, t1: float
+    ) -> float:
+        """$ for occupying ``vm_id`` over [t0, t1] — the billing-ledger
+        primitive: piecewise-exact under a feed, rate x span without."""
+        vm = self.env.vm_types[vm_id]
+        if self.price_feed is not None:
+            return self.price_feed.cost_between(vm, market, t0, t1)
+        return vm.cost_per_second(market) * max(0.0, t1 - t0)
 
     # -- primitive terms ----------------------------------------------------
     def t_exec(self, client_id: str, vm_id: str) -> float:

@@ -12,14 +12,32 @@ in for the faulty task, and pick the candidate minimizing the same
 normalized objective as the Initial Mapping (Algorithm 3):
 
     value = alpha * cost/cost_max + (1 - alpha) * makespan/T_max
+
+With the cost autopilot attached (`repro.core.autopilot`), the scheduler
+becomes market-aware: replacement candidates are ranked as (vm, market)
+pairs at current feed prices, accrued-budget pressure tilts the
+objective toward cost (alpha_eff -> 1 as the budget drains), and a task
+whose cooldown history shows repeated spot revocations falls back to
+on-demand replacements until the history decays.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set
+from typing import Dict, Iterable, List, Mapping, Optional, Protocol, Set, Tuple
 
+from .cloud_model import PriceFeed
 from .cost_model import SERVER, Assignment, CostModel, Placement
+
+
+class BudgetSignal(Protocol):
+    """Accrued-budget state a cost-aware scheduler reads (implemented by
+    `repro.core.autopilot.BudgetTracker`; a Protocol here so the core
+    scheduler does not import the autopilot)."""
+
+    def pressure(self) -> float:
+        """Budget-drain pressure in [0, 1]: 0 = untouched, 1 = exhausted."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,7 +54,15 @@ class ReplacementDecision:
 class DynamicScheduler:
     """Greedy replacement-instance selection."""
 
-    def __init__(self, cost_model: CostModel, revoked_cooldown_s: float = 3600.0) -> None:
+    def __init__(
+        self,
+        cost_model: CostModel,
+        revoked_cooldown_s: float = 3600.0,
+        price_feed: Optional[PriceFeed] = None,
+        spot_fallback_after: int = 2,
+    ) -> None:
+        if spot_fallback_after < 1:
+            raise ValueError("spot_fallback_after must be >= 1")
         self.cost_model = cost_model
         self.env = cost_model.env
         self.app = cost_model.app
@@ -47,6 +73,39 @@ class DynamicScheduler:
         # long run cannot drain the pool into ever-slower instances.
         self.revoked_cooldown_s = revoked_cooldown_s
         self._revoked_at: Dict[str, Dict[str, float]] = {}
+        # Cost-autopilot hooks.  With either set, select_instance ranks
+        # (vm, market) pairs instead of keeping the faulty task's market
+        # fixed; the default (both None) preserves the paper's behavior
+        # — and existing traces — exactly.
+        self.price_feed = price_feed
+        self.budget: Optional[BudgetSignal] = None
+        # A task revoked >= spot_fallback_after times on spot inside the
+        # cooldown window stops being offered spot replacements until the
+        # history decays (graceful fall-back to on-demand).
+        self.spot_fallback_after = spot_fallback_after
+        self._spot_revoked_at: Dict[str, List[float]] = {}
+
+    # -- cost-autopilot state ------------------------------------------------
+    @property
+    def market_aware(self) -> bool:
+        """True when autopilot hooks widen ranking to (vm, market) pairs."""
+        return self.price_feed is not None or self.budget is not None
+
+    def spot_revocations_in_window(self, task: str, now_s: float) -> int:
+        """Spot revocations of ``task`` still inside the cooldown window."""
+        return sum(
+            1
+            for t in self._spot_revoked_at.get(task, [])
+            if now_s - t < self.revoked_cooldown_s
+        )
+
+    def _effective_alpha(self) -> float:
+        """Eq.-3 alpha tilted toward cost as the budget drains."""
+        alpha = self.cost_model.alpha
+        if self.budget is None:
+            return alpha
+        pressure = min(1.0, max(0.0, self.budget.pressure()))
+        return alpha + pressure * (1.0 - alpha)
 
     def candidate_set(self, task: str, now_s: float = 0.0) -> Set[str]:
         """I_t at time now_s: all VM types minus those inside their cooldown.
@@ -111,33 +170,42 @@ class DynamicScheduler:
         candidate_vm: str,
         makespan_s: float,
         current_map: Mapping[str, Assignment],
+        market: Optional[str] = None,
+        now_s: float = 0.0,
     ) -> float:
+        """Algorithm-2 round cost with ``candidate_vm`` standing in.
+
+        ``market`` overrides the replacement's market (None keeps the
+        faulty task's current one); with a `PriceFeed` on the cost model
+        every VM is priced at its ``now_s`` quote instead of the static
+        constant — without one this is byte-identical to the paper's
+        fixed-price accounting."""
         cm = self.cost_model
         env = self.env
         total = 0.0
         if faulty_task == SERVER:
             new_server = env.vm_types[candidate_vm]
-            market = current_map[SERVER].market
-            total += new_server.cost_per_second(market) * makespan_s
+            new_market = market if market is not None else current_map[SERVER].market
+            total += cm.price_per_second(candidate_vm, new_market, now_s) * makespan_s
             for c in self.app.clients:
                 a = current_map[c.client_id]
                 cvm = env.vm_types[a.vm_id]
-                total += cvm.cost_per_second(a.market) * makespan_s
+                total += cm.price_per_second(a.vm_id, a.market, now_s) * makespan_s
                 total += cm.comm_cost(cvm.provider, new_server.provider)
             return total
         server_a = current_map[SERVER]
         svm = env.vm_types[server_a.vm_id]
-        total += svm.cost_per_second(server_a.market) * makespan_s
+        total += cm.price_per_second(server_a.vm_id, server_a.market, now_s) * makespan_s
         new_cvm = env.vm_types[candidate_vm]
-        market = current_map[faulty_task].market
-        total += new_cvm.cost_per_second(market) * makespan_s
+        new_market = market if market is not None else current_map[faulty_task].market
+        total += cm.price_per_second(candidate_vm, new_market, now_s) * makespan_s
         total += cm.comm_cost(new_cvm.provider, svm.provider)
         for c in self.app.clients:
             if c.client_id == faulty_task:
                 continue
             a = current_map[c.client_id]
             cvm = env.vm_types[a.vm_id]
-            total += cvm.cost_per_second(a.market) * makespan_s
+            total += cm.price_per_second(a.vm_id, a.market, now_s) * makespan_s
             total += cm.comm_cost(cvm.provider, svm.provider)
         return total
 
@@ -158,10 +226,20 @@ class DynamicScheduler:
         the ban decays after `revoked_cooldown_s`. CloudLab experiments
         (§5.6.1, Table 6) set it False so the same type may be re-selected
         right away.
+
+        Without autopilot hooks the replacement keeps the faulty task's
+        market (the paper's rule).  With a `PriceFeed` or a bound
+        `BudgetSignal` the ranking widens to (vm, market) pairs priced
+        at ``now_s``, the objective's alpha is tilted toward cost by the
+        accrued-budget pressure, and a task with >= `spot_fallback_after`
+        spot revocations inside the cooldown window is only offered
+        on-demand replacements until that history decays.
         """
         cm = self.cost_model
         if remove_revoked:
             self._revoked_at.setdefault(faulty_task, {})[revoked_vm] = now_s
+            if current_map[faulty_task].market == "spot":
+                self._spot_revoked_at.setdefault(faulty_task, []).append(now_s)
         if candidate_override is not None:
             candidates: Set[str] = set(candidate_override)
             candidates.discard(revoked_vm)
@@ -178,28 +256,44 @@ class DynamicScheduler:
         if not candidates:
             raise RuntimeError(f"no candidate instances left for task {faulty_task!r}")
 
-        market = current_map[faulty_task].market
+        current_market = current_map[faulty_task].market
+        if not self.market_aware:
+            markets: Tuple[str, ...] = (current_market,)
+        elif (
+            self.spot_revocations_in_window(faulty_task, now_s)
+            >= self.spot_fallback_after
+        ):
+            markets = ("on_demand",)
+        else:
+            markets = ("on_demand", "spot")
+        alpha = self._effective_alpha()
         best_vm: Optional[str] = None
+        best_market = current_market
         best_value = math.inf
         best_ms = math.inf
         best_cost = math.inf
         for vm_id in sorted(candidates):
             ms = self.recompute_makespan(faulty_task, vm_id, current_map)
-            cost = self.recompute_cost(faulty_task, vm_id, ms, current_map)
-            value = (
-                cm.alpha * (cost / cm.cost_max())
-                + (1.0 - cm.alpha) * (ms / cm.t_max())
-            )
-            if value < best_value:
-                best_value = value
-                best_vm = vm_id
-                best_ms = ms
-                best_cost = cost
+            for market in markets:
+                cost = self.recompute_cost(
+                    faulty_task, vm_id, ms, current_map,
+                    market=market, now_s=now_s,
+                )
+                value = (
+                    alpha * (cost / cm.cost_max())
+                    + (1.0 - alpha) * (ms / cm.t_max())
+                )
+                if value < best_value:
+                    best_value = value
+                    best_vm = vm_id
+                    best_market = market
+                    best_ms = ms
+                    best_cost = cost
         assert best_vm is not None
         return ReplacementDecision(
             task=faulty_task,
             new_vm=best_vm,
-            market=market,
+            market=best_market,
             expected_makespan_s=best_ms,
             expected_cost=best_cost,
             objective_value=best_value,

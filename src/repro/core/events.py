@@ -31,8 +31,10 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple, Type, TypeVar
 
 __all__ = [
+    "BudgetExceeded",
     "CheckpointSaved",
     "CostAccrued",
+    "DeadlineAdjusted",
     "DeadlineExpired",
     "Event",
     "EventBus",
@@ -40,6 +42,7 @@ __all__ = [
     "NULL_BUS",
     "NullBus",
     "PartialFolded",
+    "PriceUpdated",
     "RecoveryCompleted",
     "RegionClosed",
     "RevocationOccurred",
@@ -253,6 +256,57 @@ class CostAccrued(Event):
     kind: str  # "comm" | "vm" | "resend"
     amount: float
     round_idx: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceUpdated(Event):
+    """A spot market moved: one VM type's $/hour changed.
+
+    Published by the cost autopilot (`repro.core.autopilot`) at round
+    boundaries for VMs the run has allocated on the spot market —
+    ``price_per_hour`` is the feed's current quote, ``prev_per_hour``
+    the last published one, and ``listed_per_hour`` the static
+    `VMType.cost_spot_hour` the walk is anchored to.  The risk-aware
+    checkpoint policy and the deadline controller subscribe to this."""
+
+    vm_id: str
+    price_per_hour: float
+    prev_per_hour: float
+    listed_per_hour: float
+    round_idx: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetExceeded(Event):
+    """The run's accrued cost crossed its $ budget.
+
+    Published once per run by the autopilot's `BudgetTracker` (on the
+    `CostAccrued` stream) or by the `BudgetedMapper` when even the
+    cheapest feasible placement projects past the budget — the run
+    continues (cross-silo training is not abandoned mid-flight), but
+    every cost-aware policy sees full budget pressure from then on."""
+
+    spent: float
+    budget: float
+    source: str  # "tracker" | "mapper"
+    round_idx: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineAdjusted(Event):
+    """The adaptive deadline controller retuned T_round.
+
+    ``old_t_round_s``/``new_t_round_s`` are round-relative seconds (the
+    value handed to the deadline policy, not an absolute clock time);
+    ``reason`` names the dominant pressure behind the move:
+    ``"arrivals"`` (tracking the observed arrival quantile),
+    ``"carry"`` (late silos piling up — extend), or ``"cost"``
+    ($/round or spot prices running hot — tighten)."""
+
+    round_idx: int
+    old_t_round_s: float
+    new_t_round_s: float
+    reason: str
 
 
 # ---------------------------------------------------------------------------

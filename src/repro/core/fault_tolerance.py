@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from .cost_model import SERVER, Assignment, Placement
 from .dynamic_scheduler import DynamicScheduler, ReplacementDecision
+from .events import EventBus, PriceUpdated, RevocationOccurred
 
 
 class TaskState(enum.Enum):
@@ -61,6 +62,123 @@ class CheckpointPolicy:
         if checkpoint_bytes <= 0:
             return 0.0
         return checkpoint_bytes / self.transfer_bandwidth_Bps
+
+
+@dataclasses.dataclass
+class RiskAwareCheckpointPolicy(CheckpointPolicy):
+    """Checkpoint cadence scaled by observed revocation risk (autopilot
+    part 3).
+
+    The base class checkpoints every fixed ``server_interval_rounds``;
+    here that value is the *calm-market baseline* and the live interval
+    adapts between ``min_interval_rounds`` and the baseline:
+
+      * **revocation rate** — an EWMA of inter-revocation gaps (in
+        rounds) pulls the interval down to about half the expected gap,
+        so at most ~half an interval of work is at risk between copies;
+      * **spot prices** — an EWMA of quote/listed ratios from
+        `PriceUpdated` events shortens the interval further when the
+        markets the run sits on trade hot (historically correlated with
+        reclaim pressure), by up to ``1/(1 + price_sensitivity)``.
+
+    Call :meth:`attach` to subscribe the observers to a bus, or feed
+    :meth:`observe_revocation` / :meth:`observe_price` directly.  The
+    cadence decision itself stays in ``server_checkpoints_at`` — the
+    `FaultToleranceModule` does not change."""
+
+    min_interval_rounds: int = 1
+    smoothing: float = 0.5          # EWMA weight of the newest observation
+    price_sensitivity: float = 1.0  # interval shrink per unit of price heat
+    # Runtime state (observed signals), not part of the policy identity.
+    _mean_gap_rounds: Optional[float] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _last_revocation_round: Optional[int] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _price_ratio: float = dataclasses.field(
+        default=1.0, repr=False, compare=False
+    )
+    _last_ckpt_round: int = dataclasses.field(
+        default=0, repr=False, compare=False
+    )
+
+    def __post_init__(self) -> None:
+        if self.server_interval_rounds < 1:
+            raise ValueError(
+                "RiskAwareCheckpointPolicy needs a baseline interval >= 1 "
+                "(server_interval_rounds is the calm-market cadence)"
+            )
+        if not 1 <= self.min_interval_rounds <= self.server_interval_rounds:
+            raise ValueError(
+                "need 1 <= min_interval_rounds <= server_interval_rounds"
+            )
+        if not 0.0 < self.smoothing <= 1.0:
+            raise ValueError("smoothing must be in (0, 1]")
+        if self.price_sensitivity < 0.0:
+            raise ValueError("price_sensitivity must be >= 0")
+
+    # -- observed signals ---------------------------------------------------
+    def observe_revocation(self, round_idx: int) -> None:
+        """Fold one revocation into the inter-revocation-gap EWMA."""
+        if self._last_revocation_round is not None:
+            gap = float(max(1, round_idx - self._last_revocation_round))
+            if self._mean_gap_rounds is None:
+                self._mean_gap_rounds = gap
+            else:
+                self._mean_gap_rounds += self.smoothing * (gap - self._mean_gap_rounds)
+        else:
+            # First observation: rounds survived so far is the only gap
+            # evidence there is.
+            self._mean_gap_rounds = float(max(1, round_idx))
+        self._last_revocation_round = round_idx
+
+    def observe_price(self, quote_to_listed_ratio: float) -> None:
+        """Fold one spot quote/listed ratio into the price-heat EWMA."""
+        if quote_to_listed_ratio > 0.0:
+            self._price_ratio += self.smoothing * (
+                quote_to_listed_ratio - self._price_ratio
+            )
+
+    def attach(self, bus: EventBus) -> Callable[[], None]:
+        """Subscribe the observers to ``bus``; returns an unsubscribe."""
+        def on_revocation(event: object) -> None:
+            assert isinstance(event, RevocationOccurred)
+            self.observe_revocation(event.round_idx)
+
+        def on_price(event: object) -> None:
+            assert isinstance(event, PriceUpdated)
+            self.observe_price(event.price_per_hour / event.listed_per_hour)
+
+        unsubs = [
+            bus.subscribe(RevocationOccurred, on_revocation),
+            bus.subscribe(PriceUpdated, on_price),
+        ]
+
+        def unsubscribe() -> None:
+            for u in unsubs:
+                u()
+
+        return unsubscribe
+
+    # -- adaptive cadence ---------------------------------------------------
+    def current_interval_rounds(self) -> int:
+        """The live interval: baseline / risk, clamped to
+        [min_interval_rounds, server_interval_rounds]."""
+        interval = float(self.server_interval_rounds)
+        if self._mean_gap_rounds is not None:
+            # Checkpoint ~twice per expected inter-revocation gap.
+            interval = min(interval, self._mean_gap_rounds / 2.0)
+        heat = max(0.0, self._price_ratio - 1.0)
+        interval /= 1.0 + self.price_sensitivity * heat
+        return max(self.min_interval_rounds,
+                   min(self.server_interval_rounds, round(interval)))
+
+    def server_checkpoints_at(self, round_idx: int) -> bool:
+        due = round_idx - self._last_ckpt_round >= self.current_interval_rounds()
+        if due:
+            self._last_ckpt_round = round_idx
+        return due
 
 
 @dataclasses.dataclass

@@ -29,12 +29,25 @@ import math
 from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 from .application_model import FLApplication
-from .cloud_model import CloudEnvironment
+from .autopilot import (
+    AutopilotSpec,
+    BudgetTracker,
+    BudgetedMapper,
+    CostAwareScheduler,
+    DeadlineController,
+    MapperLike,
+    PriceTicker,
+)
+from .cloud_model import CloudEnvironment, VMType
 from .control_plane import ControlPlane, SchedulerAPI
 from .cost_model import SERVER, Assignment, CostModel, DeadlineRoundPlan, Placement
 from .dynamic_scheduler import DynamicScheduler
 from .events import Event, EventBus, RevocationOccurred, StragglerEscalated
-from .fault_tolerance import CheckpointPolicy, FaultToleranceModule
+from .fault_tolerance import (
+    CheckpointPolicy,
+    FaultToleranceModule,
+    RiskAwareCheckpointPolicy,
+)
 from .initial_mapping import InitialMapping, MappingSolution
 from .revocation import RevocationModel, RevocationSampler
 
@@ -94,6 +107,11 @@ class SimulationConfig:
     # Consecutive deadline misses by the same silo before its VM is
     # treated as a §4.4 soft fault and replaced via the Dynamic Scheduler.
     deadline_escalate_after: int = 2
+    # Cost autopilot (repro.core.autopilot): price-feed billing, budget-
+    # constrained placement/replacement, risk-aware checkpoint cadence,
+    # and the adaptive deadline controller.  None keeps the paper's
+    # static cost heuristic — and existing traces — exactly.
+    autopilot: Optional[AutopilotSpec] = None
 
     def __post_init__(self) -> None:
         self.validate()
@@ -138,6 +156,26 @@ class SimulationConfig:
                 f"the cohort ({app.n_clients} silos): the quorum can never "
                 "be met"
             )
+        if self.autopilot is not None:
+            if self.autopilot.adaptive_deadline:
+                if not self.async_rounds:
+                    raise ValueError(
+                        "autopilot adaptive_deadline requires "
+                        "async_rounds=True (T_round is a mode of the "
+                        "streaming fold engine)"
+                    )
+                if callable(self.round_deadline):
+                    raise ValueError(
+                        "adaptive_deadline replaces the round_deadline "
+                        "callable: pass a float initial T_round (or None "
+                        "to bootstrap from the first round's arrivals)"
+                    )
+            if self.autopilot.risk_checkpointing and self.checkpoint is None:
+                raise ValueError(
+                    "autopilot risk_checkpointing needs a checkpoint "
+                    "policy: its server_interval_rounds is the calm-market "
+                    "baseline the cadence scales down from"
+                )
 
 
 @dataclasses.dataclass
@@ -205,6 +243,11 @@ class _RunState:
     carry: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
     n_deadline_misses: int = 0
     carried_folds: int = 0
+    # Autopilot billing meter: with a price feed the VM ledger settles
+    # per round (integrating quotes over allocation segments) instead of
+    # as one end-of-run lump sum.
+    billed_to_s: float = 0.0
+    vm_cost_billed: float = 0.0
 
 
 class MultiCloudSimulator:
@@ -219,11 +262,31 @@ class MultiCloudSimulator:
         self.env = env
         self.app = app
         self.config = config
+        spec = config.autopilot
         self.cost_model = CostModel(
-            env, app, config.alpha, aggreg_time_fn=config.aggreg_time_fn
+            env, app, config.alpha,
+            aggreg_time_fn=config.aggreg_time_fn,
+            price_feed=spec.price_feed if spec is not None else None,
         )
-        self.scheduler: SchedulerAPI = DynamicScheduler(self.cost_model)
+        if spec is not None and spec.budget_usd is not None:
+            # Budgeted runs rank §4.4 replacements as (vm, market) pairs
+            # at current quotes; a billing-only autopilot (just a price
+            # feed) keeps the paper's replacement policy so its decisions
+            # stay comparable to the static heuristic.
+            self.scheduler: SchedulerAPI = CostAwareScheduler(
+                self.cost_model,
+                price_feed=spec.price_feed,
+                spot_fallback_after=spec.spot_fallback_after,
+            )
+        else:
+            self.scheduler = DynamicScheduler(self.cost_model)
         self.control: Optional[ControlPlane] = None  # built per run()
+        # Deadline source for _plan_round: the config's float/callable,
+        # replaced by DeadlineController.propose under adaptive_deadline.
+        self._round_deadline = config.round_deadline
+        self._mapper_decides_markets = False
+        self.deadline_controller: Optional[DeadlineController] = None
+        self.budget_tracker: Optional[BudgetTracker] = None
 
     # ------------------------------------------------------------------
     # The run loop: plan a round, drive revocations through the control
@@ -235,7 +298,9 @@ class MultiCloudSimulator:
         cfg.validate(self.app)
         n_rounds = cfg.n_rounds if cfg.n_rounds is not None else self.app.n_rounds
         sampler = RevocationModel(cfg.k_r, cfg.seed).sampler()
-        cp = self.control = self._build_control_plane()
+        bus = EventBus()
+        ticker = self._setup_autopilot(bus, n_rounds)
+        cp = self.control = self._build_control_plane(bus, n_rounds)
 
         mapping = self._solve_initial_mapping(cp)
         st = _RunState(
@@ -252,6 +317,10 @@ class MultiCloudSimulator:
 
         round_idx = 1
         while round_idx <= n_rounds:
+            if ticker is not None:
+                # Market moves the run can act on: quotes for the spot
+                # VMs it currently occupies, sampled at round boundaries.
+                ticker.publish_updates(bus, self._spot_vms(st), st.now, round_idx)
             win = self._plan_round(round_idx, st)
             cp.dispatch_round(
                 round_idx, self.app.n_clients, win.start_s,
@@ -274,6 +343,11 @@ class MultiCloudSimulator:
             st.comm_cost += cp.accrue_cost(
                 "comm", self.cost_model.comm_costs(st.placement), st.now, round_idx
             )
+            if cfg.autopilot is not None:
+                # Per-round settlement instead of the end-of-run lump sum
+                # so the budget tracker and deadline controller see $ as
+                # it accrues (and billing follows the feed's quotes).
+                self._accrue_vm_cost(st, cp, round_idx)
             cp.close_round(round_idx, st.now, win.end_s - win.start_s,
                            carried_over=win.carried_over,
                            carried_in=win.carried_in)
@@ -282,8 +356,12 @@ class MultiCloudSimulator:
         for alloc in st.allocations.values():
             alloc.end_s = st.now
             st.retired.append(alloc)
-        vm_cost = self._vm_cost(st)
-        cp.accrue_cost("vm", vm_cost, st.now)
+        if cfg.autopilot is not None:
+            self._accrue_vm_cost(st, cp, n_rounds)
+            vm_cost = st.vm_cost_billed
+        else:
+            vm_cost = self._vm_cost(st)
+            cp.accrue_cost("vm", vm_cost, st.now)
 
         return SimulationResult(
             total_time_s=st.now,
@@ -304,11 +382,92 @@ class MultiCloudSimulator:
         )
 
     # ------------------------------------------------------------------
-    def _build_control_plane(self) -> ControlPlane:
+    def _setup_autopilot(
+        self, bus: EventBus, n_rounds: int
+    ) -> Optional[PriceTicker]:
+        """Build and attach the autopilot's bus subscribers for one run.
+
+        Returns the `PriceTicker` (when a feed is configured) the run
+        loop drives at round boundaries; the tracker/controller live on
+        ``self`` so callers can inspect them after the run."""
+        spec = self.config.autopilot
+        if spec is None:
+            return None
+        if spec.budget_usd is not None:
+            tracker = BudgetTracker(spec.budget_usd)
+            tracker.attach(bus)
+            self.budget_tracker = tracker
+            if isinstance(self.scheduler, DynamicScheduler):
+                self.scheduler.budget = tracker
+        if spec.adaptive_deadline:
+            raw = self.config.round_deadline
+            initial = float(raw) if isinstance(raw, (int, float)) else None
+            allowance = (
+                spec.budget_usd / n_rounds
+                if spec.budget_usd is not None and n_rounds > 0
+                else None
+            )
+            controller = spec.build_controller(
+                initial_t_round_s=initial,
+                round_cost_allowance_usd=allowance,
+            )
+            controller.attach(bus)
+            self.deadline_controller = controller
+            self._round_deadline = controller.propose
+        if spec.price_feed is not None:
+            return PriceTicker(spec.price_feed)
+        return None
+
+    def _spot_vms(self, st: _RunState) -> List[VMType]:
+        return [
+            self.env.vm_types[a.vm_id]
+            for a in st.allocations.values()
+            if a.market == "spot"
+        ]
+
+    def _accrue_vm_cost(
+        self, st: _RunState, cp: ControlPlane, round_idx: int
+    ) -> None:
+        """Settle VM billing for [billed_to_s, now] at feed prices."""
+        t0, t1 = st.billed_to_s, st.now
+        if t1 <= t0:
+            return
+        total = 0.0
+        seen: Set[int] = set()
+        for alloc in list(st.allocations.values()) + st.retired:
+            if id(alloc) in seen:
+                continue  # final settlement sees live allocs in both lists
+            seen.add(id(alloc))
+            a0 = max(alloc.start_s, t0)
+            a1 = min(alloc.end_s if alloc.end_s is not None else t1, t1)
+            if a1 > a0:
+                total += self.cost_model.vm_cost_between(
+                    alloc.vm_id, alloc.market, a0, a1
+                )
+        st.billed_to_s = t1
+        if total:
+            st.vm_cost_billed += cp.accrue_cost("vm", total, t1, round_idx)
+
+    # ------------------------------------------------------------------
+    def _build_control_plane(self, bus: EventBus, n_rounds: int) -> ControlPlane:
         cfg = self.config
+        spec = cfg.autopilot
         policy = cfg.checkpoint or CheckpointPolicy(
             server_interval_rounds=0, client_every_round=False
         )
+        if spec is not None and spec.risk_checkpointing:
+            assert cfg.checkpoint is not None  # enforced by validate()
+            base = cfg.checkpoint
+            risk_policy = RiskAwareCheckpointPolicy(
+                server_interval_rounds=base.server_interval_rounds,
+                client_every_round=base.client_every_round,
+                disk_bandwidth_Bps=base.disk_bandwidth_Bps,
+                transfer_bandwidth_Bps=base.transfer_bandwidth_Bps,
+                min_interval_rounds=spec.min_checkpoint_interval_rounds,
+                price_sensitivity=spec.checkpoint_price_sensitivity,
+            )
+            risk_policy.attach(bus)
+            policy = risk_policy
         ft = FaultToleranceModule(
             scheduler=self.scheduler,
             policy=policy,
@@ -318,11 +477,23 @@ class MultiCloudSimulator:
             vm_startup_s=cfg.vm_startup_s,
             remove_revoked=cfg.remove_revoked,
         )
+        mapper: MapperLike = self._build_mapper()
+        if spec is not None and spec.budget_usd is not None:
+            mapper = BudgetedMapper(
+                mapper,
+                self.cost_model,
+                budget_usd=spec.budget_usd,
+                n_rounds=n_rounds,
+                k_r=cfg.k_r,
+                vm_startup_s=cfg.vm_startup_s,
+                bus=bus,
+            )
+            self._mapper_decides_markets = True
         return ControlPlane(
             fault_tolerance=ft,
             scheduler=self.scheduler,
-            mapper=self._build_mapper(),
-            bus=EventBus(),
+            mapper=mapper,
+            bus=bus,
             escalate_after=cfg.deadline_escalate_after,
         )
 
@@ -342,6 +513,10 @@ class MultiCloudSimulator:
 
     def _solve_initial_mapping(self, cp: ControlPlane) -> MappingSolution:
         mapping = cp.solve_mapping(use_greedy=self.config.use_greedy_mapping)
+        if self._mapper_decides_markets:
+            # The BudgetedMapper already chose per-task markets by
+            # revocation-adjusted expected cost under the budget.
+            return mapping
         # Execution markets may differ from the solve-time prices.
         mapping.placement = {
             task: Assignment(
@@ -367,11 +542,12 @@ class MultiCloudSimulator:
             ) + self.cost_model.t_comm(cvm.region, svm.region)
 
         t_round: Optional[float] = None
-        if cfg.async_rounds and cfg.round_deadline is not None:
+        deadline = self._round_deadline  # controller.propose under autopilot
+        if cfg.async_rounds and deadline is not None:
             t_round = (
-                cfg.round_deadline(round_idx, dict(offsets))
-                if callable(cfg.round_deadline)
-                else float(cfg.round_deadline)
+                deadline(round_idx, dict(offsets))
+                if callable(deadline)
+                else float(deadline)
             )
         plan = self.cost_model.round_plan(
             offsets,
