@@ -32,6 +32,7 @@ def _check_registry() -> Dict[str, Callable[[], Dict[str, Any]]]:
     from .cost_bench import run_grid as cost
     from .deadline_bench import run_grid as deadline
     from .hierarchy_bench import run_grid as hierarchy
+    from .structured_bench import run_grid as structured
     from .transport_bench import run_grid as transport
 
     return {
@@ -43,6 +44,7 @@ def _check_registry() -> Dict[str, Callable[[], Dict[str, Any]]]:
         "BENCH_cost.json": lambda: cost(quick=True),
         "BENCH_deadline.json": lambda: deadline(quick=True),
         "BENCH_hierarchy.json": lambda: hierarchy(quick=True),
+        "BENCH_structured.json": lambda: structured(quick=True),
         "BENCH_transport.json": lambda: transport(quick=True),
     }
 
@@ -129,6 +131,7 @@ def run_all() -> None:
         bench_pre_scheduling,
     )
     from .roofline_bench import bench_roofline_table
+    from .structured_bench import bench_structured
     from .transport_bench import bench_transport
 
     benches = [
@@ -147,6 +150,7 @@ def run_all() -> None:
         bench_compression,          # compressed wire path: bytes + WAN round time
         bench_chaos,                # seeded fault soak: MTTR + rounds lost
         bench_hierarchy,            # regional partial-sum folds vs flat at 1k clients
+        bench_structured,           # structured updates: LoRA wire win + sim/live parity
         bench_cost_autopilot,       # cost autopilot vs paper heuristic Pareto
         bench_roofline_table,       # §Roofline (from dry-run artifacts)
     ]

@@ -1,0 +1,352 @@
+"""Structured-update benchmark: federated LoRA wire footprint + parity.
+
+What does shipping named parameter *groups* instead of the full pytree
+buy?  Two measurements:
+
+* ``zoo_wire`` — the adapter-FL wire win on a real model-zoo config
+  (olmo-1b reduced, LoRA rank 2 on wq/wk/wv/wo): the serialized
+  ``c_msg_train`` frame a silo puts on the inter-cloud link when the
+  ``{"adapters": ".lora_"}`` schema is active, against the dense fp32
+  frame for the same (injected) model.  The tentpole acceptance
+  number: ``wire_reduction_vs_fp32 >= 50`` (``wire_ratio_ge_50x``).
+  Encode+serialize compute is timed too — the structured path must not
+  buy its bytes with pathological CPU time.
+
+* ``lora_parity`` — a short federated-LoRA convergence run (frozen
+  linear base + rank-1 adapters, masked optimizer) through BOTH the
+  in-process ``AsyncFLServer`` and the loopback-socket
+  ``LiveRoundDriver``, same schema, deterministic reply order: final
+  params must match (``sim_live_params_match``), the control-plane
+  traces must carry the same event sequence modulo timestamps
+  (``sim_live_trace_match``), and the per-group ``c_msg_train`` byte
+  accounting must agree between the simulated and measured logs
+  (``sim_live_bytes_match``).
+
+Writes BENCH_structured.json (or --out) and prints
+``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
+
+Usage:
+  PYTHONPATH=src python benchmarks/structured_bench.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.serializer import serialize_pytree
+from repro.configs import get_config
+from repro.federated.agg_engine import plan_for
+from repro.federated.async_server import AsyncFLServer, DeterministicSchedule
+from repro.federated.client import FLClient
+from repro.federated.compression import (
+    StructuredCompressor,
+    serialize_structured,
+)
+from repro.federated.transport import LiveRoundDriver, ThreadWorkerPool
+from repro.models.api import get_model
+from repro.models.fl_models import (
+    LoRAConfig,
+    inject_lora,
+    lora_adapter_schema,
+    lora_effective,
+)
+from repro.optim import make_optimizer, masked
+
+Row = Tuple[str, float, str]
+
+ZOO_ARCH = "olmo-1b"
+LORA_RANK = 2
+ROUNDS = 8
+QUICK_ROUNDS = 4
+ENCODE_REPS = 6
+
+
+# ---------------------------------------------------------------------------
+# Part 1: model-zoo adapter wire footprint
+# ---------------------------------------------------------------------------
+
+def bench_zoo_wire(arch: str = ZOO_ARCH, rank: int = LORA_RANK) -> Dict[str, Any]:
+    """Dense fp32 vs adapters-only structured c_msg_train bytes on a
+    reduced zoo config with injected LoRA factors."""
+    cfg = get_config(arch).reduced().with_lora(rank)
+    lora = LoRAConfig(rank=cfg.lora_rank, alpha=cfg.lora_alpha,
+                      targets=cfg.lora_targets)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    params = inject_lora(params, jax.random.PRNGKey(1), lora)
+
+    # A post-training local state: only the adapters moved (the masked
+    # optimizer freezes everything else), which is what a client ships.
+    rng = np.random.default_rng(0)
+    local = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: (
+            leaf + jnp.asarray(rng.standard_normal(leaf.shape) * 0.01,
+                               leaf.dtype)
+            if ".lora_" in jax.tree_util.keystr(path) else leaf
+        ),
+        params,
+    )
+
+    schema = lora_adapter_schema()
+    enc = StructuredCompressor(schema, None)
+    update = enc.encode(params, local, base_round=1)
+    wire = serialize_structured(update)
+
+    dense_frame = serialize_pytree(local)
+    plan = plan_for(params)
+    total_elems = plan.total_elems
+    adapter_elems = sum(
+        int(np.asarray(p).size) for _, p in update.groups
+    )
+    dense_fp32_bytes = total_elems * 4
+
+    times: List[float] = []
+    for _ in range(ENCODE_REPS):
+        t0 = time.perf_counter()
+        serialize_structured(enc.encode(params, local, base_round=1))
+        times.append(time.perf_counter() - t0)
+    encode_s = statistics.median(times)
+
+    entry = {
+        "arch": cfg.name,
+        "lora_rank": rank,
+        "lora_targets": list(cfg.lora_targets),
+        "total_elems": int(total_elems),
+        "adapter_elems": int(adapter_elems),
+        "elem_reduction": round(total_elems / adapter_elems, 1),
+        "wire_bytes_structured": len(wire),
+        "wire_bytes_dense_frame": len(dense_frame),
+        "dense_fp32_bytes": int(dense_fp32_bytes),
+        "wire_reduction_vs_fp32": round(dense_fp32_bytes / len(wire), 1),
+        "group_wire_bytes": update.group_wire_bytes(),
+        "group_dense_bytes": update.group_dense_bytes(),
+        "encode_s": round(encode_s, 6),
+        "wire_ratio_ge_50x": dense_fp32_bytes / len(wire) >= 50.0,
+    }
+    print(
+        f"[structured] {cfg.name} rank={rank}: adapters "
+        f"{adapter_elems}/{total_elems} elems, wire "
+        f"{len(wire)/1e3:.1f}kB vs dense {dense_fp32_bytes/1e3:.0f}kB "
+        f"({entry['wire_reduction_vs_fp32']}x, encode="
+        f"{encode_s*1e3:.1f}ms)",
+        file=sys.stderr,
+    )
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Part 2: sim-vs-live federated LoRA parity
+# ---------------------------------------------------------------------------
+
+LORA_TOY = LoRAConfig(rank=1, alpha=1.0, targets=("w",))
+
+
+class _Silo:
+    def __init__(self, x: Any, y: Any) -> None:
+        self.x, self.y = x, y
+
+    def batches(self, batch_size: int, split: str = "train"):
+        for i in range(0, len(self.x), batch_size):
+            yield (self.x[i:i + batch_size], self.y[i:i + batch_size])
+
+
+class _ChainedClient(FLClient):
+    """FLClient whose c_msg_train order is forced by a semaphore chain —
+    live socket arrivals then match the simulator's client order."""
+
+    def __init__(self, *args: Any, **kwargs: Any) -> None:
+        super().__init__(*args, **kwargs)
+        self.acquire_sem: Optional[threading.Semaphore] = None
+        self.release_sem: Optional[threading.Semaphore] = None
+
+    def train(self, global_params: Any) -> Any:
+        if self.acquire_sem is not None:
+            assert self.acquire_sem.acquire(timeout=60.0)
+            time.sleep(0.05)  # let the releaser's reply hit the wire first
+        result = super().train(global_params)
+        if self.release_sem is not None:
+            self.release_sem.release()
+        return result
+
+
+def _lora_loss(params: Any, batch: Any) -> jnp.ndarray:
+    x, y = batch
+    eff = lora_effective(params, LORA_TOY)
+    pred = (x @ eff["fc"]["w"])[:, 0]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _lora_cohort(chained: bool, seed: int = 7) -> List[FLClient]:
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal(3)
+    clients: List[FLClient] = []
+    for i in range(2):
+        n = 24
+        x = rng.standard_normal((n, 3))
+        y = x @ w_true + 0.05 * rng.standard_normal(n)
+        clients.append(
+            _ChainedClient(
+                f"c{i}",
+                _Silo(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)),
+                _lora_loss,
+                masked(make_optimizer("sgdm", 1e-2), ".lora_"),
+                batch_size=8,
+            )
+        )
+    if chained:
+        sem = threading.Semaphore(0)
+        clients[0].release_sem = sem
+        clients[1].acquire_sem = sem
+    return clients
+
+
+def _lora_init() -> Any:
+    base = {"fc": {"w": jnp.zeros((3, 1), jnp.float32)}}
+    return inject_lora(base, jax.random.PRNGKey(0), LORA_TOY)
+
+
+def _trace_signature(trace: List[Any]) -> List[Tuple[Any, ...]]:
+    return [
+        (type(e).__name__, getattr(e, "round_idx", None),
+         getattr(e, "task", None), getattr(e, "attempt", None))
+        for e in trace
+    ]
+
+
+def bench_lora_parity(rounds: int = ROUNDS) -> Dict[str, Any]:
+    schema = lora_adapter_schema()
+    init = _lora_init()
+
+    server = AsyncFLServer(
+        _lora_cohort(chained=False),
+        init,
+        schedule=DeterministicSchedule(0.0),
+        schema=schema,
+        measure_round_messages=True,
+    )
+    t0 = time.perf_counter()
+    sim = server.run(rounds)
+    sim_s = time.perf_counter() - t0
+
+    driver = LiveRoundDriver(
+        ThreadWorkerPool(_lora_cohort(chained=True), init, schema=schema),
+        init,
+        reply_timeout_s=120.0,
+        schema=schema,
+        measure_round_messages=True,
+    )
+    t0 = time.perf_counter()
+    with driver:
+        live = driver.run(rounds)
+    live_s = time.perf_counter() - t0
+
+    sim_w = np.asarray(lora_effective(sim.final_params, LORA_TOY)["fc"]["w"])
+    live_w = np.asarray(lora_effective(live.final_params, LORA_TOY)["fc"]["w"])
+    max_diff = float(np.max(np.abs(sim_w - live_w)))
+
+    sim_log = sim.rounds[-1].message_log
+    live_log = driver.message_logs[-1]
+    assert sim_log is not None
+    bytes_match = (
+        sim_log.group_wire_bytes == live_log.group_wire_bytes
+        and sim_log.c_msg_train_bytes == live_log.c_msg_train_bytes
+    )
+    trace_match = (
+        _trace_signature(server.bus.trace) == _trace_signature(driver.trace)
+    )
+
+    entry = {
+        "rounds": rounds,
+        "final_loss_sim": round(float(sim.rounds[-1].metrics["loss"]), 6),
+        "final_loss_live": round(float(live.rounds[-1].metrics["loss"]), 6),
+        "max_param_diff": max_diff,
+        "codec": live_log.codec,
+        "c_train_bytes": live_log.c_msg_train_bytes,
+        "c_train_dense_bytes": live_log.c_msg_train_dense_bytes,
+        "group_wire_bytes": dict(live_log.group_wire_bytes or {}),
+        "group_dense_bytes": dict(live_log.group_dense_bytes or {}),
+        "sim_round_s": round(sim_s / rounds, 6),
+        "live_round_s": round(live_s / rounds, 6),
+        "sim_live_params_match": max_diff < 1e-5,
+        "sim_live_trace_match": trace_match,
+        "sim_live_bytes_match": bytes_match,
+    }
+    print(
+        f"[structured] lora parity over {rounds} rounds: "
+        f"loss sim={entry['final_loss_sim']} live={entry['final_loss_live']} "
+        f"max|dw|={max_diff:.2e} trace_match={trace_match} "
+        f"bytes_match={bytes_match} wire={live_log.c_msg_train_bytes}B "
+        f"({live_log.codec})",
+        file=sys.stderr,
+    )
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Harness plumbing
+# ---------------------------------------------------------------------------
+
+def run_grid(quick: bool = False, rounds: Optional[int] = None) -> Dict[str, Any]:
+    r = rounds if rounds is not None else (QUICK_ROUNDS if quick else ROUNDS)
+    return {
+        "backend": jax.default_backend(),
+        "grid": "quick" if quick else "full",
+        "zoo_wire": bench_zoo_wire(),
+        "lora_parity": bench_lora_parity(rounds=r),
+    }
+
+
+def bench_structured() -> List[Row]:
+    """run.py-compatible rows (quick grid)."""
+    return _rows(run_grid(quick=True))
+
+
+def _rows(report: Dict[str, Any]) -> List[Row]:
+    z = report["zoo_wire"]
+    p = report["lora_parity"]
+    return [
+        (
+            f"structured_zoo_{z['arch']}_r{z['lora_rank']}",
+            z["encode_s"] * 1e6,
+            f"wire_b={z['wire_bytes_structured']};"
+            f"reduction={z['wire_reduction_vs_fp32']};"
+            f"ge_50x={z['wire_ratio_ge_50x']}",
+        ),
+        (
+            "structured_lora_parity",
+            p["live_round_s"] * 1e6,
+            f"params_match={p['sim_live_params_match']};"
+            f"trace_match={p['sim_live_trace_match']};"
+            f"bytes_match={p['sim_live_bytes_match']};"
+            f"wire_b={p['c_train_bytes']}",
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small grid (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_structured.json")
+    args = ap.parse_args()
+
+    report = run_grid(quick=args.quick, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[structured] wrote {args.out}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in _rows(report):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Golden control-plane traces: pinned event timelines for the release
+scenarios.
+
+Each scenario below is a deterministic `Experiment` simulation (fixed
+seed, simulated clock) whose full event trace is committed under
+``tests/golden/<name>.json``.  Any change to round sequencing, revocation
+handling, deadline folding, or event emission shows up as a structural
+diff against the goldens — `scripts/trace_dump.py --diff` prints the
+event-type deltas and the first divergent event, which is far easier to
+review than a failing end-to-end assertion.
+
+Usage:
+  # regenerate the committed goldens after an INTENDED behaviour change
+  PYTHONPATH=src python scripts/golden_traces.py --update
+
+  # dump fresh traces for all scenarios into a directory (CI does this,
+  # then structurally diffs each against its golden via trace_dump.py)
+  PYTHONPATH=src python scripts/golden_traces.py --out fresh_traces
+
+  # self-contained check: regenerate + diff in-process, exit 1 on drift
+  PYTHONPATH=src python scripts/golden_traces.py --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from trace_dump import diff_traces, trace_to_json  # noqa: E402
+
+GOLDEN_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "tests", "golden")
+
+
+def _experiment():
+    from repro.core import Experiment, cloudlab_environment
+    return Experiment.on(cloudlab_environment())
+
+
+def _til_baseline():
+    """The paper's TIL run, on-demand markets, synchronous rounds."""
+    from repro.core import til_application
+    return _experiment().app(til_application(n_rounds=6))
+
+
+def _spot_revocations():
+    """Spot clients with k_r=3600s revocations (§5.6), seed pinned."""
+    from repro.core import til_application
+    return (_experiment().app(til_application(n_rounds=8))
+            .markets(server="on_demand", clients="spot")
+            .revocations(k_r=3600.0, seed=0, remove_revoked=False))
+
+
+def _async_deadline():
+    """T_round partial rounds: DeadlineExpired / carry-over events."""
+    from repro.core import shakespeare_application
+    return (_experiment().app(shakespeare_application(n_rounds=6))
+            .async_rounds(deadline=400.0))
+
+
+SCENARIOS: Dict[str, Callable[[], object]] = {
+    "til_baseline": _til_baseline,
+    "spot_revocations": _spot_revocations,
+    "async_deadline": _async_deadline,
+}
+
+
+def dump_scenario(name: str) -> List[dict]:
+    """Run one scenario and return its trace in trace_dump JSON form."""
+    result = SCENARIOS[name]().simulate()
+    return trace_to_json(result.trace)
+
+
+def golden_path(name: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+def update() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name in sorted(SCENARIOS):
+        trace = dump_scenario(name)
+        with open(golden_path(name), "w") as f:
+            json.dump(trace, f, indent=1)
+        print(f"wrote {golden_path(name)} ({len(trace)} events)")
+
+
+def dump_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name in sorted(SCENARIOS):
+        trace = dump_scenario(name)
+        path = os.path.join(out_dir, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(trace, f, indent=1)
+        print(f"wrote {path} ({len(trace)} events)")
+
+
+def check() -> int:
+    failures = 0
+    for name in sorted(SCENARIOS):
+        path = golden_path(name)
+        if not os.path.exists(path):
+            print(f"[golden] {name}: MISSING golden at {path}")
+            failures += 1
+            continue
+        with open(path) as f:
+            golden = json.load(f)
+        fresh = dump_scenario(name)
+        print(f"[golden] {name}:")
+        if not diff_traces(golden, fresh, label_a="golden", label_b="fresh"):
+            failures += 1
+    if failures:
+        print(f"{failures} golden trace(s) diverged — if the change is "
+              f"intended, rerun with --update and commit the new goldens")
+        return 1
+    print("all golden traces match")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    group = ap.add_mutually_exclusive_group(required=True)
+    group.add_argument("--update", action="store_true",
+                       help="regenerate the committed goldens")
+    group.add_argument("--check", action="store_true",
+                       help="regenerate in-process and diff against goldens")
+    group.add_argument("--out", default=None,
+                       help="dump fresh traces for every scenario into DIR")
+    args = ap.parse_args()
+    if args.update:
+        update()
+    elif args.check:
+        sys.exit(check())
+    else:
+        dump_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,15 @@ class ModelConfig:
     # explicit variant materialize whole gathered stacks on some backends).
     fsdp_gather_in_scan: bool = True
 
+    # -- LoRA adapters (federated PEFT) -------------------------------------
+    # rank 0 = no adapters.  targets are exact leaf-key names in the
+    # model's param tree (see repro.models.fl_models.inject_lora); in
+    # adapter-FL runs clients train and ship only the injected ".lora_"
+    # leaves while the base stays frozen server-side.
+    lora_rank: int = 0
+    lora_alpha: float = 16.0
+    lora_targets: Tuple[str, ...] = ()
+
     # -- shape coverage -----------------------------------------------------
     # Which input shapes this arch supports; long_500k requires sub-quadratic
     # attention (SSM/hybrid native, dense via sliding_window).
@@ -139,6 +148,21 @@ class ModelConfig:
 
     def with_overrides(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+    def with_lora(
+        self,
+        rank: int,
+        alpha: float = 16.0,
+        targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo"),
+    ) -> "ModelConfig":
+        """Adapter-FL variant: LoRA factors on the named leaf keys."""
+        return dataclasses.replace(
+            self, lora_rank=rank, lora_alpha=alpha, lora_targets=targets
+        )
+
+    @property
+    def lora_enabled(self) -> bool:
+        return self.lora_rank > 0
 
     def reduced(self) -> "ModelConfig":
         """Smoke-test variant: same family, tiny dims (<=2 layers, d_model<=512,

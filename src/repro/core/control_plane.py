@@ -575,6 +575,7 @@ class Experiment:
         self._transport: Optional[Dict[str, Any]] = None
         self._chaos: Optional[Any] = None
         self._compression: Optional[Any] = None
+        self._schema: Optional[Any] = None
         self._hierarchy: Optional[Dict[str, Any]] = None
         self._autopilot: Optional["AutopilotSpec"] = None
 
@@ -593,6 +594,7 @@ class Experiment:
         exp._transport = None if self._transport is None else dict(self._transport)
         exp._chaos = self._chaos
         exp._compression = self._compression
+        exp._schema = self._schema
         exp._hierarchy = None if self._hierarchy is None else dict(self._hierarchy)
         exp._autopilot = self._autopilot
         for key, value in changes.items():
@@ -666,6 +668,7 @@ class Experiment:
         aggreg_time_fn: Optional[Callable[[str], float]] = None,
         *,
         compression: Any = None,
+        schema: Any = None,
     ) -> "Experiment":
         """Aggregation-path knobs.
 
@@ -683,7 +686,17 @@ class Experiment:
         validated here — a bad codec string fails at chain-building
         time, not mid-run — and, like :meth:`chaos`, rejected by the
         simulator target (:meth:`build`), which models message sizes
-        rather than carrying real payloads."""
+        rather than carrying real payloads.
+
+        ``schema`` turns on *structured* updates: an
+        :class:`~repro.federated.agg_engine.UpdateSchema` or a
+        ``{group_name: selector}`` mapping naming the parameter groups
+        clients ship (e.g. ``{"adapters": ".lora_"}`` for federated
+        LoRA).  Updates carry only the named groups, folds normalize
+        weights per group, and round message logs gain per-group byte
+        maps; combine with ``compression`` for per-group compressed
+        deltas.  Validated at chain time and honoured by all three
+        serve drivers (flat async, hierarchy, live transport)."""
         exp = self
         if aggreg_time_fn is not None:
             exp = exp._set(aggreg_time_fn=aggreg_time_fn)
@@ -691,6 +704,10 @@ class Experiment:
             from repro.federated.compression import parse_compression
 
             exp = exp._clone(_compression=parse_compression(compression))
+        if schema is not None:
+            from repro.federated.agg_engine import as_update_schema
+
+            exp = exp._clone(_schema=as_update_schema(schema))
         return exp if exp is not self else self._clone()
 
     def async_rounds(
@@ -1045,6 +1062,14 @@ class Experiment:
                 "simulator target models message sizes analytically — "
                 "feed it measured compressed sizes via the cost model"
             )
+        if self._schema is not None:
+            raise ValueError(
+                "an update schema applies to the serve() targets (real "
+                "structured payloads cross a real or virtual wire "
+                "there); the simulator target models message sizes "
+                "analytically — feed it measured per-group sizes via "
+                "the cost model"
+            )
         if self._hierarchy is not None:
             raise ValueError(
                 "a hierarchy applies to the in-process serve() target "
@@ -1199,6 +1224,7 @@ class Experiment:
                 workers: Any = ProcessWorkerPool(
                     clients, initial_params, reconnect=spec["reconnect"],
                     compression=self._compression,
+                    schema=self._schema,
                 )
             else:
                 if isinstance(clients, Mapping):
@@ -1215,6 +1241,7 @@ class Experiment:
                 workers = ThreadWorkerPool(
                     live_clients, initial_params, reconnect=spec["reconnect"],
                     compression=self._compression,
+                    schema=self._schema,
                 )
             if self._chaos is not None:
                 server_kwargs.setdefault("chaos", self._chaos)
@@ -1238,6 +1265,7 @@ class Experiment:
                 "heartbeat_timeout_s", spec["heartbeat_timeout_s"]
             )
             server_kwargs.setdefault("compression", self._compression)
+            server_kwargs.setdefault("schema", self._schema)
             return LiveRoundDriver(
                 workers,
                 initial_params,
@@ -1269,6 +1297,7 @@ class Experiment:
                 bus=bus,
             )
         server_kwargs.setdefault("compression", self._compression)
+        server_kwargs.setdefault("schema", self._schema)
         if self._hierarchy is not None:
             from repro.federated.hierarchy import HierarchicalFLServer
 

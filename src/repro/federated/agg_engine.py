@@ -49,7 +49,19 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    Any,
+    Callable,
+    ClassVar,
+    Dict,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+    cast,
+)
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +103,10 @@ class RavelPlan:
 # jitted closures) and leak across engines.  Hits move the plan to the
 # back; inserts evict from the front.  Plans held by live aggregators
 # survive eviction — only the cache entry (and its reuse) is dropped.
-_PLAN_CACHE: "OrderedDict[Any, RavelPlan]" = OrderedDict()
+# Holds both full RavelPlans (keyed by structure) and GroupPlans (keyed
+# by (structure, ("group", leaf indices))) — the composite key is what
+# keeps two schemas' masked subtrees of the same tree from colliding.
+_PLAN_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
 _PLAN_CACHE_MAX: int = 64
 
 
@@ -136,7 +151,7 @@ def plan_for(tree: Any) -> RavelPlan:
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _PLAN_CACHE.move_to_end(key)
-        return plan
+        return cast(RavelPlan, plan)
 
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
@@ -253,6 +268,246 @@ def _raise_structure_mismatch(
         client_id=client_id,
         path=path,
     )
+
+
+# ---------------------------------------------------------------------------
+# Update schemas: named parameter groups over one model structure
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """Cached flatten layout for one named subset of a tree's leaves.
+
+    The structured analogue of :class:`RavelPlan`: ``flatten`` ravels
+    the *selected* leaves of a full tree (in full-plan leaf order) into
+    one compact fp32 ``(total_elems,)`` vector, and ``offsets`` maps
+    each compact position back into the full flat vector so a finalize
+    can scatter per-group accumulators into one model-sized numerator.
+    ``padded_len`` rounds the compact length up to the Pallas BLOCK
+    multiple (== the compression QBLOCK), so per-group int8/fp16 deltas
+    feed the fused dequantize-and-fold kernel exactly like whole-model
+    ones.  ``signature`` digests (full-plan signature, leaf indices) —
+    the equality token per-group partial sums carry."""
+
+    leaf_indices: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    total_elems: int
+    padded_len: int
+    signature: str
+    offsets: Any  # np.int32 positions in the full flat vector
+    flatten: Callable[[Any], Any]
+
+
+def group_plan_for(tree: Any, leaf_indices: Sequence[int]) -> GroupPlan:
+    """The (LRU-cached) :class:`GroupPlan` for a subset of ``tree``'s leaves.
+
+    Cached in the same bounded LRU as full ravel plans, but keyed by
+    ``(structure, ("group", indices))`` — two schemas selecting different
+    subtrees of one structure get *distinct* plans (and distinct
+    signatures), never a colliding cache slot."""
+    full = plan_for(tree)
+    idx = tuple(sorted(int(i) for i in leaf_indices))
+    if not idx:
+        raise ValueError("a parameter group must select at least one leaf")
+    if len(set(idx)) != len(idx):
+        raise ValueError(f"duplicate leaf indices in group selection: {idx}")
+    if idx[0] < 0 or idx[-1] >= len(full.sizes):
+        raise ValueError(
+            f"group leaf indices {idx} out of range for a "
+            f"{len(full.sizes)}-leaf structure"
+        )
+    key = (_structure_key(tree), ("group", idx))
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _PLAN_CACHE.move_to_end(key)
+        return cast(GroupPlan, cached)
+
+    from repro.kernels.fedavg_reduce import BLOCK as _block
+
+    sizes = tuple(int(full.sizes[i]) for i in idx)
+    total = int(sum(sizes))
+    padded = -(-total // _block) * _block
+    signature = hashlib.sha1(
+        f"{full.signature}:group:{idx!r}".encode()
+    ).hexdigest()[:16]
+    starts = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(np.asarray(full.sizes, np.int64))]
+    )
+    offsets = np.concatenate(
+        [np.arange(starts[i], starts[i] + full.sizes[i], dtype=np.int64)
+         for i in idx]
+    ).astype(np.int32)
+
+    def flatten(t: Any) -> Any:
+        ls = jax.tree.leaves(t)
+        return jnp.concatenate(
+            [jnp.ravel(ls[i]).astype(jnp.float32) for i in idx]
+        )
+
+    plan = GroupPlan(
+        leaf_indices=idx, sizes=sizes, total_elems=total, padded_len=padded,
+        signature=signature, offsets=offsets, flatten=jax.jit(flatten),
+    )
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+    return plan
+
+
+def _select_leaves(name: str, selector: Any, tree: Any, paths: Sequence[str]) -> Tuple[int, ...]:
+    """Leaf indices a group selector picks out of ``tree``.
+
+    Selector forms: a substring matched against the leaf's key path
+    (``"lora_"``), a sequence of substrings (any match), a
+    ``path -> bool`` callable, or a boolean mask pytree with the same
+    leaf count as the model (truthy leaf = selected)."""
+    if isinstance(selector, str):
+        return tuple(i for i, p in enumerate(paths) if selector in p)
+    if isinstance(selector, (list, tuple)) and all(
+        isinstance(s, str) for s in selector
+    ):
+        toks = list(selector)
+        return tuple(
+            i for i, p in enumerate(paths) if any(t in p for t in toks)
+        )
+    if callable(selector):
+        return tuple(i for i, p in enumerate(paths) if bool(selector(p)))
+    mask_leaves = jax.tree.leaves(selector)
+    if len(mask_leaves) != len(paths):
+        raise ValueError(
+            f"schema group {name!r}: boolean mask has {len(mask_leaves)} "
+            f"leaves, the model has {len(paths)}"
+        )
+    return tuple(i for i, m in enumerate(mask_leaves) if bool(np.all(m)))
+
+
+class UpdateSchema:
+    """Named parameter groups over one model structure (order preserved).
+
+    The first-class description of a *structured* update: each group
+    names a subset of the model's leaves (see :func:`_select_leaves` for
+    selector forms), and clients may ship any subset of the groups —
+    silos absent from a group contribute no weight to it.  Groups may
+    overlap; an element covered by several groups normalizes by the sum
+    of the covering groups' weight totals.  ``resolve(tree)`` binds the
+    schema to a concrete structure, building (cached) per-group plans.
+    """
+
+    def __init__(
+        self,
+        groups: Union[Mapping[str, Any], Sequence[Tuple[str, Any]]],
+    ) -> None:
+        items: List[Tuple[str, Any]]
+        if isinstance(groups, Mapping):
+            items = [(str(n), s) for n, s in groups.items()]
+        else:
+            items = [(str(n), s) for n, s in groups]
+        if not items:
+            raise ValueError("an UpdateSchema needs at least one group")
+        names = [n for n, _ in items]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate group names in schema: {names}")
+        for n, sel in items:
+            if sel is None:
+                raise ValueError(
+                    f"schema group {n!r} has no selector (None)"
+                )
+        self.groups: Tuple[Tuple[str, Any], ...] = tuple(items)
+
+    @property
+    def group_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.groups)
+
+    def __repr__(self) -> str:
+        return f"UpdateSchema({', '.join(self.group_names)})"
+
+    def resolve(self, tree: Any) -> "ResolvedSchema":
+        """Bind the schema to ``tree``'s structure (per-group plans)."""
+        full = plan_for(tree)
+        paths = _leaf_paths(full.treedef)
+        resolved: List[Tuple[str, GroupPlan]] = []
+        for name, sel in self.groups:
+            idx = _select_leaves(name, sel, tree, paths)
+            if not idx:
+                raise ValueError(
+                    f"schema group {name!r} selects no leaves of the model "
+                    f"(selector {sel!r}; leaf paths: {paths[:8]}...)"
+                )
+            resolved.append((name, group_plan_for(tree, idx)))
+        leaf_groups = tuple(
+            tuple(n for n, gp in resolved if i in set(gp.leaf_indices))
+            for i in range(len(full.sizes))
+        )
+        signature = hashlib.sha1(
+            (full.signature + "".join(
+                f"|{n}:{gp.signature}" for n, gp in resolved
+            )).encode()
+        ).hexdigest()[:16]
+        return ResolvedSchema(
+            plan=full, groups=tuple(resolved), signature=signature,
+            leaf_groups=leaf_groups,
+        )
+
+
+def as_update_schema(
+    spec: Union[None, "UpdateSchema", Mapping[str, Any]],
+) -> Optional["UpdateSchema"]:
+    """Coerce a user-facing schema knob into an :class:`UpdateSchema`.
+
+    Accepts ``None`` (off), an existing schema, or a mapping of group
+    name -> selector.  Raises ``ValueError`` on anything else — the
+    builder calls this at configuration time so bad knobs fail before
+    any round runs."""
+    if spec is None:
+        return None
+    if isinstance(spec, UpdateSchema):
+        return spec
+    if isinstance(spec, Mapping):
+        return UpdateSchema(spec)
+    raise ValueError(
+        f"schema must be None, an UpdateSchema, or a mapping of group "
+        f"name -> selector; got {type(spec).__name__}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedSchema:
+    """An :class:`UpdateSchema` bound to one concrete model structure.
+
+    ``leaf_groups[i]`` names the groups covering leaf ``i`` (in schema
+    order) — the coverage map the structured finalize normalizes with.
+    ``signature`` digests the full plan plus every group's plan, so two
+    endpoints agreeing on a signature agree on the exact partition."""
+
+    plan: RavelPlan
+    groups: Tuple[Tuple[str, GroupPlan], ...]
+    signature: str
+    leaf_groups: Tuple[Tuple[str, ...], ...]
+
+    @property
+    def group_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.groups)
+
+    def group(self, name: str) -> GroupPlan:
+        for n, gp in self.groups:
+            if n == name:
+                return gp
+        raise KeyError(f"schema has no group {name!r}")
+
+    @property
+    def full_coverage(self) -> bool:
+        """Every leaf in exactly one group (the dense-equivalent case)."""
+        return all(len(gs) == 1 for gs in self.leaf_groups)
+
+    @property
+    def covered(self) -> bool:
+        """Every leaf in at least one group."""
+        return all(len(gs) >= 1 for gs in self.leaf_groups)
+
+    @property
+    def disjoint(self) -> bool:
+        """No leaf in more than one group."""
+        return all(len(gs) <= 1 for gs in self.leaf_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -492,8 +747,11 @@ class AggregationEngine:
 
     # -- streaming -----------------------------------------------------------
     def streaming(
-        self, base: Any = None, base_round: Optional[int] = None
-    ) -> "StreamingAggregator":
+        self,
+        base: Any = None,
+        base_round: Optional[int] = None,
+        schema: Union[None, "UpdateSchema", "ResolvedSchema", Mapping[str, Any]] = None,
+    ) -> Union["StreamingAggregator", "StructuredStreamingAggregator"]:
         """New per-round streaming accumulator (async client folding).
 
         ``base`` switches the aggregator to flat/delta mode anchored on
@@ -504,7 +762,22 @@ class AggregationEngine:
         ``base_round`` tags the base so compressed updates carrying a
         ``base_round`` of their own are validated against it (a delta
         folded against the wrong round's base is silent corruption —
-        see :meth:`StreamingAggregator.rebase`)."""
+        see :meth:`StreamingAggregator.rebase`).
+
+        ``schema`` switches to *structured* mode: per-group accumulators
+        under an :class:`UpdateSchema` (named parameter groups), folding
+        partial updates with per-group weight normalization — see
+        :class:`StructuredStreamingAggregator`.  Structured mode needs
+        ``base`` (absent groups keep the base's values)."""
+        if schema is not None:
+            if base is None:
+                raise ValueError(
+                    "streaming(schema=...) needs base=global_params: absent "
+                    "groups and per-group deltas are defined relative to it"
+                )
+            return StructuredStreamingAggregator(
+                self, schema, base, base_round=base_round
+            )
         return StreamingAggregator(self, base=base, base_round=base_round)
 
 
@@ -533,6 +806,11 @@ class CarryEntry:
     weight: float       # raw example weight (n_samples), undiscounted
     origin_round: int   # round whose deadline the message missed
     late_by_s: float = 0.0  # virtual seconds past that round's deadline
+    # ||update - origin base||_2 at park time, when the engine had a base
+    # to measure against; lets DriftAwareDiscount compare how far the
+    # global model has since moved relative to the parked update's own
+    # step size.  None = not measured (dense park without a base).
+    origin_delta_norm: Optional[float] = None
 
     def age_at(self, round_idx: int) -> int:
         """Rounds of staleness when folded in ``round_idx`` (floor 1).
@@ -577,6 +855,80 @@ class CarryOverBuffer:
 
     def __bool__(self) -> bool:
         return bool(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# Staleness policies: how much weight a carried-over update keeps
+# ---------------------------------------------------------------------------
+
+class StalenessPolicy:
+    """How much of a parked update's weight survives a late fold.
+
+    ``effective_multiplier`` maps one :class:`CarryEntry` to the factor
+    its raw example weight is scaled by when finally folded in
+    ``round_idx``.  Policies advertising ``uses_drift`` additionally
+    receive ``drift`` — the ratio of how far the global model has moved
+    since the update was parked to the update's own step size — so the
+    discount can track *observed* divergence rather than just age."""
+
+    uses_drift: ClassVar[bool] = False
+
+    def effective_multiplier(
+        self,
+        entry: CarryEntry,
+        round_idx: int,
+        drift: Optional[float] = None,
+    ) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class AgeDiscount(StalenessPolicy):
+    """The PR-3 rule: ``discount ** age`` with age floored at 1 round.
+
+    Bit-identical to :meth:`StreamingAggregator.add_stale`'s arithmetic
+    (same ``float(discount) ** int(age)`` expression), so swapping the
+    default policy in changes nothing for existing runs."""
+
+    discount: float = 0.5
+
+    def effective_multiplier(
+        self,
+        entry: CarryEntry,
+        round_idx: int,
+        drift: Optional[float] = None,
+    ) -> float:
+        return float(self.discount) ** int(entry.age_at(round_idx))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftAwareDiscount(StalenessPolicy):
+    """Convergence-aware staleness: decay by observed update drift.
+
+    Starts from the same age discount, then divides by
+    ``1 + drift_coef * (drift - 1)`` when the model has drifted *more*
+    than the parked update's own step (``drift > 1``) — a late update
+    pointing at a distant past model is down-weighted harder than its
+    age alone implies.  When drift is small (the model barely moved, so
+    the stale direction is still informative) or unmeasurable (no base
+    at park time), the policy reduces exactly to :class:`AgeDiscount`.
+    """
+
+    discount: float = 0.5
+    drift_coef: float = 1.0
+
+    uses_drift: ClassVar[bool] = True
+
+    def effective_multiplier(
+        self,
+        entry: CarryEntry,
+        round_idx: int,
+        drift: Optional[float] = None,
+    ) -> float:
+        base = float(self.discount) ** int(entry.age_at(round_idx))
+        if drift is None or drift <= 1.0:
+            return base
+        return base / (1.0 + float(self.drift_coef) * (float(drift) - 1.0))
 
 
 def _scale_tree_impl(tree: Any, w: Any) -> Any:
@@ -658,6 +1010,78 @@ def _flat_finalize_impl(acc: Any, base: Any, inv: Any) -> Any:
 _flat_finalize: Callable[..., Any] = jax.jit(_flat_finalize_impl)
 
 
+# Structured-finalize helpers: per-group compact accumulators scatter
+# into one model-sized numerator (exact: every target starts at 0, so
+# the scatter-add is 0 + x), then normalize elementwise by each leaf's
+# covering-group weight total.
+def _flat_group_scatter_impl(num: Any, idx: Any, vals: Any) -> Any:
+    """num[idx] += vals — place a group's compact accumulator."""
+    return num.at[idx].add(vals)
+
+
+_flat_group_scatter: Callable[..., Any] = jax.jit(
+    _flat_group_scatter_impl, donate_argnums=(0,)
+)
+
+
+def _flat_finalize_vec_impl(num: Any, base: Any, inv: Any) -> Any:
+    """base + num * inv — elementwise normalizer (uncovered / weightless
+    elements carry inv == 0 and keep the base exactly).  Not donated:
+    the output aliases neither input."""
+    return base + num * inv
+
+
+_flat_finalize_vec: Callable[..., Any] = jax.jit(_flat_finalize_vec_impl)
+
+
+def _fold_compressed_into(
+    acc: Any,
+    update: Any,
+    w: float,
+    padded_len: int,
+    use_pallas: bool,
+    interpret: Optional[bool],
+) -> Any:
+    """Fold one CompressedUpdate's delta into a padded fp32 accumulator.
+
+    The single codec-dispatch used by both the whole-model
+    :meth:`StreamingAggregator.add_compressed` and the per-group
+    structured fold — identical ops on identical layouts, which is what
+    makes a full-coverage structured fold bit-for-bit equal to the dense
+    one.  ``acc`` is donated by the underlying jitted folds; callers
+    must rebind to the return value."""
+    if update.codec == "topk":
+        return _flat_scatter_fold(
+            acc,
+            jnp.asarray(np.asarray(update.indices)),
+            jnp.asarray(np.asarray(update.data)),
+            jnp.float32(w),
+        )
+    if update.codec in ("int8", "fp16"):
+        from repro.federated.compression import QBLOCK
+        nb = padded_len // QBLOCK
+        data = np.zeros(padded_len, dtype=update.data.dtype)
+        data[: update.total_elems] = update.data
+        if update.codec == "int8":
+            scales = np.asarray(update.scales, np.float32)
+            if scales.shape != (nb,):
+                raise ValueError(
+                    f"int8 update has {scales.shape} scales; expected ({nb},)"
+                )
+        else:
+            scales = np.ones(nb, np.float32)
+        if use_pallas:
+            from repro.kernels.fedavg_reduce import dequant_fold
+            return dequant_fold(
+                acc, jnp.asarray(data), jnp.asarray(scales),
+                jnp.float32(w), interpret=interpret,
+            )
+        return _flat_dequant_fold_jnp(
+            acc, jnp.asarray(data), jnp.asarray(scales), jnp.float32(w)
+        )
+    raise ValueError(f"unknown compressed codec {update.codec!r}")
+
+
 def _leaf_nbytes(leaf: Any) -> int:
     nbytes = getattr(leaf, "nbytes", None)
     return int(nbytes) if nbytes is not None else int(np.asarray(leaf).nbytes)
@@ -694,6 +1118,40 @@ class PartialSum:
     def wire_bytes(self) -> int:
         """Bytes a parent link carries for this partial (the fp32 acc)."""
         return _leaf_nbytes(self.acc)
+
+
+@dataclasses.dataclass(frozen=True)
+class StructuredPartialSum:
+    """A structured aggregator's exported fold: one PartialSum per group.
+
+    Groups no silo in the region contributed to are *omitted* — absent
+    silos contribute no weight to a group, and that has to survive the
+    hierarchy hop (a zero-accumulator partial with nonzero wsum would
+    drag the group toward the base).  ``schema_signature`` pins the
+    exact partition; each group's inner :class:`PartialSum` carries its
+    own group-plan signature, and the parent validates both."""
+
+    groups: Tuple[Tuple[str, PartialSum], ...]
+    schema_signature: str
+    n_clients: int
+    base_round: Optional[int] = None
+    region_id: str = ""
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes a parent link carries (sum of the per-group fp32 accs)."""
+        return sum(p.wire_bytes for _, p in self.groups)
+
+    @property
+    def wsum(self) -> float:
+        """Round-weight proxy for bus/event accounting: the largest
+        per-group weight total (each group normalizes independently, so
+        there is no single scalar — the max is what a fully-present silo
+        cohort contributed)."""
+        return max((p.wsum for _, p in self.groups), default=0.0)
+
+    def group_wsums(self) -> Dict[str, float]:
+        return {n: p.wsum for n, p in self.groups}
 
 
 class StreamingAggregator:
@@ -928,40 +1386,10 @@ class StreamingAggregator:
         if w < 0:
             raise ValueError("client weight must be non-negative")
         acc = self._ensure_flat_acc()
-        lp = self._padded_len
-        if update.codec == "topk":
-            self._acc_flat = _flat_scatter_fold(
-                acc,
-                jnp.asarray(np.asarray(update.indices)),
-                jnp.asarray(np.asarray(update.data)),
-                jnp.float32(w),
-            )
-        elif update.codec in ("int8", "fp16"):
-            from repro.federated.compression import QBLOCK
-            nb = lp // QBLOCK
-            data = np.zeros(lp, dtype=update.data.dtype)
-            data[: update.total_elems] = update.data
-            if update.codec == "int8":
-                scales = np.asarray(update.scales, np.float32)
-                if scales.shape != (nb,):
-                    raise ValueError(
-                        f"int8 update has {scales.shape} scales; expected ({nb},)"
-                    )
-            else:
-                scales = np.ones(nb, np.float32)
-            if self._use_pallas():
-                from repro.kernels.fedavg_reduce import dequant_fold
-                interp = self._engine.interpret if self._engine is not None else None
-                self._acc_flat = dequant_fold(
-                    acc, jnp.asarray(data), jnp.asarray(scales),
-                    jnp.float32(w), interpret=interp,
-                )
-            else:
-                self._acc_flat = _flat_dequant_fold_jnp(
-                    acc, jnp.asarray(data), jnp.asarray(scales), jnp.float32(w)
-                )
-        else:
-            raise ValueError(f"unknown compressed codec {update.codec!r}")
+        interp = self._engine.interpret if self._engine is not None else None
+        self._acc_flat = _fold_compressed_into(
+            acc, update, w, self._padded_len, self._use_pallas(), interp
+        )
         if block:
             jax.block_until_ready(self._acc_flat)
         self._wsum += w
@@ -1116,6 +1544,403 @@ class StreamingAggregator:
         # Consume: the accumulator was donated, and every per-fold field
         # (_wsum, n_clients, _dtypes, _treedef) must go with it — stale
         # normalizer state would silently double-count on reuse.
+        self._reset()
+        if self._engine is not None:
+            self._engine.stats.n_calls += 1
+        return out
+
+
+class StructuredStreamingAggregator:
+    """Per-group streaming folds under an :class:`UpdateSchema`.
+
+    Each named group keeps its own padded fp32 delta accumulator and its
+    own running weight total, so silos may ship any subset of the groups
+    — a silo absent from a group contributes no weight to it, and each
+    element of the finalized model normalizes by the weight total of the
+    groups that actually cover it (overlapping groups sum their
+    totals).  Elements no present group covers keep the base exactly.
+
+    ``add`` accepts three payload shapes per client:
+
+    * a :class:`~repro.federated.compression.StructuredUpdate` (the wire
+      form) — per-group raw fp32 *values* or per-group compressed
+      *deltas* against the aggregator's base;
+    * a plain mapping ``{group name: payload}`` with the same per-group
+      semantics (a compact fp32 vector is the group's raw values, a
+      ``CompressedUpdate`` a delta);
+    * a full model pytree — structure-validated, then sliced into every
+      group (the dense degenerate case).
+
+    A full-coverage schema (every leaf in exactly one group) with every
+    client present in every group folds *bit-for-bit* identically to the
+    dense flat/delta path: the per-group folds run the same jitted ops
+    over the same values in the same order, the per-element numerator is
+    placed by an exact scatter into zeros, and the per-leaf normalizer
+    rounds ``1/wsum`` exactly as the dense finalize does.
+    """
+
+    def __init__(
+        self,
+        engine: Optional[AggregationEngine],
+        schema: Union[UpdateSchema, ResolvedSchema, Mapping[str, Any]],
+        base: Any,
+        base_round: Optional[int] = None,
+    ) -> None:
+        if base is None:
+            raise ValueError(
+                "structured aggregation needs the round's global weights: "
+                "pass base= (per-group deltas and absent groups are both "
+                "defined relative to it)"
+            )
+        self._engine = engine
+        if isinstance(schema, ResolvedSchema):
+            self._schema = schema
+        else:
+            self._schema = as_update_schema(
+                cast(Union[UpdateSchema, Mapping[str, Any]], schema)
+            ).resolve(base)  # type: ignore[union-attr]
+        self._plan = self._schema.plan
+        self._base_flat = self._plan.flatten(base)
+        self._group_base: Dict[str, Any] = {
+            name: gp.flatten(base) for name, gp in self._schema.groups
+        }
+        self.base_round = base_round
+        self._accs: Dict[str, Any] = {}
+        self._wsums: Dict[str, float] = {n: 0.0 for n in self._schema.group_names}
+        self._counts: Dict[str, int] = {n: 0 for n in self._schema.group_names}
+        self.n_clients = 0
+
+    @property
+    def schema(self) -> ResolvedSchema:
+        return self._schema
+
+    @property
+    def mid_fold(self) -> bool:
+        return self.n_clients > 0 or bool(self._accs)
+
+    def group_wsums(self) -> Dict[str, float]:
+        """Per-group running weight totals (weight-conservation audits)."""
+        return dict(self._wsums)
+
+    def group_counts(self) -> Dict[str, int]:
+        """Per-group client counts (a silo counts once per group present)."""
+        return dict(self._counts)
+
+    def _reset(self) -> None:
+        self._accs = {}
+        self._wsums = {n: 0.0 for n in self._schema.group_names}
+        self._counts = {n: 0 for n in self._schema.group_names}
+        self.n_clients = 0
+
+    def rebase(self, base: Any, base_round: Optional[int] = None) -> None:
+        """Re-anchor on a new round's global weights (see
+        :meth:`StreamingAggregator.rebase` for why mid-fold is rejected)."""
+        if self.mid_fold:
+            raise ValueError(
+                "cannot rebase mid-fold: the accumulators hold deltas "
+                "against the current base — call result() (or "
+                "export_partial()) first"
+            )
+        plan = plan_for(base)
+        if plan.signature != self._plan.signature:
+            mismatch = _first_structure_mismatch(
+                self._plan.treedef, self._plan.shapes, base
+            )
+            raise StructureMismatchError(
+                "rebase() base does not match the aggregator's plan"
+                + (f" at leaf {mismatch[0]!r}: {mismatch[1]}" if mismatch else ""),
+                path=mismatch[0] if mismatch else None,
+            )
+        self._base_flat = plan.flatten(base)
+        self._group_base = {
+            name: gp.flatten(base) for name, gp in self._schema.groups
+        }
+        self.base_round = base_round
+
+    def _ensure_acc(self, name: str) -> Any:
+        acc = self._accs.get(name)
+        if acc is None:
+            acc = jnp.zeros(self._schema.group(name).padded_len, jnp.float32)
+            self._accs[name] = acc
+        return acc
+
+    def _check_base_round(
+        self, update_round: Optional[int], client_id: Optional[str]
+    ) -> None:
+        if update_round is not None and update_round != self.base_round:
+            who = f" from client {client_id!r}" if client_id is not None else ""
+            raise ValueError(
+                f"structured update{who} was encoded against base round "
+                f"{update_round}, but the aggregator's base is "
+                f"{'untagged' if self.base_round is None else f'round {self.base_round}'}"
+                " — rebase(new_base, base_round=...) the aggregator onto "
+                "the update's round before folding"
+            )
+
+    def _payload_items(
+        self, params: Any, client_id: Optional[str]
+    ) -> Tuple[List[Tuple[str, Any]], Optional[int]]:
+        """Normalize one client's payload to [(group, payload)] + wire bytes."""
+        from repro.federated.compression import CompressedUpdate, StructuredUpdate
+        if isinstance(params, StructuredUpdate):
+            if params.schema_signature != self._schema.signature:
+                who = (f" from client {client_id!r}"
+                       if client_id is not None else "")
+                raise ValueError(
+                    f"structured update{who} was encoded under schema "
+                    f"{params.schema_signature}, but the aggregator's "
+                    f"schema is {self._schema.signature}"
+                )
+            self._check_base_round(params.base_round, client_id)
+            return list(params.groups), params.wire_bytes
+        # A plain mapping is a {group: payload} dict only when its keys are
+        # all schema group names and its values are wire payloads (compact
+        # vectors / CompressedUpdates) — a model pytree whose top level is
+        # a dict of sub-trees falls through to the full-tree branch.
+        if isinstance(params, Mapping) and params and all(
+            k in self._wsums
+            and not isinstance(v, Mapping)
+            and (isinstance(v, CompressedUpdate)
+                 or np.ndim(v) == 1)
+            for k, v in params.items()
+        ):
+            return list(params.items()), None
+        # A full model pytree: validate structure, slice every group out.
+        mismatch = _first_structure_mismatch(
+            self._plan.treedef, self._plan.shapes, params
+        )
+        if mismatch is not None:
+            _raise_structure_mismatch(mismatch, client_id)
+        return (
+            [(name, gp.flatten(params)) for name, gp in self._schema.groups],
+            None,
+        )
+
+    def add(
+        self,
+        params: Any,
+        weight: float,
+        block: bool = False,
+        wire_bytes: Optional[int] = None,
+        client_id: Optional[str] = None,
+    ) -> None:
+        """Fold one client's (possibly partial) structured update in.
+
+        ``weight`` applies to every group the client shipped; groups the
+        client omitted see neither the update nor the weight."""
+        from repro.federated.compression import CompressedUpdate
+        w = float(weight)
+        if w < 0:
+            raise ValueError("client weight must be non-negative")
+        items, payload_wire = self._payload_items(params, client_id)
+        if not items:
+            raise ValueError("a structured update must carry at least one group")
+        folded_bytes = 0
+        last: Any = None
+        for name, payload in items:
+            if name not in self._wsums:
+                raise ValueError(
+                    f"update carries unknown group {name!r}; the schema's "
+                    f"groups are {list(self._schema.group_names)}"
+                )
+            gp = self._schema.group(name)
+            acc = self._ensure_acc(name)
+            if isinstance(payload, CompressedUpdate):
+                self._check_base_round(payload.base_round, client_id)
+                if payload.total_elems != gp.total_elems:
+                    raise ValueError(
+                        f"group {name!r} update has {payload.total_elems} "
+                        f"elements; the group has {gp.total_elems}"
+                    )
+                interp = (self._engine.interpret
+                          if self._engine is not None else None)
+                self._accs[name] = _fold_compressed_into(
+                    acc, payload, w, gp.padded_len, self._use_pallas(), interp
+                )
+                folded_bytes += payload.dense_bytes
+            else:
+                vec = jnp.asarray(payload, jnp.float32).reshape(-1)
+                if vec.shape[0] != gp.total_elems:
+                    raise ValueError(
+                        f"group {name!r} payload has {vec.shape[0]} "
+                        f"elements; the group has {gp.total_elems}"
+                    )
+                self._accs[name] = _flat_delta_fold(
+                    acc, vec, self._group_base[name], jnp.float32(w)
+                )
+                folded_bytes += gp.total_elems * 4
+            last = self._accs[name]
+            self._wsums[name] += w
+            self._counts[name] += 1
+        if block and last is not None:
+            jax.block_until_ready(last)
+        self.n_clients += 1
+        if self._engine is not None:
+            wire = wire_bytes if wire_bytes is not None else payload_wire
+            self._engine.stats.record(folded_bytes, wire)
+
+    def add_stale(
+        self,
+        params: Any,
+        weight: float,
+        stale_rounds: int,
+        discount: float,
+        block: bool = False,
+        client_id: Optional[str] = None,
+    ) -> float:
+        """Staleness-discounted structured fold (mirrors the dense rule)."""
+        if stale_rounds < 1:
+            raise ValueError("a stale fold must be at least one round late")
+        if not 0.0 <= discount <= 1.0:
+            raise ValueError("staleness discount must be in [0, 1]")
+        w_eff = float(weight) * float(discount) ** int(stale_rounds)
+        self.add(params, w_eff, block=block, client_id=client_id)
+        return w_eff
+
+    def fold_carry(
+        self,
+        buffer: CarryOverBuffer,
+        round_idx: int,
+        discount: float,
+        block: bool = False,
+    ) -> List[Tuple[CarryEntry, float]]:
+        """Drain parked entries with the age discount (dense parity)."""
+        folded: List[Tuple[CarryEntry, float]] = []
+        for entry in buffer.drain():
+            w_eff = self.add_stale(
+                entry.params, entry.weight, entry.age_at(round_idx),
+                discount, block=block, client_id=entry.client_id,
+            )
+            folded.append((entry, w_eff))
+        return folded
+
+    def _use_pallas(self) -> bool:
+        if self._engine is not None:
+            return bool(self._engine.use_pallas)
+        return jax.default_backend() == "tpu"
+
+    # -- hierarchy: per-group partial export / fold --------------------------
+    def export_partial(self, region_id: str = "") -> StructuredPartialSum:
+        """Consume the fold as one :class:`PartialSum` per present group.
+
+        Groups no client contributed to are omitted entirely — absent
+        silos contribute no weight, and the parent must see that."""
+        if self.n_clients == 0:
+            raise ValueError("no clients have been added")
+        groups: List[Tuple[str, PartialSum]] = []
+        for name, gp in self._schema.groups:
+            if self._counts[name] == 0:
+                continue
+            groups.append((name, PartialSum(
+                acc=self._ensure_acc(name),
+                wsum=self._wsums[name],
+                n_clients=self._counts[name],
+                plan_signature=gp.signature,
+                base_round=self.base_round,
+                region_id=region_id,
+            )))
+        partial = StructuredPartialSum(
+            groups=tuple(groups),
+            schema_signature=self._schema.signature,
+            n_clients=self.n_clients,
+            base_round=self.base_round,
+            region_id=region_id,
+        )
+        self._reset()
+        if self._engine is not None:
+            self._engine.stats.n_calls += 1
+        return partial
+
+    def fold_partial(
+        self, partial: StructuredPartialSum, block: bool = False
+    ) -> None:
+        """Fold a regional :class:`StructuredPartialSum` in, per group."""
+        if partial.schema_signature != self._schema.signature:
+            raise StructureMismatchError(
+                f"structured partial from region {partial.region_id!r} was "
+                f"taken under schema {partial.schema_signature}, but this "
+                f"aggregator's schema is {self._schema.signature}",
+                client_id=partial.region_id or None,
+            )
+        if partial.base_round != self.base_round:
+            raise ValueError(
+                f"structured partial from region {partial.region_id!r} was "
+                f"accumulated against base round {partial.base_round}, but "
+                f"the aggregator's base is round {self.base_round}"
+            )
+        if partial.n_clients < 1:
+            raise ValueError("a partial sum must carry at least one client")
+        last: Any = None
+        total_bytes = 0
+        for name, p in partial.groups:
+            if name not in self._wsums:
+                raise ValueError(
+                    f"structured partial carries unknown group {name!r}"
+                )
+            gp = self._schema.group(name)
+            if p.plan_signature != gp.signature:
+                raise StructureMismatchError(
+                    f"group {name!r} partial was taken against plan "
+                    f"{p.plan_signature}, but this aggregator's group plan "
+                    f"is {gp.signature}",
+                    client_id=partial.region_id or None,
+                )
+            if p.wsum < 0:
+                raise ValueError("partial weight total must be non-negative")
+            other = jnp.asarray(p.acc, jnp.float32)
+            acc = self._ensure_acc(name)
+            if other.shape != acc.shape:
+                raise ValueError(
+                    f"group {name!r} partial accumulator has shape "
+                    f"{other.shape}; the parent's is {acc.shape}"
+                )
+            self._accs[name] = _flat_partial_fold(acc, other)
+            last = self._accs[name]
+            self._wsums[name] += float(p.wsum)
+            self._counts[name] += int(p.n_clients)
+            total_bytes += _leaf_nbytes(other)
+        if block and last is not None:
+            jax.block_until_ready(last)
+        self.n_clients += int(partial.n_clients)
+        if self._engine is not None:
+            self._engine.stats.record(total_bytes, total_bytes)
+
+    def result(self) -> Any:
+        """Finalize: scatter per-group numerators into one model-sized
+        vector, normalize each element by its covering groups' weight
+        total, and read out ``base + numerator / wsum`` per element."""
+        if self.n_clients == 0:
+            raise ValueError("no clients have been added")
+        if not any(w > 0 for w in self._wsums.values()):
+            raise ValueError("aggregation weights must sum to a positive value")
+        num = jnp.zeros(self._plan.total_elems, jnp.float32)
+        for name, gp in self._schema.groups:
+            if self._counts[name] == 0:
+                continue
+            acc = self._ensure_acc(name)
+            num = _flat_group_scatter(
+                num, jnp.asarray(gp.offsets), acc[: gp.total_elems]
+            )
+        # Per-element normalizer, built host-side from the per-leaf
+        # coverage map: each leaf's denominator is the sum (schema
+        # order, Python-float accumulation — the dense path's exact
+        # arithmetic) of its covering groups' weight totals, skipping
+        # groups nobody shipped.  Zero-weight elements keep the base.
+        inv_np = np.zeros(self._plan.total_elems, np.float32)
+        off = 0
+        present_wsums = {
+            n: w for n, w in self._wsums.items() if self._counts[n] > 0
+        }
+        for i, size in enumerate(self._plan.sizes):
+            wsum_leaf = 0.0
+            for name in self._schema.leaf_groups[i]:
+                if name in present_wsums:
+                    wsum_leaf += present_wsums[name]
+            if wsum_leaf > 0:
+                inv_np[off:off + size] = np.float32(1.0 / wsum_leaf)
+            off += size
+        vec = _flat_finalize_vec(num, self._base_flat, jnp.asarray(inv_np))
+        out = self._plan.unflatten(vec)
         self._reset()
         if self._engine is not None:
             self._engine.stats.n_calls += 1

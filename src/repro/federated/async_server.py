@@ -80,9 +80,10 @@ import dataclasses
 import heapq
 import math
 import time
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 
 from repro.core.control_plane import StragglerTracker
 from repro.core.events import (
@@ -95,9 +96,24 @@ from repro.core.events import (
     UpdateFolded,
 )
 from repro.core.revocation import RevocationModel, RevocationSampler
-from .agg_engine import AggregationEngine, CarryEntry, CarryOverBuffer
+from .agg_engine import (
+    AgeDiscount,
+    AggregationEngine,
+    CarryEntry,
+    CarryOverBuffer,
+    ResolvedSchema,
+    StalenessPolicy,
+    UpdateSchema,
+    as_update_schema,
+    plan_for,
+)
 from .client import ClientResult
-from .compression import CompressedUpdate, materialize_update
+from .compression import (
+    CompressedUpdate,
+    StructuredUpdate,
+    materialize_structured,
+    materialize_update,
+)
 
 __all__ = [
     "ArrivalSchedule",
@@ -167,7 +183,9 @@ class InstantSchedule(ArrivalSchedule):
     reduce (all inputs available at t=0), which is exactly the sync
     ``FLServer`` hot path."""
 
-    def round_arrivals(self, round_idx, client_ids):
+    def round_arrivals(
+        self, round_idx: int, client_ids: Sequence[str]
+    ) -> Dict[str, ClientArrival]:
         return {cid: ClientArrival(cid, 0.0) for cid in client_ids}
 
 
@@ -182,8 +200,10 @@ class DeterministicSchedule(ArrivalSchedule):
         self.delays = delays
         self.revoke_at = dict(revoke_at or {})
 
-    def round_arrivals(self, round_idx, client_ids):
-        out = {}
+    def round_arrivals(
+        self, round_idx: int, client_ids: Sequence[str]
+    ) -> Dict[str, ClientArrival]:
+        out: Dict[str, ClientArrival] = {}
         for cid in client_ids:
             d = self.delays if isinstance(self.delays, (int, float)) else self.delays[cid]
             out[cid] = ClientArrival(cid, float(d), self.revoke_at.get(cid))
@@ -207,8 +227,6 @@ class HeavyTailSchedule(ArrivalSchedule):
         straggler_prob: float = 0.0,
         seed: int = 0,
     ) -> None:
-        import numpy as np
-
         self.base_s = base_s
         self.sigma = sigma
         self.straggler_ids = frozenset(straggler_ids)
@@ -216,8 +234,10 @@ class HeavyTailSchedule(ArrivalSchedule):
         self.straggler_prob = straggler_prob
         self._rng = np.random.default_rng(seed)
 
-    def round_arrivals(self, round_idx, client_ids):
-        out = {}
+    def round_arrivals(
+        self, round_idx: int, client_ids: Sequence[str]
+    ) -> Dict[str, ClientArrival]:
+        out: Dict[str, ClientArrival] = {}
         for cid in client_ids:
             d = self.base_s * float(self._rng.lognormal(0.0, self.sigma))
             if cid in self.straggler_ids or (
@@ -253,7 +273,9 @@ class RevocationInjector(ArrivalSchedule):
         self._clock = 0.0
         self._next_event = self._sampler.next_event_after(0.0)
 
-    def round_arrivals(self, round_idx, client_ids):
+    def round_arrivals(
+        self, round_idx: int, client_ids: Sequence[str]
+    ) -> Dict[str, ClientArrival]:
         arrivals = dict(self.inner.round_arrivals(round_idx, client_ids))
         horizon = self.horizon_s
         if horizon is None:
@@ -348,7 +370,9 @@ class FixedDeadline(RoundDeadline):
 
     t_round_s: float = math.inf
 
-    def deadline_s(self, round_idx, arrivals):
+    def deadline_s(
+        self, round_idx: int, arrivals: Mapping[str, ClientArrival]
+    ) -> float:
         return self.t_round_s
 
 
@@ -364,9 +388,9 @@ class QuantileDeadline(RoundDeadline):
     q: float = 0.75
     slack: float = 1.0
 
-    def deadline_s(self, round_idx, arrivals):
-        import numpy as np
-
+    def deadline_s(
+        self, round_idx: int, arrivals: Mapping[str, ClientArrival]
+    ) -> float:
         delays = [a.delay_s for a in arrivals.values()]
         if not delays:
             return 0.0
@@ -382,7 +406,9 @@ class CallableDeadline(RoundDeadline):
 
     fn: Any = None
 
-    def deadline_s(self, round_idx, arrivals):
+    def deadline_s(
+        self, round_idx: int, arrivals: Mapping[str, ClientArrival]
+    ) -> float:
         if self.fn is None:
             raise ValueError("CallableDeadline needs a callable fn")
         offsets = {cid: a.delay_s for cid, a in arrivals.items()}
@@ -401,7 +427,9 @@ class CostModelDeadline(RoundDeadline):
     cost_model: Any = None
     frac: float = 1.0
 
-    def deadline_s(self, round_idx, arrivals):
+    def deadline_s(
+        self, round_idx: int, arrivals: Mapping[str, ClientArrival]
+    ) -> float:
         if self.cost_model is None:
             raise ValueError("CostModelDeadline needs a CostModel instance")
         return float(self.cost_model.deadline_from_t_max(self.frac))
@@ -520,6 +548,8 @@ class AsyncRoundEngine:
         carry_discount: float = 0.5,
         escalate_after: int = 2,
         bus: Optional[EventBus] = None,
+        schema: Union[None, UpdateSchema, Mapping[str, Any]] = None,
+        staleness_policy: Optional[StalenessPolicy] = None,
     ) -> None:
         if on_revocation not in ("rerequest", "exclude"):
             raise ValueError("on_revocation must be 'rerequest' or 'exclude'")
@@ -534,12 +564,84 @@ class AsyncRoundEngine:
         self.carry_discount = carry_discount
         self.escalate_after = escalate_after
         self.bus = bus if bus is not None else EventBus()
+        # Structured updates: rounds with a base fold through the
+        # per-group StructuredStreamingAggregator under this schema.
+        self.schema = as_update_schema(schema)
+        self._resolved_schema: Optional[ResolvedSchema] = None
+        # Carried-over weight rule; None keeps the PR-3 age discount
+        # (AgeDiscount(carry_discount) — bit-identical arithmetic).
+        self.staleness_policy = staleness_policy
         # Cross-round state: late updates awaiting their discounted fold,
         # and per-silo consecutive deadline-miss streaks (the same §4.4
         # policy object the simulator's control plane uses — validates
         # escalate_after >= 1).
         self.carry = CarryOverBuffer()
         self.stragglers = StragglerTracker(escalate_after)
+
+    # ------------------------------------------------------------------
+    def _resolve_schema(self, base_params: Any) -> Optional[ResolvedSchema]:
+        if self.schema is None or base_params is None:
+            return None
+        plan = plan_for(base_params)
+        if (self._resolved_schema is None
+                or self._resolved_schema.plan.signature != plan.signature):
+            self._resolved_schema = self.schema.resolve(base_params)
+        return self._resolved_schema
+
+    def _park_delta_norm(
+        self, park_params: Any, base_params: Any
+    ) -> Optional[float]:
+        """||update - base||_2 at park time (drift-aware staleness input).
+
+        Measured against whatever base the fold ran with; None when the
+        round had no base (nothing to measure against) or the policy in
+        use never reads drift."""
+        policy = self.staleness_policy
+        if base_params is None or policy is None or not policy.uses_drift:
+            return None
+        return float(self._distance_to_base(park_params, base_params))
+
+    def _distance_to_base(self, params: Any, base_params: Any) -> float:
+        """L2 distance between an update (full tree or per-group raw
+        vectors) and the given global weights."""
+        if isinstance(params, Mapping) and self.schema is not None:
+            resolved = self._resolve_schema(base_params)
+            if resolved is not None and all(
+                k in dict(resolved.groups) for k in params
+            ):
+                total = 0.0
+                for name, vec in params.items():
+                    g = np.asarray(
+                        resolved.group(name).flatten(base_params), np.float32
+                    )
+                    d = np.asarray(vec, np.float32) - g
+                    total += float(np.dot(d, d))
+                return math.sqrt(total)
+        plan = plan_for(base_params)
+        d_full = (np.asarray(plan.flatten(params), np.float32)
+                  - np.asarray(plan.flatten(base_params), np.float32))
+        return float(np.linalg.norm(d_full))
+
+    def _carry_multiplier(
+        self, entry: CarryEntry, round_idx: int, base_params: Any
+    ) -> float:
+        """The staleness multiplier for one parked entry.
+
+        Default (no policy): the PR-3 age rule, same arithmetic as
+        ``add_stale`` — ``discount ** age``.  A drift-aware policy also
+        sees how far the CURRENT base sits from the parked update,
+        relative to the update's own step size at park time."""
+        policy: StalenessPolicy = (
+            self.staleness_policy
+            if self.staleness_policy is not None
+            else AgeDiscount(self.carry_discount)
+        )
+        drift: Optional[float] = None
+        if (policy.uses_drift and base_params is not None
+                and entry.origin_delta_norm is not None):
+            cur = self._distance_to_base(entry.params, base_params)
+            drift = cur / max(float(entry.origin_delta_norm), 1e-12)
+        return policy.effective_multiplier(entry, round_idx, drift=drift)
 
     # ------------------------------------------------------------------
     def fold_round(
@@ -621,6 +723,7 @@ class AsyncRoundEngine:
         agg = self.agg_engine.streaming(
             base=base_params,
             base_round=round_idx if base_params is not None else None,
+            schema=self.schema if base_params is not None else None,
         )
         events: List[FoldEvent] = []
         excluded: List[str] = []
@@ -636,10 +739,9 @@ class AsyncRoundEngine:
         # staleness discount.
         for entry in self.carry.drain():
             t0 = time.monotonic()
-            w_eff = agg.add_stale(
-                entry.params, entry.weight, entry.age_at(round_idx),
-                self.carry_discount, block=True, client_id=entry.client_id,
-            )
+            mult = self._carry_multiplier(entry, round_idx, base_params)
+            w_eff = float(entry.weight) * mult
+            agg.add(entry.params, w_eff, block=True, client_id=entry.client_id)
             measured = time.monotonic() - t0
             cost = self.fold_cost_s if self.fold_cost_s is not None else measured
             start = server_free
@@ -698,10 +800,19 @@ class AsyncRoundEngine:
                     # the next round's aggregator has a different one.
                     # Materialize now, while the origin base is on hand.
                     park_params = materialize_update(base_params, park_params)
+                elif isinstance(park_params, StructuredUpdate):
+                    # Same base-pinning applies per group: materialize to
+                    # {group: raw fp32 values} before parking.
+                    park_params = materialize_structured(
+                        base_params, park_params,
+                        self._resolve_schema(base_params),
+                    )
                 self.carry.defer(
                     CarryEntry(cid, park_params, float(res.n_samples),
                                origin_round=round_idx,
-                               late_by_s=arrival - t_close)
+                               late_by_s=arrival - t_close,
+                               origin_delta_norm=self._park_delta_norm(
+                                   park_params, base_params))
                 )
                 carried_over.append(cid)
                 streak = self.stragglers.record_miss(cid)
@@ -744,7 +855,11 @@ class AsyncRoundEngine:
         if emit_partial:
             params = None
             partial = agg.export_partial()
-            jax.block_until_ready(partial.acc)
+            if hasattr(partial, "acc"):
+                jax.block_until_ready(partial.acc)
+            else:  # StructuredPartialSum: one accumulator per group
+                for _, gpart in partial.groups:
+                    jax.block_until_ready(gpart.acc)
         else:
             params = agg.result()
             jax.block_until_ready(params)
@@ -882,8 +997,8 @@ class AsyncFLServer(FLServer):
 
     def __init__(
         self,
-        clients,
-        initial_params,
+        clients: Sequence[Any],
+        initial_params: Any,
         schedule: Optional[ArrivalSchedule] = None,
         on_revocation: str = "rerequest",
         recovery_delay_s: float = 0.0,
@@ -894,7 +1009,9 @@ class AsyncFLServer(FLServer):
         escalate_after: int = 2,
         on_straggler: Optional[Any] = None,
         compression: Optional[Any] = None,
-        **kwargs,
+        schema: Union[None, UpdateSchema, Mapping[str, Any]] = None,
+        staleness_policy: Optional[StalenessPolicy] = None,
+        **kwargs: Any,
     ) -> None:
         from .compression import ClientCompressor, parse_compression
 
@@ -908,6 +1025,13 @@ class AsyncFLServer(FLServer):
         # encoding, producing bit-identical updates for parity.
         self._compression = parse_compression(compression)
         self._compressors: Dict[str, ClientCompressor] = {}
+        # `schema` turns on structured updates: each client's update is
+        # re-encoded as a StructuredUpdate carrying only the schema's
+        # named groups (per-group error feedback when compression is
+        # also on), folded through the per-group masked aggregator.
+        self._schema = as_update_schema(schema)
+        self._staleness_policy = staleness_policy
+        self._struct_encoders: Dict[str, Any] = {}
         self._round_engine = AsyncRoundEngine(
             self.agg_engine,
             on_revocation=on_revocation,
@@ -918,6 +1042,8 @@ class AsyncFLServer(FLServer):
             carry_discount=carry_discount,
             escalate_after=escalate_after,
             bus=self.bus,
+            schema=self._schema,
+            staleness_policy=staleness_policy,
         )
         self.on_straggler = on_straggler
         self.fold_reports: List[FoldReport] = []
@@ -942,9 +1068,34 @@ class AsyncFLServer(FLServer):
             client_id, ClientCompressor(self._compression)
         )
 
+    def _structured_encoder_for(self, client_id: str) -> Any:
+        """Per-client structured encoder (holds per-group error feedback)."""
+        from .compression import StructuredCompressor
+
+        enc = self._struct_encoders.get(client_id)
+        if enc is None:
+            enc = StructuredCompressor(self._schema, self._compression)
+            self._struct_encoders[client_id] = enc
+        return enc
+
     def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]) -> FoldReport:
         base = None
-        if self._compression is not None:
+        if self._schema is not None:
+            # Structured rounds: clients ship only the schema's named
+            # groups.  self.params is still the dispatched global weights
+            # (updated only after the fold), so it is both the encoding
+            # base and the aggregation base.
+            base = self.params
+            results = [
+                dataclasses.replace(
+                    r,
+                    params=self._structured_encoder_for(r.client_id).encode(
+                        base, r.params, base_round=round_idx
+                    ),
+                )
+                for r in results
+            ]
+        elif self._compression is not None:
             # self.params is still the round's dispatched global weights
             # here (updated only after the fold), so it is both the delta
             # base for encoding and the aggregation base for folding.

@@ -31,7 +31,7 @@ the fused Pallas dequantize-and-fold kernel (``dequant_fold``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import msgpack
 import numpy as np
@@ -256,8 +256,9 @@ def materialize_update(base: Any, update: CompressedUpdate) -> Any:
 # Wire form: one msgpack blob per update, embedded as a frame payload
 # ---------------------------------------------------------------------------
 
-def serialize_update(update: CompressedUpdate) -> bytes:
-    """msgpack wire form of a compressed update (a c_msg_train payload)."""
+def _update_obj(update: CompressedUpdate) -> Dict[str, Any]:
+    """The msgpack-able dict form of one compressed update (shared by the
+    whole-model frame and each group of a structured frame)."""
     obj: Dict[str, Any] = {
         "v": _WIRE_VERSION,
         "codec": update.codec,
@@ -270,7 +271,12 @@ def serialize_update(update: CompressedUpdate) -> bytes:
         obj["idx"] = np.ascontiguousarray(update.indices, np.int32).tobytes()
     if update.base_round is not None:
         obj["br"] = int(update.base_round)
-    packed = msgpack.packb(obj, use_bin_type=True)
+    return obj
+
+
+def serialize_update(update: CompressedUpdate) -> bytes:
+    """msgpack wire form of a compressed update (a c_msg_train payload)."""
+    packed = msgpack.packb(_update_obj(update), use_bin_type=True)
     assert isinstance(packed, bytes)
     return packed
 
@@ -291,6 +297,11 @@ def deserialize_update(payload: bytes) -> CompressedUpdate:
         ) from exc
     if not isinstance(obj, dict):
         raise DeserializationError("compressed update frame is not a map")
+    return _decode_update_obj(obj)
+
+
+def _decode_update_obj(obj: Dict[str, Any]) -> CompressedUpdate:
+    """Validate + decode one update obj (see :func:`_update_obj`)."""
     if obj.get("v") != _WIRE_VERSION:
         raise DeserializationError(
             f"unsupported compressed update version {obj.get('v')!r}"
@@ -370,6 +381,174 @@ def compressed_wire_bytes(total_elems: int, spec: CompressionSpec) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Structured updates: named parameter groups on the wire
+# ---------------------------------------------------------------------------
+
+# A group's wire payload is either raw fp32 *values* (an np.ndarray — the
+# group's current parameters, used when the group needs no codec) or a
+# CompressedUpdate *delta* against the group's slice of the round base.
+GroupPayload = Union[np.ndarray, CompressedUpdate]
+
+
+@dataclasses.dataclass(frozen=True)
+class StructuredUpdate:
+    """One client's structured ``c_msg_train``: named per-group payloads.
+
+    Only the groups the client trained ride the wire — a federated-LoRA
+    client ships just its ``adapters`` group, orders of magnitude fewer
+    bytes than the dense model.  ``schema_signature`` pins the exact
+    (model structure x group partition) the payloads were encoded under;
+    the structured aggregator refuses a fold under any other schema.
+    ``base_round`` tags the round whose global weights compressed group
+    deltas were taken against (raw-value groups are base-independent).
+    """
+
+    groups: Tuple[Tuple[str, GroupPayload], ...]
+    schema_signature: str
+    base_round: Optional[int] = None
+
+    @property
+    def wire_bytes(self) -> int:
+        """Serialized frame size (what actually crosses the transport)."""
+        return len(serialize_structured(self))
+
+    @property
+    def dense_bytes(self) -> int:
+        """Dense fp32 equivalent of the *shipped* groups only."""
+        return sum(self.group_dense_bytes().values())
+
+    def group_wire_bytes(self) -> Dict[str, int]:
+        """Per-group serialized payload sizes (RoundMessageLog accounting)."""
+        out: Dict[str, int] = {}
+        for name, payload in self.groups:
+            packed = msgpack.packb(_group_obj(payload), use_bin_type=True)
+            assert isinstance(packed, bytes)
+            out[name] = len(packed)
+        return out
+
+    def group_dense_bytes(self) -> Dict[str, int]:
+        """Per-group dense fp32 equivalents."""
+        return {
+            name: (payload.dense_bytes
+                   if isinstance(payload, CompressedUpdate)
+                   else int(np.asarray(payload).size) * 4)
+            for name, payload in self.groups
+        }
+
+    def group_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.groups)
+
+
+def _group_obj(payload: GroupPayload) -> Dict[str, Any]:
+    if isinstance(payload, CompressedUpdate):
+        return _update_obj(payload)
+    vec = np.ascontiguousarray(np.asarray(payload, np.float32).reshape(-1))
+    return {"raw": vec.tobytes(), "n": int(vec.size)}
+
+
+def serialize_structured(update: StructuredUpdate) -> bytes:
+    """msgpack wire form of a structured update (a c_msg_train payload)."""
+    obj: Dict[str, Any] = {
+        "v": _WIRE_VERSION,
+        "structured": 1,
+        "sig": update.schema_signature,
+        "groups": [[name, _group_obj(p)] for name, p in update.groups],
+    }
+    if update.base_round is not None:
+        obj["br"] = int(update.base_round)
+    packed = msgpack.packb(obj, use_bin_type=True)
+    assert isinstance(packed, bytes)
+    return packed
+
+
+def deserialize_structured(payload: bytes) -> StructuredUpdate:
+    """Decode a structured c_msg_train payload (typed errors, like
+    :func:`deserialize_update`, so §4.3 re-request recovery applies)."""
+    try:
+        obj = msgpack.unpackb(payload, raw=False)
+    except Exception as exc:
+        raise DeserializationError(
+            f"malformed structured update frame: {exc}"
+        ) from exc
+    if not isinstance(obj, dict) or obj.get("structured") != 1:
+        raise DeserializationError("not a structured update frame")
+    if obj.get("v") != _WIRE_VERSION:
+        raise DeserializationError(
+            f"unsupported structured update version {obj.get('v')!r}"
+        )
+    sig = obj.get("sig")
+    if not isinstance(sig, str) or not sig:
+        raise DeserializationError("structured update frame has no schema tag")
+    base_round = obj.get("br")
+    if base_round is not None and not isinstance(base_round, int):
+        raise DeserializationError(
+            f"bad base round tag {base_round!r} in structured frame"
+        )
+    raw_groups = obj.get("groups")
+    if not isinstance(raw_groups, list) or not raw_groups:
+        raise DeserializationError("structured update frame has no groups")
+    groups: List[Tuple[str, GroupPayload]] = []
+    for entry in raw_groups:
+        if (not isinstance(entry, (list, tuple)) or len(entry) != 2
+                or not isinstance(entry[0], str)
+                or not isinstance(entry[1], dict)):
+            raise DeserializationError(
+                "structured update group entry is not [name, payload]"
+            )
+        name, sub = entry
+        if "raw" in sub:
+            raw = sub.get("raw")
+            n = sub.get("n")
+            if not isinstance(raw, (bytes, bytearray)):
+                raise DeserializationError(
+                    f"group {name!r} raw payload is not bytes"
+                )
+            if not isinstance(n, int) or n <= 0 or len(raw) != 4 * n:
+                raise DeserializationError(
+                    f"group {name!r} raw payload length {len(raw)} != 4 * {n!r}"
+                )
+            groups.append((name, np.frombuffer(raw, dtype=np.float32)))
+        else:
+            groups.append((name, _decode_update_obj(sub)))
+    return StructuredUpdate(
+        groups=tuple(groups), schema_signature=sig, base_round=base_round
+    )
+
+
+def materialize_structured(
+    base: Any, update: StructuredUpdate, schema: Any
+) -> Dict[str, np.ndarray]:
+    """Base-independent raw-values form of a structured update.
+
+    The structured analogue of :func:`materialize_update` for carry-over
+    parking: compressed group deltas only mean something against their
+    origin round's base, so a parked update is pinned to per-group raw
+    *values* while that base is still on hand.  Returns a plain
+    ``{group: fp32 vector}`` mapping the structured aggregator folds in
+    any later round."""
+    resolved = schema if hasattr(schema, "plan") else schema.resolve(base)
+    if update.schema_signature != resolved.signature:
+        raise ValueError(
+            f"structured update was encoded under schema "
+            f"{update.schema_signature}, not {resolved.signature}"
+        )
+    out: Dict[str, np.ndarray] = {}
+    for name, payload in update.groups:
+        gp = resolved.group(name)
+        if isinstance(payload, CompressedUpdate):
+            if payload.total_elems != gp.total_elems:
+                raise ValueError(
+                    f"group {name!r} update has {payload.total_elems} "
+                    f"elements; the group has {gp.total_elems}"
+                )
+            g = np.asarray(gp.flatten(base), dtype=np.float32)
+            out[name] = g + decompress(payload)
+        else:
+            out[name] = np.asarray(payload, dtype=np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Client-side encoder with error feedback
 # ---------------------------------------------------------------------------
 
@@ -419,3 +598,70 @@ class ClientCompressor:
 
     def reset(self) -> None:
         self._residual = None
+
+
+class StructuredCompressor:
+    """Per-client structured encoder: one payload per schema group.
+
+    Without a codec each group ships its raw fp32 *values* (already a
+    huge win when the schema selects a small group like LoRA adapters);
+    with a :class:`CompressionSpec` each group's *delta* against the
+    round base is compressed independently, with an independent
+    error-feedback residual per group (a group the client skips a round
+    keeps its residual — nothing is dropped).
+
+    The schema is resolved lazily against the first round's global
+    weights and the resolution cached by plan signature, so repeated
+    rounds over the same structure pay nothing.
+    """
+
+    def __init__(self, schema: Any, spec: Union[None, str, CompressionSpec] = None) -> None:
+        from repro.federated.agg_engine import as_update_schema
+
+        self.schema = as_update_schema(schema)
+        if self.schema is None:
+            raise ValueError("StructuredCompressor needs a schema")
+        self.spec = parse_compression(spec)
+        self._resolved: Any = None
+        self._residuals: Dict[str, np.ndarray] = {}
+
+    def _resolve(self, params: Any) -> Any:
+        from repro.federated.agg_engine import plan_for
+
+        plan = plan_for(params)
+        if self._resolved is None or self._resolved.plan.signature != plan.signature:
+            assert self.schema is not None
+            self._resolved = self.schema.resolve(params)
+        return self._resolved
+
+    def encode(
+        self,
+        global_params: Any,
+        local_params: Any,
+        base_round: Optional[int] = None,
+    ) -> StructuredUpdate:
+        """Encode the groups of this round's update (all schema groups)."""
+        resolved = self._resolve(global_params)
+        groups: List[Tuple[str, GroupPayload]] = []
+        for name, gp in resolved.groups:
+            p = np.asarray(gp.flatten(local_params), dtype=np.float32)
+            if self.spec is None:
+                groups.append((name, p))
+                continue
+            g = np.asarray(gp.flatten(global_params), dtype=np.float32)
+            delta = p - g
+            residual = self._residuals.get(name)
+            if self.spec.error_feedback and residual is not None:
+                delta = delta + residual
+            update = compress(delta, self.spec, base_round=base_round)
+            if self.spec.error_feedback:
+                self._residuals[name] = delta - decompress(update)
+            groups.append((name, update))
+        return StructuredUpdate(
+            groups=tuple(groups),
+            schema_signature=resolved.signature,
+            base_round=base_round if self.spec is not None else None,
+        )
+
+    def reset(self) -> None:
+        self._residuals = {}

@@ -67,6 +67,8 @@ from .agg_engine import (
     CarryEntry,
     PartialSum,
     StreamingAggregator,
+    StructuredPartialSum,
+    as_update_schema,
 )
 from .async_server import (
     ArrivalSchedule,
@@ -360,10 +362,16 @@ class HierarchyCoordinator:
         sharded: bool = False,
         mesh: Optional[Any] = None,
         bus: Optional[EventBus] = None,
+        schema: Optional[Any] = None,
+        staleness_policy: Optional[Any] = None,
     ) -> None:
         if not region_map:
             raise ValueError("a hierarchy needs at least one region")
         self.agg_engine = agg_engine if agg_engine is not None else AggregationEngine()
+        # Structured updates: every regional engine folds the schema's
+        # named groups and exports a StructuredPartialSum; the parent
+        # folds those per group under the same schema.
+        self.schema = as_update_schema(schema)
         self.sampler = sampler
         self.bus = bus if bus is not None else EventBus()
         self.sharded = sharded
@@ -383,6 +391,8 @@ class HierarchyCoordinator:
                 carry_discount=carry_discount,
                 escalate_after=escalate_after,
                 bus=NULL_BUS,
+                schema=self.schema,
+                staleness_policy=staleness_policy,
             )
             region = RegionalAggregator(str(rid), cids, engine)
             self._regions[region.region_id] = region
@@ -438,29 +448,34 @@ class HierarchyCoordinator:
         ps = list(partials)
         if not ps:
             raise ValueError("no partial sums to fold")
-        agg = self.agg_engine.streaming(base=base_params, base_round=round_idx)
+        agg = self.agg_engine.streaming(
+            base=base_params, base_round=round_idx, schema=self.schema
+        )
         if self._folder is not None and len(ps) > 1:
-            head = ps[0]
-            for p in ps[1:]:
-                if p.plan_signature != head.plan_signature:
-                    raise ValueError(
-                        f"partial sums disagree on the model structure: "
-                        f"region {p.region_id!r} vs {head.region_id!r}"
-                    )
-                if p.base_round != head.base_round:
-                    raise ValueError(
-                        f"partial sums disagree on the base round: region "
-                        f"{p.region_id!r} has {p.base_round}, region "
-                        f"{head.region_id!r} has {head.base_round}"
-                    )
-            combined = PartialSum(
-                acc=self._folder.reduce([p.acc for p in ps]),
-                wsum=sum(p.wsum for p in ps),
-                n_clients=sum(p.n_clients for p in ps),
-                plan_signature=head.plan_signature,
-                base_round=head.base_round,
-                region_id="<sharded>",
-            )
+            if self.schema is not None:
+                combined = self._combine_structured_sharded(ps)
+            else:
+                head = ps[0]
+                for p in ps[1:]:
+                    if p.plan_signature != head.plan_signature:
+                        raise ValueError(
+                            f"partial sums disagree on the model structure: "
+                            f"region {p.region_id!r} vs {head.region_id!r}"
+                        )
+                    if p.base_round != head.base_round:
+                        raise ValueError(
+                            f"partial sums disagree on the base round: region "
+                            f"{p.region_id!r} has {p.base_round}, region "
+                            f"{head.region_id!r} has {head.base_round}"
+                        )
+                combined = PartialSum(
+                    acc=self._folder.reduce([p.acc for p in ps]),
+                    wsum=sum(p.wsum for p in ps),
+                    n_clients=sum(p.n_clients for p in ps),
+                    plan_signature=head.plan_signature,
+                    base_round=head.base_round,
+                    region_id="<sharded>",
+                )
             agg.fold_partial(combined, block=True)
         else:
             for p in ps:
@@ -471,6 +486,63 @@ class HierarchyCoordinator:
                               p.n_clients, p.wsum, base_round=p.base_round)
             )
         return agg.result()
+
+    def _combine_structured_sharded(
+        self, ps: Sequence[StructuredPartialSum]
+    ) -> StructuredPartialSum:
+        """Group-wise psum reduce of structured regional partials.
+
+        Each group's accumulators are stacked and reduced over the pod
+        axis independently (regions omitting a group contribute nothing
+        to it); the combined partial carries the union of groups with
+        per-group weight/count totals."""
+        assert self._folder is not None
+        head = ps[0]
+        for p in ps[1:]:
+            if p.schema_signature != head.schema_signature:
+                raise ValueError(
+                    f"structured partials disagree on the schema: region "
+                    f"{p.region_id!r} vs {head.region_id!r}"
+                )
+            if p.base_round != head.base_round:
+                raise ValueError(
+                    f"structured partials disagree on the base round: "
+                    f"region {p.region_id!r} has {p.base_round}, region "
+                    f"{head.region_id!r} has {head.base_round}"
+                )
+        by_group: Dict[str, List[PartialSum]] = {}
+        order: List[str] = []
+        for p in ps:
+            for name, gpart in p.groups:
+                if name not in by_group:
+                    by_group[name] = []
+                    order.append(name)
+                by_group[name].append(gpart)
+        groups: List[Tuple[str, PartialSum]] = []
+        for name in order:
+            parts = by_group[name]
+            sig = parts[0].plan_signature
+            for gp in parts[1:]:
+                if gp.plan_signature != sig:
+                    raise ValueError(
+                        f"group {name!r} partials disagree on the group "
+                        f"plan signature"
+                    )
+            groups.append((name, PartialSum(
+                acc=self._folder.reduce([gp.acc for gp in parts]),
+                wsum=sum(gp.wsum for gp in parts),
+                n_clients=sum(gp.n_clients for gp in parts),
+                plan_signature=sig,
+                base_round=head.base_round,
+                region_id="<sharded>",
+            )))
+        return StructuredPartialSum(
+            groups=tuple(groups),
+            schema_signature=head.schema_signature,
+            n_clients=sum(p.n_clients for p in ps),
+            base_round=head.base_round,
+            region_id="<sharded>",
+        )
 
     def fold_round(
         self,
@@ -635,6 +707,8 @@ class HierarchicalFLServer(AsyncFLServer):
             sharded=sharded,
             mesh=mesh,
             bus=self.bus,
+            schema=self._schema,
+            staleness_policy=self._staleness_policy,
         )
 
     @property
@@ -665,7 +739,17 @@ class HierarchicalFLServer(AsyncFLServer):
         # compose only against a shared base), so the round's dispatched
         # globals are the base whether or not the wire is compressed.
         base = self.params
-        if self._compression is not None:
+        if self._schema is not None:
+            results = [
+                dataclasses.replace(
+                    r,
+                    params=self._structured_encoder_for(r.client_id).encode(
+                        base, r.params, base_round=round_idx
+                    ),
+                )
+                for r in results
+            ]
+        elif self._compression is not None:
             results = [
                 dataclasses.replace(
                     r,

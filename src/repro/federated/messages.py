@@ -38,6 +38,12 @@ class RoundMessageLog:
     # fp32 size the same update would have cost uncompressed.
     codec: str = "none"
     c_msg_train_dense_bytes: Optional[int] = None
+    # Structured-update accounting: per-group wire and dense fp32 bytes
+    # of the c_msg_train leg when clients ship named parameter groups
+    # (None = unstructured round).  The sum of group_wire_bytes is the
+    # structured frame's payload, so per-group ratios are first-class.
+    group_wire_bytes: Optional[Dict[str, int]] = None
+    group_dense_bytes: Optional[Dict[str, int]] = None
 
     def total_bytes(self, n_clients: int) -> int:
         """Bytes on the wire for a full round with n_clients."""
@@ -69,6 +75,7 @@ def measure_messages(
     params: Any,
     metrics_example: Dict[str, float],
     compression: Union[None, str, "CompressionSpec"] = None,
+    schema: Any = None,
 ) -> RoundMessageLog:
     """Measure real serialized sizes for one round's message set.
 
@@ -78,13 +85,38 @@ def measure_messages(
     ``compression`` the ``c_msg_train`` leg is the compressed frame size
     (exact: compressed frames are fixed-width given the element count),
     and the dense fp32 equivalent is reported alongside; the server->
-    client legs always ship dense weights."""
+    client legs always ship dense weights.
+
+    With a ``schema`` (an :class:`~repro.federated.agg_engine.UpdateSchema`
+    or a group mapping) the ``c_msg_train`` leg is a *structured* frame:
+    only the named groups ride the wire, per-group byte maps fill
+    ``group_wire_bytes``/``group_dense_bytes``, and the dense-equivalent
+    stays the FULL model's fp32 size — the compression ratio then states
+    what shipping groups instead of the whole pytree actually saved
+    (e.g. the >= 50x of adapter-only federated LoRA)."""
     weight_bytes = len(serialize_pytree(params))
     metric_bytes = len(serialize_metrics(metrics_example))
     c_train_bytes = weight_bytes
     codec = "none"
     dense: Optional[int] = None
-    if compression is not None:
+    group_wire: Optional[Dict[str, int]] = None
+    group_dense: Optional[Dict[str, int]] = None
+    if schema is not None:
+        from repro.federated.agg_engine import plan_for
+        from repro.federated.compression import (
+            StructuredCompressor,
+            serialize_structured,
+        )
+
+        comp = StructuredCompressor(schema, compression)
+        update = comp.encode(params, params, base_round=0)
+        c_train_bytes = len(serialize_structured(update))
+        group_wire = update.group_wire_bytes()
+        group_dense = update.group_dense_bytes()
+        dense = plan_for(params).total_elems * 4
+        codec = ("structured" if comp.spec is None
+                 else f"structured:{comp.spec.codec}")
+    elif compression is not None:
         from repro.federated.agg_engine import plan_for
         from repro.federated.compression import (
             compressed_wire_bytes,
@@ -104,6 +136,8 @@ def measure_messages(
         c_msg_test_bytes=metric_bytes,
         codec=codec,
         c_msg_train_dense_bytes=dense,
+        group_wire_bytes=group_wire,
+        group_dense_bytes=group_dense,
     )
 
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, TYPE_CHECKING
 
 import jax
 
@@ -40,6 +40,9 @@ from .agg_engine import AggregationEngine
 from .aggregation import aggregate_metrics
 from .client import ClientResult, EvalResult, FLClient
 from .messages import RoundMessageLog, measure_messages
+
+if TYPE_CHECKING:
+    from .async_server import AsyncRoundEngine, FoldReport
 
 
 @dataclasses.dataclass
@@ -90,6 +93,7 @@ class FLServer:
         measure_round_messages: bool = False,
         agg_engine: Optional[AggregationEngine] = None,
         bus: Optional[EventBus] = None,
+        post_round_hook: Optional[Callable[[int, Any], Optional[Any]]] = None,
     ) -> None:
         self.clients = list(clients)
         self.params = initial_params
@@ -99,7 +103,14 @@ class FLServer:
         self.fault_hook = fault_hook
         self.measure_round_messages = measure_round_messages
         self.start_round = 1
-        self._round_engine = None  # lazily built (see _fold_phase)
+        # Server-side post-aggregation transform, called as
+        # hook(round_idx, params) right after the fold; a non-None return
+        # replaces the global weights before evaluation/checkpointing.
+        # The adapter-FL use: periodically merge LoRA factors into the
+        # frozen base (models.fl_models.merge_hook).
+        self.post_round_hook = post_round_hook
+        # lazily built (see _fold_phase)
+        self._round_engine: Optional["AsyncRoundEngine"] = None
         # Control-plane bus: the round engine publishes fold-level events
         # on the round's virtual clock; the server publishes lifecycle
         # events (dispatch, checkpoints, recovery) on the wall clock
@@ -147,6 +158,11 @@ class FLServer:
         fold = self._fold_phase(round_idx, results)
         self.params = fold.params
         jax.block_until_ready(self.params)
+        if self.post_round_hook is not None:
+            merged = self.post_round_hook(round_idx, self.params)
+            if merged is not None:
+                self.params = merged
+                jax.block_until_ready(self.params)
         agg_time = time.monotonic() - t_agg
         train_time = time.monotonic() - t0
 
@@ -170,12 +186,10 @@ class FLServer:
                 saved_client = True
         client_ckpt_time = time.monotonic() - t2
         t3 = time.monotonic()
-        saved_server = (
-            self.server_ckpt is not None
-            and self.server_ckpt.should_checkpoint(round_idx)
-        )
-        if saved_server:
+        saved_server = False
+        if self.server_ckpt is not None and self.server_ckpt.should_checkpoint(round_idx):
             self.server_ckpt.save(round_idx, self.params)
+            saved_server = True
         server_ckpt_time = time.monotonic() - t3
         ckpt_time = client_ckpt_time + server_ckpt_time
         if saved_client:
@@ -192,10 +206,12 @@ class FLServer:
         log = None
         if self.measure_round_messages:
             # AsyncFLServer sets _compression when the wire path is
-            # compressed; the log then carries wire vs dense c_msg_train.
+            # compressed and _schema when updates are structured; the log
+            # then carries wire vs dense c_msg_train (and per-group maps).
             log = measure_messages(
                 self.params, metrics,
                 compression=getattr(self, "_compression", None),
+                schema=getattr(self, "_schema", None),
             )
         return RoundRecord(
             round_idx=round_idx,
@@ -215,7 +231,9 @@ class FLServer:
         )
 
     # ------------------------------------------------------------------
-    def _fold_phase(self, round_idx: int, results: Sequence[ClientResult]):
+    def _fold_phase(
+        self, round_idx: int, results: Sequence[ClientResult]
+    ) -> "FoldReport":
         """Aggregate one round's c_msg_train set.
 
         The barrier protocol is the degenerate (all-messages-at-dispatch)
@@ -255,6 +273,7 @@ class FLServer:
             )
             return "none"
         if source == "server":
+            assert self.server_ckpt is not None  # resolve_freshest contract
             _, self.params = self.server_ckpt.restore(self.params, info)
         else:
             cid = source.split(":", 1)[1]

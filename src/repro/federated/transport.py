@@ -526,6 +526,7 @@ def run_client_worker(
     connect_timeout_s: float = 10.0,
     reconnect: Optional[ReconnectPolicy] = None,
     compression: Optional[Any] = None,
+    schema: Optional[Any] = None,
 ) -> None:
     """Blocking worker loop: one real ``FLClient`` behind a socket.
 
@@ -555,6 +556,14 @@ def run_client_worker(
     dies with the worker: a restarted or replaced VM re-encodes from a
     zero residual (slightly more compression error on its next update,
     never a correctness problem).
+
+    ``schema`` (an :class:`~repro.federated.agg_engine.UpdateSchema` or
+    group mapping) switches the reply to a *structured* frame carrying
+    only the schema's named parameter groups — per-group compressed
+    deltas when ``compression`` is also set, raw fp32 group values
+    otherwise.  The header gains ``structured``/``group_bytes``/
+    ``group_dense`` so the driver's per-group byte accounting is
+    measured at the sender.
     """
     sock = _connect_with_backoff(
         address, connect_timeout_s, reconnect, str(client.client_id)
@@ -562,7 +571,15 @@ def run_client_worker(
     if sock is None:
         return
     compressor = None
-    if compression is not None:
+    struct_encoder = None
+    if schema is not None:
+        from .compression import StructuredCompressor
+
+        # Structured replies subsume plain compression: the encoder
+        # applies the codec (when any) per group, with per-group error
+        # feedback scoped to this worker.
+        struct_encoder = StructuredCompressor(schema, compression)
+    elif compression is not None:
         from .compression import ClientCompressor, parse_compression
 
         spec = parse_compression(compression)
@@ -612,7 +629,30 @@ def run_client_worker(
                         "n_samples": int(result.n_samples),
                         "train_time_s": float(result.train_time_s),
                     }
-                    if compressor is not None:
+                    if struct_encoder is not None:
+                        from .agg_engine import plan_for
+                        from .compression import serialize_structured
+
+                        supdate = struct_encoder.encode(
+                            params, result.params, base_round=round_idx
+                        )
+                        header_out["structured"] = 1
+                        # Dense equivalent = the FULL model's fp32 bytes:
+                        # the savings being reported is "groups instead
+                        # of the whole pytree", codec included.
+                        header_out["dense_bytes"] = int(
+                            plan_for(params).total_elems * 4
+                        )
+                        header_out["group_bytes"] = {
+                            str(k): int(v)
+                            for k, v in supdate.group_wire_bytes().items()
+                        }
+                        header_out["group_dense"] = {
+                            str(k): int(v)
+                            for k, v in supdate.group_dense_bytes().items()
+                        }
+                        body = serialize_structured(supdate)
+                    elif compressor is not None:
                         from .compression import serialize_update
 
                         update = compressor.encode(params, result.params)
@@ -728,6 +768,7 @@ class ThreadWorkerPool:
         template_params: Any,
         reconnect: Optional[ReconnectPolicy] = None,
         compression: Optional[Any] = None,
+        schema: Optional[Any] = None,
     ) -> None:
         self._clients: Dict[str, Any] = {
             str(c.client_id): c for c in clients
@@ -737,6 +778,7 @@ class ThreadWorkerPool:
         self._template = template_params
         self._reconnect = reconnect
         self._compression = compression
+        self._schema = schema
         self._threads: Dict[str, threading.Thread] = {}
         self._hosts: Dict[str, str] = {}
 
@@ -756,6 +798,7 @@ class ThreadWorkerPool:
             kwargs={
                 "reconnect": self._reconnect,
                 "compression": self._compression,
+                "schema": self._schema,
             },
             name=name,
             daemon=True,
@@ -799,11 +842,12 @@ def _process_worker_entry(
     address: Tuple[str, int],
     reconnect: Optional[ReconnectPolicy] = None,
     compression: Optional[Any] = None,
+    schema: Optional[Any] = None,
 ) -> None:
     """Spawn entry: build the client in the child, then serve."""
     run_client_worker(
         factory(), template_np, address,
-        reconnect=reconnect, compression=compression,
+        reconnect=reconnect, compression=compression, schema=schema,
     )
 
 
@@ -823,14 +867,18 @@ class ProcessWorkerPool:
         template_params: Any,
         reconnect: Optional[ReconnectPolicy] = None,
         compression: Optional[Any] = None,
+        schema: Optional[Any] = None,
     ) -> None:
         self._factories: Dict[str, Callable[[], Any]] = dict(client_factories)
         # Numpy-ify so the template pickles without device buffers.
         self._template_np = jax.tree.map(np.asarray, template_params)
         self._reconnect = reconnect
         # CompressionSpec is a plain frozen dataclass — pickles into the
-        # spawned child with the rest of the worker args.
+        # spawned child with the rest of the worker args.  Schemas with
+        # string/sequence selectors (or a dict of them) pickle the same
+        # way; callable selectors must be module-level to spawn.
         self._compression = compression
+        self._schema = schema
         self._ctx = multiprocessing.get_context("spawn")
         self._procs: Dict[str, Any] = {}
         self._hosts: Dict[str, str] = {}
@@ -853,6 +901,7 @@ class ProcessWorkerPool:
                 address,
                 self._reconnect,
                 self._compression,
+                self._schema,
             ),
             name=name,
             daemon=True,
@@ -932,6 +981,10 @@ class _TrainOutcome:
     timed_out: bool = False  # silent past reply_timeout_s (§4.4 evidence)
     payload_bytes: int = 0
     dense_bytes: int = 0     # dense fp32 equivalent of a compressed reply
+    # Structured replies: per-group wire / dense fp32 bytes as measured
+    # at the sender (None on unstructured rounds).
+    group_bytes: Optional[Dict[str, int]] = None
+    group_dense: Optional[Dict[str, int]] = None
 
     def to_arrival(self, client_id: str) -> ClientArrival:
         if self.failed:
@@ -1027,6 +1080,8 @@ class LiveRoundDriver:
         cost_model: Optional[Any] = None,
         measure_round_messages: bool = True,
         compression: Optional[Any] = None,
+        schema: Optional[Any] = None,
+        staleness_policy: Optional[Any] = None,
     ) -> None:
         if heartbeat_interval_s is not None and heartbeat_interval_s <= 0.0:
             raise ValueError("heartbeat_interval_s must be > 0 (or None)")
@@ -1064,8 +1119,13 @@ class LiveRoundDriver:
         # The workers do the encoding (the pool must be built with the
         # same spec); the driver's copy drives decode + the delta-mode
         # fold + wire-vs-dense accounting in the round message logs.
+        from .agg_engine import as_update_schema
         from .compression import parse_compression
         self.compression = parse_compression(compression)
+        # Structured rounds: the pool's workers ship only the schema's
+        # named groups; the driver folds them through the per-group
+        # masked aggregator and logs per-group wire/dense bytes.
+        self.schema = as_update_schema(schema)
         self._on_revocation = on_revocation
         self._max_rerequests = max_rerequests
         self._engine = AsyncRoundEngine(
@@ -1077,6 +1137,8 @@ class LiveRoundDriver:
             carry_discount=carry_discount,
             escalate_after=escalate_after,
             bus=self.bus,
+            schema=self.schema,
+            staleness_policy=staleness_policy,
         )
         self.fold_reports: List[FoldReport] = []
         self.message_logs: List[RoundMessageLog] = []
@@ -1218,7 +1280,11 @@ class LiveRoundDriver:
         )
         fold = self._engine.fold_round(
             round_idx, results, schedule,
-            base_params=self.params if self.compression is not None else None,
+            base_params=(
+                self.params
+                if (self.compression is not None or self.schema is not None)
+                else None
+            ),
         )
         self.fold_reports.append(fold)
         self.params = fold.params
@@ -1347,6 +1413,27 @@ class LiveRoundDriver:
                  if o.dense_bytes > 0),
                 default=0,
             )
+            # Per-group byte maps (structured rounds): merged over the
+            # round's replies by max, like the scalar fields — the log
+            # records a representative (worst-case) per-silo frame.
+            group_wire: Optional[Dict[str, int]] = None
+            group_dense: Optional[Dict[str, int]] = None
+            for o in outcomes.values():
+                if o.group_bytes:
+                    group_wire = group_wire or {}
+                    for k, v in o.group_bytes.items():
+                        group_wire[k] = max(group_wire.get(k, 0), int(v))
+                if o.group_dense:
+                    group_dense = group_dense or {}
+                    for k, v in o.group_dense.items():
+                        group_dense[k] = max(group_dense.get(k, 0), int(v))
+            if self.schema is not None:
+                codec = ("structured" if self.compression is None
+                         else f"structured:{self.compression.codec}")
+            elif self.compression is not None:
+                codec = self.compression.codec
+            else:
+                codec = "none"
             log = RoundMessageLog(
                 s_msg_train_bytes=len(s_train_payload),
                 c_msg_train_bytes=c_train_bytes,
@@ -1354,11 +1441,10 @@ class LiveRoundDriver:
                 c_msg_test_bytes=max(
                     c_test_bytes, default=len(serialize_metrics(metrics))
                 ),
-                codec=(
-                    self.compression.codec
-                    if self.compression is not None else "none"
-                ),
+                codec=codec,
                 c_msg_train_dense_bytes=dense_train or None,
+                group_wire_bytes=group_wire,
+                group_dense_bytes=group_dense,
             )
             self.message_logs.append(log)
             if self.cost_model is not None:
@@ -1658,7 +1744,11 @@ class LiveRoundDriver:
                         # header; a frame corrupted in either encoding
                         # raises the same DeserializationError, so the
                         # §4.3 re-request recovery below is shared.
-                        if ev.header.get("codec") is not None:
+                        if ev.header.get("structured"):
+                            from .compression import deserialize_structured
+
+                            params = deserialize_structured(ev.payload)
+                        elif ev.header.get("codec") is not None:
                             from .compression import deserialize_update
 
                             params = deserialize_update(ev.payload)
@@ -1700,6 +1790,12 @@ class LiveRoundDriver:
                     o.train_time_s = float(ev.header.get("train_time_s", 0.0))
                     o.payload_bytes = len(ev.payload)
                     o.dense_bytes = int(ev.header.get("dense_bytes", 0))
+                    gb = ev.header.get("group_bytes")
+                    if isinstance(gb, Mapping):
+                        o.group_bytes = {str(k): int(v) for k, v in gb.items()}
+                    gd = ev.header.get("group_dense")
+                    if isinstance(gd, Mapping):
+                        o.group_dense = {str(k): int(v) for k, v in gd.items()}
                     pending.discard(cid)
         return outcomes
 

@@ -1,4 +1,22 @@
-"""Model zoo: six architecture families behind one `ModelFamily` API."""
+"""Model zoo: six architecture families behind one `ModelFamily` API,
+plus the federated-LoRA adapter helpers (`inject_lora` and friends)."""
 from .api import ModelFamily, get_model
+from .fl_models import (
+    LoRAConfig,
+    inject_lora,
+    lora_adapter_schema,
+    lora_effective,
+    lora_merge_hook,
+    merge_lora,
+)
 
-__all__ = ["ModelFamily", "get_model"]
+__all__ = [
+    "LoRAConfig",
+    "ModelFamily",
+    "get_model",
+    "inject_lora",
+    "lora_adapter_schema",
+    "lora_effective",
+    "lora_merge_hook",
+    "merge_lora",
+]

@@ -100,3 +100,52 @@ def make_optimizer(name: str, learning_rate: float, state_dtype: str = "float32"
     if name == "sgdm":
         return SGDMomentum(learning_rate=learning_rate, state_dtype=state_dtype, **kw)
     raise ValueError(f"unknown optimizer {name!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedOptimizer:
+    """Freeze every leaf the selector does not match.
+
+    Wraps any optimizer with the AdamW/SGDM ``init``/``update`` shape.
+    Masked-out leaves get zero gradients AND are restored verbatim
+    after the inner update — necessary because AdamW weight-decays
+    every parameter it sees, which would silently train "frozen"
+    leaves.  The adapter-FL use: ``masked(AdamW(...), ".lora_")``
+    trains only injected LoRA factors.
+
+    ``trainable`` is a substring matched against each leaf's path
+    (``jax.tree_util.keystr`` form, e.g. ``"['fc0']['w.lora_a']"``) or
+    a callable ``path_str -> bool``."""
+
+    inner: Any
+    trainable: Any
+
+    def _mask(self, params: Any) -> Any:
+        sel = self.trainable
+        if callable(sel):
+            match = sel
+        else:
+            needle = str(sel)
+            match = lambda path: needle in path  # noqa: E731
+        return jax.tree_util.tree_map_with_path(
+            lambda path, _: bool(match(jax.tree_util.keystr(path))), params
+        )
+
+    def init(self, params: Any) -> Any:
+        return self.inner.init(params)
+
+    def update(self, grads: Any, state: Any, params: Any) -> Tuple[Any, Any]:
+        mask = self._mask(params)
+        masked_grads = jax.tree.map(
+            lambda g, m: g if m else jnp.zeros_like(g), grads, mask
+        )
+        new_params, new_state = self.inner.update(masked_grads, state, params)
+        new_params = jax.tree.map(
+            lambda np_, p, m: np_ if m else p, new_params, params, mask
+        )
+        return new_params, new_state
+
+
+def masked(inner: Any, trainable: Any) -> MaskedOptimizer:
+    """``MaskedOptimizer`` shorthand: ``masked(AdamW(...), ".lora_")``."""
+    return MaskedOptimizer(inner=inner, trainable=trainable)
